@@ -1,0 +1,82 @@
+"""Shared benchmark harness: run an offload session to steady state and
+report per-inference metrics (latency, energy, RPCs, GPU utilization)."""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.offload import OffloadableModel, OffloadSession
+
+SYSTEMS = ("device_only", "nnto", "cricket", "rrto")
+
+
+@dataclasses.dataclass
+class SteadyMetrics:
+    system: str
+    environment: str
+    latency_s: float
+    joules: float
+    watts: float
+    rpcs: int
+    gpu_util: float
+    network_bytes: float
+    mode: str
+
+
+def run_steady(
+    model: OffloadableModel,
+    system: str,
+    environment: str,
+    *,
+    n_infer: int = 8,
+    steady_tail: int = 3,
+    execute: bool = False,
+    min_repeats: int = 3,
+    **session_kwargs,
+) -> SteadyMetrics:
+    sess = OffloadSession(
+        model, system, environment=environment, execute=execute,
+        min_repeats=min_repeats, **session_kwargs,
+    )
+    sess.load()
+    results = [sess.infer(*model.example_inputs) for _ in range(n_infer)]
+    tail = results[-steady_tail:]
+    lat = float(np.mean([r.wall_seconds for r in tail]))
+    joules = float(np.mean([r.joules for r in tail]))
+    util = float(
+        np.mean([r.server_busy_seconds / max(r.wall_seconds, 1e-12) for r in tail])
+    )
+    return SteadyMetrics(
+        system=system,
+        environment=environment,
+        latency_s=lat,
+        joules=joules,
+        watts=joules / max(lat, 1e-12),
+        rpcs=int(tail[-1].rpcs),
+        gpu_util=util,
+        network_bytes=float(np.mean([r.network_bytes for r in tail])),
+        mode=tail[-1].mode,
+    )
+
+
+def compare_table(rows: List[SteadyMetrics]) -> str:
+    out = [
+        f"{'system':12s} {'env':8s} {'latency_ms':>10s} {'J/inf':>8s} "
+        f"{'watts':>7s} {'RPCs':>6s} {'GPUutil':>8s}"
+    ]
+    for r in rows:
+        out.append(
+            f"{r.system:12s} {r.environment:8s} {r.latency_s*1e3:10.1f} "
+            f"{r.joules:8.4f} {r.watts:7.2f} {r.rpcs:6d} {r.gpu_util:8.3f}"
+        )
+    return "\n".join(out)
+
+
+def reduction(a: float, b: float) -> float:
+    """% reduction of a relative to b."""
+    return 100.0 * (1.0 - a / b) if b > 0 else 0.0

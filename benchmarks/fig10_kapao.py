@@ -1,0 +1,45 @@
+"""Fig. 10 — KAPAO people-tracking: latency + energy per inference for
+Device-only / NNTO / Cricket / RRTO, indoors and outdoors.
+
+Paper validation targets (Sec. V-A):
+  RRTO vs Cricket:      -95 % latency indoors (-94 % outdoors), -94 % energy
+  RRTO vs Device-only:  -72 % latency indoors (-69 % outdoors), -85 % energy
+  RRTO ~ NNTO.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SYSTEMS, compare_table, reduction, run_steady
+
+
+def run(n_infer: int = 8, input_size: int = 640):
+    from repro.models.cnn_zoo import make_kapao_calibrated
+
+    model = make_kapao_calibrated(scale=1.0, input_size=input_size)
+    rows = []
+    for env in ("indoor", "outdoor"):
+        for system in SYSTEMS:
+            rows.append(run_steady(model, system, env, n_infer=n_infer))
+
+    by = {(r.system, r.environment): r for r in rows}
+    checks = {}
+    for env, lat_target, dev_target in (("indoor", 95.0, 72.0), ("outdoor", 94.0, 69.0)):
+        rr, cr, dv = by[("rrto", env)], by[("cricket", env)], by[("device_only", env)]
+        checks[f"{env}_latency_vs_cricket_pct"] = reduction(rr.latency_s, cr.latency_s)
+        checks[f"{env}_latency_vs_device_pct"] = reduction(rr.latency_s, dv.latency_s)
+        checks[f"{env}_energy_vs_cricket_pct"] = reduction(rr.joules, cr.joules)
+        checks[f"{env}_energy_vs_device_pct"] = reduction(rr.joules, dv.joules)
+        checks[f"{env}_rrto_over_nnto"] = rr.latency_s / by[("nnto", env)].latency_s
+    return rows, checks
+
+
+def main():
+    rows, checks = run()
+    print(compare_table(rows))
+    print()
+    for k, v in checks.items():
+        print(f"  {k}: {v:.1f}")
+    return rows, checks
+
+
+if __name__ == "__main__":
+    main()

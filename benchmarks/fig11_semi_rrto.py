@@ -1,0 +1,38 @@
+"""Fig. 11 — semi-RRTO ablation: caching only the device-query RPCs
+(cudaGetDevice/cudaGetLastError) removes 90.6 % of calls but NOT the
+per-kernel launches, so semi-RRTO lands near device-only speed while full
+RRTO reaches NNTO speed (the paper's argument for why caching alone is not
+enough)."""
+from __future__ import annotations
+
+from benchmarks.common import compare_table, run_steady
+
+
+def run(input_size: int = 640):
+    from repro.models.cnn_zoo import make_kapao_calibrated
+
+    model = make_kapao_calibrated(scale=1.0, input_size=input_size)
+    rows = [
+        run_steady(model, system, "indoor", n_infer=8)
+        for system in ("device_only", "nnto", "cricket", "semi_rrto", "rrto")
+    ]
+    return rows
+
+
+def main():
+    rows = run()
+    print(compare_table(rows))
+    by = {r.system: r for r in rows}
+    print(
+        f"\n  semi-RRTO / device-only latency: "
+        f"{by['semi_rrto'].latency_s / by['device_only'].latency_s:.2f} "
+        f"(paper: ~1, caching alone only reaches local-compute speed)"
+    )
+    print(
+        f"  RRTO / NNTO latency: {by['rrto'].latency_s / by['nnto'].latency_s:.2f}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 12 — the torchvision zoo across systems x environments:
+ResNet50 / ConvNeXt-T (classification), FCN-R50 / DeepLabv3-R50
+(segmentation), Faster-RCNN-R50 / RetinaNet-R50 (detection)."""
+from __future__ import annotations
+
+from benchmarks.common import SYSTEMS, reduction, run_steady
+
+MODELS = [
+    ("resnet50", 224),
+    ("convnext_tiny", 224),
+    ("fcn_resnet50", 384),
+    ("deeplabv3_resnet50", 384),
+    ("fasterrcnn_resnet50", 384),
+    ("retinanet_resnet50", 384),
+]
+
+
+def run(n_infer: int = 7, environments=("indoor", "outdoor")):
+    from repro.models.cnn_zoo import ZOO
+
+    table = {}
+    for name, size in MODELS:
+        model = ZOO[name](scale=1.0, input_size=size)
+        for env in environments:
+            for system in SYSTEMS:
+                m = run_steady(model, system, env, n_infer=n_infer)
+                table[(name, env, system)] = m
+    return table
+
+
+def main():
+    table = run()
+    print(f"{'model':22s} {'env':8s} " + "".join(f"{s:>14s}" for s in SYSTEMS) + "   (latency ms)")
+    for name, _ in MODELS:
+        for env in ("indoor", "outdoor"):
+            lat = [table[(name, env, s)].latency_s * 1e3 for s in SYSTEMS]
+            print(f"{name:22s} {env:8s} " + "".join(f"{v:14.1f}" for v in lat))
+    print()
+    print(f"{'model':22s} {'RRTO vs Cricket':>16s} {'RRTO vs device':>16s}  (latency reduction %, indoor)")
+    for name, _ in MODELS:
+        rr = table[(name, "indoor", "rrto")].latency_s
+        cr = table[(name, "indoor", "cricket")].latency_s
+        dv = table[(name, "indoor", "device_only")].latency_s
+        print(f"{name:22s} {reduction(rr, cr):16.1f} {reduction(rr, dv):16.1f}")
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fig. 1 — device-only VGG16 latency/standby across device classes: all
+exceed the 30 ms video-fluency threshold, motivating offloading."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.costmodel import DeviceSpec
+from repro.core.energy import PowerModel
+
+DEVICE_CLASSES = {
+    "jetson_xavier_nx": DeviceSpec("jetson_xavier_nx", 0.9e12, 51.2e9, 9e-6, 0.45),
+    "jetson_nano": DeviceSpec("jetson_nano", 0.24e12, 25.6e9, 12e-6, 0.40),
+    "raspberry_pi4": DeviceSpec("raspberry_pi4", 0.014e12, 4.0e9, 20e-6, 0.50),
+    "smartphone_soc": DeviceSpec("smartphone_soc", 0.5e12, 34e9, 15e-6, 0.35),
+}
+
+
+def run(input_size: int = 224):
+    import jax
+
+    from repro.core.costmodel import jaxpr_bytes, jaxpr_flops
+    from repro.core.flatten import flatten_closed_jaxpr
+    from repro.models.cnn_zoo import make_vgg16
+
+    m = make_vgg16(scale=1.0, input_size=input_size)
+    flat = flatten_closed_jaxpr(
+        jax.make_jaxpr(lambda *i: m.apply(m.params, *i))(*m.example_inputs)
+    )
+    fl, by, n = jaxpr_flops(flat), jaxpr_bytes(flat), len(flat.eqns)
+
+    rows = {}
+    pm = PowerModel()
+    for name, dev in DEVICE_CLASSES.items():
+        t = dev.sequence_time(fl, by, n, 1.0)
+        # standby fraction under continuous 1 Hz inference on a 21.6 Wh pack
+        j_per_inf = pm.inference_w * t
+        idle_j = pm.standby_w * max(0.0, 1.0 - t)
+        hours = 21.6 * 3600 / (j_per_inf + idle_j) / 3600
+        standby_hours = 21.6 * 3600 / pm.standby_w / 3600
+        rows[name] = {
+            "latency_ms": t * 1e3,
+            "battery_hours_at_1hz": hours,
+            "standby_fraction": hours / standby_hours,
+        }
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'device':18s} {'latency_ms':>11s} {'batt_h@1Hz':>11s} {'vs standby':>11s}")
+    for name, d in rows.items():
+        over = "  > 30ms threshold" if d["latency_ms"] > 30 else ""
+        print(f"{name:18s} {d['latency_ms']:11.1f} {d['battery_hours_at_1hz']:11.2f} "
+              f"{d['standby_fraction']*100:10.0f}%{over}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

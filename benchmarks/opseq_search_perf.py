@@ -1,0 +1,88 @@
+"""Operator Sequence Search performance: identification time vs trace length,
+and the pruning effectiveness of the three-level strategy (candidate markers
+-> FastCheck -> FullCheck) against the naive maximum-repeated-subsequence
+baseline the paper argues against (Sec. III-B2)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.opseq import (
+    fast_check,
+    naive_max_repeated_subsequence,
+    operator_sequence_search,
+)
+from repro.core.records import (
+    FUNC_D2H,
+    FUNC_GET_DEVICE,
+    FUNC_H2D,
+    FUNC_SYNC,
+    OperatorRecord,
+    category_trace,
+)
+
+
+def synth_log(seq_kernels: int, n_repeats: int, noise_prefix: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    logs = []
+    # loading noise: parameter uploads
+    for i in range(noise_prefix):
+        logs.append(
+            OperatorRecord(FUNC_H2D, (1000 + i, 64), out_buffers=(1000 + i,))
+        )
+    seq = [OperatorRecord(FUNC_H2D, (1, 64), out_buffers=(1,))]
+    prev = 1
+    for k in range(seq_kernels):
+        logs_addr = 2 + k
+        seq.append(OperatorRecord(FUNC_GET_DEVICE, ()))
+        seq.append(
+            OperatorRecord(
+                f"kernel:op{k % 37}",
+                (k, prev, logs_addr),
+                in_buffers=(prev,),
+                out_buffers=(logs_addr,),
+            )
+        )
+        prev = logs_addr
+    seq.append(OperatorRecord(FUNC_D2H, (prev, 64), in_buffers=(prev,)))
+    seq.append(OperatorRecord(FUNC_SYNC, ()))
+    logs.extend(seq * n_repeats)
+    return logs, len(seq)
+
+
+def run():
+    rows = []
+    for seq_kernels, repeats in [(60, 4), (250, 4), (1000, 4), (2500, 4)]:
+        logs, seq_len = synth_log(seq_kernels, repeats, noise_prefix=500)
+        t0 = time.perf_counter()
+        ios = operator_sequence_search(logs, 3)
+        dt = time.perf_counter() - t0
+        assert ios is not None and len(ios) == seq_len, (seq_len, ios and len(ios))
+        t1 = time.perf_counter()
+        if len(logs) <= 6000:
+            naive_max_repeated_subsequence(logs, 3)
+            naive_dt = time.perf_counter() - t1
+        else:
+            naive_dt = float("nan")
+        rows.append(
+            {
+                "trace_len": len(logs),
+                "seq_len": seq_len,
+                "search_ms": dt * 1e3,
+                "naive_ms": naive_dt * 1e3,
+            }
+        )
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'trace_len':>10s} {'seq_len':>8s} {'3-level ms':>11s} {'naive ms':>10s}")
+    for r in rows:
+        print(f"{r['trace_len']:10d} {r['seq_len']:8d} {r['search_ms']:11.2f} {r['naive_ms']:10.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

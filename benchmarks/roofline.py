@@ -1,0 +1,159 @@
+"""§Roofline — three-term roofline per (arch x shape x mesh) from the
+multi-pod dry-run artifacts (results/dryrun/*.json).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        (197 TF bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
+    collective term = collective_bytes_per_device / ICI_bw      (45 GB/s eff)
+
+FLOPs/bytes/collective-bytes come from the trip-count-weighted HLO analysis
+(launch/hlo_analysis.py) — XLA's cost_analysis() counts scan bodies once and
+is recorded alongside for reference.  MODEL_FLOPS uses 6·N_active·D for
+training and 2·N_active·D for inference shapes.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, "src")
+
+PEAK_FLOPS = 197e12        # v5e bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 45e9              # effective bytes/s per chip for collectives
+
+RESULTS_GLOB = "results/dryrun/*.json"
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> Optional[float]:
+    from repro.configs import CONFIGS, SHAPES
+    from repro.models.registry import active_param_count, effective_lengths
+
+    cfg = CONFIGS[arch]
+    shape = SHAPES[shape_name]
+    n_active = active_param_count(cfg)
+    eff = effective_lengths(cfg, shape)
+    if shape.kind == "train":
+        tokens = shape.global_batch * eff["seq"]
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * eff["seq"]
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def bottleneck_advice(dom: str, arch: str, shape: str) -> str:
+    if dom == "compute":
+        return "compute-bound: raise MXU efficiency (bf16 everywhere, larger fused matmuls), cut remat recompute"
+    if dom == "memory":
+        return "HBM-bound: fuse elementwise chains, shrink KV/activation dtypes, increase arithmetic intensity per pass"
+    return "collective-bound: reshard to cut all-gathers (keep activations sharded), overlap collectives with compute, compress gradients"
+
+
+def load_rows(include_variants: bool = False) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(RESULTS_GLOB)):
+        name = os.path.basename(f)[:-5]
+        is_variant = len(name.split("__")) > 3
+        if is_variant and not include_variants:
+            continue
+        d = json.load(open(f))
+        if is_variant:
+            d = dict(d)
+            d["variant"] = name.split("__")[3]
+        if d.get("status") != "ok":
+            if d.get("status") == "skipped":
+                rows.append(
+                    {
+                        "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+                        "status": "skipped", "reason": d.get("reason", ""),
+                    }
+                )
+            continue
+        w = d["hlo_weighted"]
+        n_dev = d["n_devices"]
+        t_comp = w["flops"] / PEAK_FLOPS
+        t_mem = w["hbm_bytes"] / HBM_BW
+        t_coll = w["collective_bytes"] / ICI_BW
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        mf = model_flops_per_device(d["arch"], d["shape"], n_dev)
+        useful = mf / w["flops"] if w["flops"] > 0 else 0.0
+        # roofline fraction: useful model compute vs the step's bound time
+        frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+        rows.append(
+            {
+                "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+                "variant": d.get("variant", ""),
+                "status": "ok",
+                "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+                "dominant": dom,
+                "model_flops_per_dev": mf,
+                "hlo_flops_per_dev": w["flops"],
+                "useful_ratio": useful,
+                "roofline_fraction": frac,
+                "temp_bytes_per_dev": d["memory_analysis"].get("temp_size_in_bytes"),
+                "advice": bottleneck_advice(dom, d["arch"], d["shape"]),
+            }
+        )
+    return rows
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant | MODEL/HLO | roofline frac | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | skipped | — | — | — |"
+            )
+            continue
+        tmp = r["temp_bytes_per_dev"]
+        out.append(
+            "| {arch} | {shape} | {mesh} | {t_compute_s:.3e} | {t_memory_s:.3e} | "
+            "{t_collective_s:.3e} | {dominant} | {useful_ratio:.2f} | "
+            "{roofline_fraction:.3f} | {tmp} |".format(
+                tmp=f"{tmp/1e9:.1f}" if tmp else "?", **r
+            )
+        )
+    return "\n".join(out)
+
+
+def main():
+    rows = load_rows()
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    md = to_markdown(rows)
+    with open("results/roofline.md", "w") as f:
+        f.write(md + "\n")
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"{len(ok)} cells analyzed, {len(rows)-len(ok)} skipped")
+    by_dom = {}
+    for r in ok:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    print("dominant-term distribution:", by_dom)
+    worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:5]
+    print("\nworst roofline fractions (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r['arch']:28s} {r['shape']:12s} {r['mesh']:6s} "
+              f"frac={r['roofline_fraction']:.4f} dom={r['dominant']}")
+    most_coll = sorted(
+        ok, key=lambda r: -(r["t_collective_s"] / max(r["t_compute_s"] + r["t_memory_s"], 1e-12))
+    )[:5]
+    print("\nmost collective-bound:")
+    for r in most_coll:
+        print(f"  {r['arch']:28s} {r['shape']:12s} {r['mesh']:6s} "
+              f"coll/(comp+mem)={r['t_collective_s']/max(r['t_compute_s']+r['t_memory_s'],1e-12):.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

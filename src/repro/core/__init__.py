@@ -1,0 +1,21 @@
+"""RRTO core: record/replay transparent offloading for model inference."""
+from repro.core.records import InferenceSequence, OperatorRecord
+from repro.core.opseq import (
+    operator_sequence_search,
+    fast_check,
+    full_check,
+    check_data_dependency,
+)
+from repro.core.offload import OffloadSession, OffloadableModel, SYSTEMS
+
+__all__ = [
+    "InferenceSequence",
+    "OperatorRecord",
+    "operator_sequence_search",
+    "fast_check",
+    "full_check",
+    "check_data_dependency",
+    "OffloadSession",
+    "OffloadableModel",
+    "SYSTEMS",
+]

@@ -1,0 +1,147 @@
+"""Analytic per-operator cost model: FLOPs + HBM bytes per jaxpr equation,
+and device throughput specs for the simulated client (Jetson-class) and
+server (discrete-GPU-class) devices.
+
+Used by the offload simulator for latency accounting (Cricket per-op launches
+vs RRTO one-shot replay) and by benchmarks to reproduce the paper's
+device-only baselines.  The TPU roofline in §Roofline does NOT use this file —
+it reads XLA's own ``cost_analysis()`` from the compiled dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import reduce
+from operator import mul
+from typing import Any, Tuple
+
+import numpy as np
+
+
+def _size(shape) -> int:
+    return int(reduce(mul, shape, 1))
+
+
+def _bytes_of(aval) -> int:
+    return _size(aval.shape) * aval.dtype.itemsize
+
+
+def eqn_flops(eqn) -> float:
+    """FLOPs estimate for one jaxpr equation (matmul/conv get exact counts,
+    everything else is elementwise ~1 flop/output element)."""
+    prim = eqn.primitive.name
+    out_avals = [v.aval for v in eqn.outvars]
+    in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+    out_elems = sum(_size(a.shape) for a in out_avals)
+
+    if prim == "dot_general":
+        dnums = eqn.params["dimension_numbers"]
+        (lc, rc), (lb, rb) = dnums
+        lhs = in_avals[0]
+        contract = _size([lhs.shape[i] for i in lc])
+        return 2.0 * out_elems * contract
+    if prim == "conv_general_dilated":
+        lhs, rhs = in_avals[0], in_avals[1]
+        dn = eqn.params["dimension_numbers"]
+        # kernel spatial+input-channel product = per-output-element MACs
+        rhs_shape = rhs.shape
+        k_elems = _size(rhs_shape)
+        out_ch = rhs_shape[dn.rhs_spec[0]]
+        per_out = k_elems / max(out_ch, 1)
+        return 2.0 * out_elems * per_out
+    if prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                "argmax", "argmin", "reduce_and", "reduce_or"):
+        return float(sum(_size(a.shape) for a in in_avals))
+    if prim in ("exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                "sin", "cos", "pow", "integer_pow", "cbrt", "erf_inv"):
+        return 4.0 * out_elems  # transcendental cost factor
+    if prim == "scan":
+        length = eqn.params.get("length", 1)
+        inner = eqn.params["jaxpr"]
+        return float(length) * jaxpr_flops(inner.jaxpr)
+    if prim in ("pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
+                "custom_vjp_call_jaxpr", "remat", "checkpoint"):
+        inner = eqn.params.get("jaxpr")
+        if inner is not None:
+            return jaxpr_flops(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+        return float(out_elems)
+    return float(out_elems)
+
+
+def eqn_bytes(eqn) -> float:
+    """HBM traffic estimate: read all inputs + write all outputs once."""
+    total = 0
+    for v in eqn.invars:
+        if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+            total += _bytes_of(v.aval)
+    for v in eqn.outvars:
+        total += _bytes_of(v.aval)
+    return float(total)
+
+
+def jaxpr_flops(jaxpr) -> float:
+    return sum(eqn_flops(e) for e in jaxpr.eqns)
+
+
+def jaxpr_bytes(jaxpr) -> float:
+    return sum(eqn_bytes(e) for e in jaxpr.eqns)
+
+
+# ---------------------------------------------------------------------------
+# device specs (simulated endpoints of the MEC link)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    peak_flops: float              # achievable peak (already derated)
+    mem_bw: float                  # bytes/s
+    kernel_launch_s: float         # per-kernel dispatch overhead
+    efficiency: float = 1.0        # additional utilization derate
+
+    def op_time(self, flops: float, mem_bytes: float) -> float:
+        """Roofline max of compute and memory time for one kernel."""
+        eff = self.peak_flops * self.efficiency
+        return max(flops / eff, mem_bytes / self.mem_bw)
+
+    def sequence_time(
+        self, total_flops: float, total_bytes: float, num_kernels: int,
+        fusion_factor: float = 1.0,
+    ) -> float:
+        """Time for a kernel sequence. ``fusion_factor`` < 1 models XLA fusing
+        the replayed graph (fewer HBM round-trips than per-op dispatch)."""
+        eff = self.peak_flops * self.efficiency
+        compute = total_flops / eff
+        memory = (total_bytes * fusion_factor) / self.mem_bw
+        return max(compute, memory) + num_kernels * self.kernel_launch_s
+
+
+# Jetson Xavier NX: 21 TOPS int8 marketing, ~1.1 fp16 TFLOP/s usable on Volta
+# iGPU; derated for the 10 W envelope used on the robot.
+JETSON_XAVIER_NX = DeviceSpec(
+    name="jetson_xavier_nx",
+    peak_flops=0.9e12,
+    mem_bw=51.2e9,          # LPDDR4x 59.7 GB/s peak, derated
+    kernel_launch_s=9e-6,
+    efficiency=0.45,
+)
+
+# GTX 2080 Ti class server: 13.4 fp32 TFLOP/s, 616 GB/s GDDR6.
+GTX_2080TI = DeviceSpec(
+    name="gtx_2080ti",
+    peak_flops=13.4e12,
+    mem_bw=616e9,
+    kernel_launch_s=4e-6,
+    efficiency=0.45,
+)
+
+# TPU v5e (the production target of the framework; used by §Roofline consts)
+TPU_V5E = DeviceSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,      # bf16
+    mem_bw=819e9,
+    kernel_launch_s=1e-6,
+    efficiency=1.0,
+)
+
+DEVICES = {d.name: d for d in (JETSON_XAVIER_NX, GTX_2080TI, TPU_V5E)}

@@ -1,0 +1,416 @@
+"""RRTO client/server engines — Alg. 3 (RRTO_on_Client) + Alg. 4
+(RRTO_on_Server), driven by a simulated clock, network and energy meter.
+
+The client is a call sink for :class:`JaxprInterceptor`.  In the recording
+phase it behaves exactly like a traditional transparent offloader (one RPC per
+intercepted call) while logging records and running the Operator Sequence
+Search after every DtoH.  Once the inference operator sequence (IOS) is
+identified, it switches to the replaying phase: intermediate operators are
+answered locally from recorded results, only the HtoD input upload and the
+DtoH output download cross the network, and the server executes the whole
+sequence one-shot as a compiled XLA executable (replay-as-compilation — the
+TPU-native analogue of the paper's server-side kernel replay).
+
+Deviation from the IOS (a Dynamic Activation Model changing its op stream) is
+detected record-by-record; the client ships the locally-answered prefix to the
+server for catch-up execution and falls back to the recording phase
+(Sec. III-B1 fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.costmodel import DeviceSpec
+from repro.core.energy import (
+    STATE_COMM,
+    STATE_CONTROL,
+    STATE_STANDBY,
+    EnergyMeter,
+)
+from repro.core.intercept import InterceptedCall
+from repro.core.netsim import NetworkModel
+from repro.core.opseq import operator_sequence_search
+from repro.core.records import (
+    CAT_D2H,
+    CAT_H2D,
+    CAT_KERNEL,
+    FUNC_D2H,
+    FUNC_H2D,
+    InferenceSequence,
+    OperatorRecord,
+)
+
+MODE_RECORDING = "recording"
+MODE_REPLAYING = "replaying"
+
+# fused-executable advantage of replay-as-compilation over per-op dispatch
+REPLAY_FUSION_FACTOR = 0.6
+REPLAY_KERNELS_PER_FUSION = 6
+PER_LOCAL_OP_S = 2e-7  # answering an intercepted call from the local cache
+
+
+class SimClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError(f"time went backwards: {dt}")
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# server (Alg. 4)
+# ---------------------------------------------------------------------------
+
+class OffloadServer:
+    """GPU-server side: executes RPCs in recording mode, compiles + replays
+    the IOS in replaying mode.  ``env`` is device memory (addr -> array)."""
+
+    def __init__(self, device: DeviceSpec, *, execute: bool = True):
+        self.device = device
+        self.execute = execute  # False: account time/bytes only (no compute)
+        self.env: Dict[int, Any] = {}
+        self.busy_until = 0.0          # async kernel-queue completion time
+        self.busy_seconds = 0.0        # accumulated compute (GPU-util proxy)
+        self._replay_fn = None
+        self._replay_meta: Optional[dict] = None
+        self.compile_seconds = 0.0
+
+    # -- recording-phase execution (one call at a time) ---------------------
+    def exec_call(self, call: InterceptedCall, arrival_t: float) -> Any:
+        rec = call.record
+        ret: Any = "cudaSuccess"
+        if rec.func == FUNC_H2D:
+            if self.execute:
+                self.env[call.out_addrs[0]] = np.asarray(call.h2d_value)
+        elif rec.func == FUNC_D2H:
+            addr = call.in_operands[0][1]
+            # DtoH must drain the kernel queue first
+            self.busy_until = max(self.busy_until, arrival_t)
+            if self.execute:
+                ret = np.asarray(self.env[addr])
+            else:
+                shape, dtype = call.out_avals[0]
+                ret = np.zeros(shape, dtype)
+        elif call.prim is not None:
+            if self.execute:
+                invals = [
+                    self.env[v] if tag == "a" else v
+                    for tag, v in call.in_operands
+                ]
+                outs = call.prim.bind(*invals, **call.params)
+                if not call.prim.multiple_results:
+                    outs = [outs]
+                for addr, val in zip(call.out_addrs, outs):
+                    self.env[addr] = val
+            op_t = self.device.op_time(rec.flops, rec.mem_bytes)
+            op_t += self.device.kernel_launch_s
+            self.busy_until = max(self.busy_until, arrival_t) + op_t
+            self.busy_seconds += op_t
+        return ret
+
+    # -- replaying phase -----------------------------------------------------
+    def prepare_replay(self, calls: List[InterceptedCall]) -> None:
+        """Compile the recorded sequence into one XLA executable.
+
+        The function is rebuilt purely from the recorded RPC payloads
+        (primitive + params + operand addresses) — not from the original
+        model definition — which is what makes this a *replayer*."""
+        h2d_addrs: List[int] = []
+        d2h_addrs: List[int] = []
+        kernel_calls: List[InterceptedCall] = []
+        written: set = set()
+        param_addrs: List[int] = []
+        total_flops = 0.0
+        total_bytes = 0.0
+        for c in calls:
+            rec = c.record
+            if rec.func == FUNC_H2D:
+                h2d_addrs.append(c.out_addrs[0])
+                written.add(c.out_addrs[0])
+            elif rec.func == FUNC_D2H:
+                d2h_addrs.append(c.in_operands[0][1])
+            elif c.prim is not None:
+                kernel_calls.append(c)
+                for tag, v in c.in_operands:
+                    if tag == "a" and v not in written and v not in param_addrs:
+                        param_addrs.append(v)
+                written.update(c.out_addrs)
+                total_flops += rec.flops
+                total_bytes += rec.mem_bytes
+
+        def replay(params_flat, inputs_flat):
+            env: Dict[int, Any] = dict(zip(param_addrs, params_flat))
+            for addr, v in zip(h2d_addrs, inputs_flat):
+                env[addr] = v
+            for c in kernel_calls:
+                invals = [
+                    env[v] if tag == "a" else v for tag, v in c.in_operands
+                ]
+                outs = c.prim.bind(*invals, **c.params)
+                if not c.prim.multiple_results:
+                    outs = [outs]
+                for addr, val in zip(c.out_addrs, outs):
+                    env[addr] = val
+            return [env[a] for a in d2h_addrs]
+
+        t0 = _time.perf_counter()
+        self._replay_fn = jax.jit(replay) if self.execute else None
+        self._replay_d2h_avals = [
+            c.out_avals[0] for c in calls if c.record.func == FUNC_D2H
+        ]
+        self._replay_meta = dict(
+            param_addrs=param_addrs,
+            h2d_addrs=h2d_addrs,
+            d2h_addrs=d2h_addrs,
+            n_kernels=len(kernel_calls),
+            total_flops=total_flops,
+            total_bytes=total_bytes,
+        )
+        # warm the executable with the resident params (AOT compile)
+        self.compile_seconds = _time.perf_counter() - t0
+
+    @property
+    def replay_ready(self) -> bool:
+        return self._replay_fn is not None
+
+    def replay_compute_seconds(self) -> float:
+        m = self._replay_meta
+        return self.device.sequence_time(
+            m["total_flops"],
+            m["total_bytes"],
+            num_kernels=max(1, m["n_kernels"] // REPLAY_KERNELS_PER_FUSION),
+            fusion_factor=REPLAY_FUSION_FACTOR,
+        )
+
+    def run_replay(self, inputs: List[np.ndarray], start_t: float) -> Tuple[List[Any], float]:
+        """Execute the compiled IOS; returns (outputs, completion time)."""
+        m = self._replay_meta
+        if self.execute:
+            params_flat = [self.env[a] for a in m["param_addrs"]]
+            outs = self._replay_fn(params_flat, [np.asarray(x) for x in inputs])
+            outs = [np.asarray(o) for o in outs]
+            # refresh the env so a post-fallback recording phase sees it
+            for addr, val in zip(m["d2h_addrs"], outs):
+                self.env[addr] = val
+        else:
+            outs = [np.zeros(s, d) for s, d in self._replay_d2h_avals]
+        compute = self.replay_compute_seconds()
+        self.busy_until = max(self.busy_until, start_t) + compute
+        self.busy_seconds += compute
+        return outs, self.busy_until
+
+
+# ---------------------------------------------------------------------------
+# client (Alg. 3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class InferenceStats:
+    rpcs: int = 0
+    network_bytes: float = 0.0
+    wall_seconds: float = 0.0
+    joules: float = 0.0
+    mode: str = MODE_RECORDING
+
+
+class RRTOClient:
+    """Call sink implementing Alg. 3.  Modes:
+
+    * ``transparent`` (Cricket) — always record-phase behaviour, no search;
+    * ``semi_rrto`` — Cricket + client-side caching of device-query RPCs;
+    * ``rrto`` — full record/replay with Operator Sequence Search.
+    """
+
+    def __init__(
+        self,
+        server: OffloadServer,
+        network: NetworkModel,
+        clock: SimClock,
+        meter: EnergyMeter,
+        *,
+        variant: str = "rrto",
+        min_repeats: int = 3,
+        search_on_d2h: bool = True,
+    ):
+        if variant not in ("rrto", "semi_rrto", "transparent"):
+            raise ValueError(variant)
+        self.server = server
+        self.network = network
+        self.clock = clock
+        self.meter = meter
+        self.variant = variant
+        self.min_repeats = min_repeats
+        self.search_on_d2h = search_on_d2h
+
+        self.mode = MODE_RECORDING
+        self.logs: List[OperatorRecord] = []
+        self.calls: List[InterceptedCall] = []
+        self.ios: Optional[InferenceSequence] = None
+        self._ios_calls: List[InterceptedCall] = []
+        self._replay_pos = 0
+        self._replay_prefix: List[InterceptedCall] = []
+        self._replay_inputs: List[np.ndarray] = []
+        self._replay_outputs: Optional[List[Any]] = None
+        self._replay_done_at = 0.0
+        self._out_cursor = 0
+        self.search_seconds = 0.0
+        self.searches_run = 0
+        self.fallbacks = 0
+        self._query_cache: set = set()
+        # per-inference counters (reset by the session)
+        self.stats = InferenceStats()
+
+    # -- helpers -------------------------------------------------------------
+    def _rpc(self, payload: float, response: float) -> None:
+        dt = self.network.rpc_time(payload, response, self.clock.t)
+        self.clock.advance(dt)
+        self.meter.add(STATE_COMM, dt)
+        self.stats.rpcs += 1
+        self.stats.network_bytes += payload + response
+
+    def _local(self, dt: float = PER_LOCAL_OP_S) -> None:
+        self.clock.advance(dt)
+        self.meter.add(STATE_CONTROL, dt)
+
+    def _wait_until(self, t: float) -> None:
+        if t > self.clock.t:
+            dt = t - self.clock.t
+            self.clock.advance(dt)
+            self.meter.add(STATE_STANDBY, dt)
+
+    # -- recording-phase handling --------------------------------------------
+    def _record_call(self, call: InterceptedCall) -> Any:
+        rec = call.record
+        # semi-RRTO (Fig. 11) caches device-query RPCs; full RRTO stays
+        # faithful to traditional transparent offloading while recording.
+        cached_query = self.variant == "semi_rrto" and rec.category == "q"
+        if cached_query and self._seen_query(rec):
+            # semi-RRTO optimization: device-state queries are answered from
+            # the client cache (Fig. 11) — no network traffic
+            self._local()
+            ret = "cached"
+        else:
+            self._rpc(rec.payload_bytes, rec.response_bytes)
+            if rec.category == CAT_D2H:
+                # drain the server kernel queue before download completes
+                self._wait_until(self.server.busy_until)
+            ret = self.server.exec_call(call, self.clock.t)
+
+        self.logs.append(rec)
+        self.calls.append(call)
+
+        if self.variant == "rrto" and self.search_on_d2h:
+            # run the search whenever a DtoH sync group closes: after the DtoH
+            # itself and after each trailing synchronize (the paper overlaps
+            # the search with the RPC wait, so per-op invocation is free)
+            tail_is_boundary = rec.category == CAT_D2H or (
+                rec.category == "s"
+                and any(r.category == CAT_D2H for r in self.logs[-3:-1])
+            )
+            if tail_is_boundary:
+                self._try_identify_sequence()
+        return ret
+
+    def _seen_query(self, rec: OperatorRecord) -> bool:
+        key = rec.identity()
+        if key in self._query_cache:
+            return True
+        self._query_cache.add(key)
+        return False
+
+    def _try_identify_sequence(self) -> None:
+        t0 = _time.perf_counter()
+        ios = operator_sequence_search(self.logs, self.min_repeats)
+        self.search_seconds += _time.perf_counter() - t0
+        self.searches_run += 1
+        if ios is None:
+            return
+        self.ios = ios
+        self._ios_calls = list(
+            self.calls[ios.start_index : ios.start_index + len(ios)]
+        )
+        self.server.prepare_replay(self._ios_calls)
+        self.mode = MODE_REPLAYING
+        self._replay_pos = 0
+
+    # -- replaying-phase handling ----------------------------------------------
+    def _replay_call(self, call: InterceptedCall) -> Any:
+        rec = call.record
+        expected = self.ios.records[self._replay_pos]
+        if rec != expected:
+            return self._fallback(call)
+
+        if self._replay_pos == 0:
+            # STARTRRTO: new inference begins (Alg. 3 line 12)
+            self._replay_prefix = []
+            self._replay_inputs = []
+            self._replay_outputs = None
+            self._out_cursor = 0
+
+        self._replay_pos = (self._replay_pos + 1) % len(self.ios)
+        self._replay_prefix.append(call)
+
+        if rec.category == CAT_H2D:
+            # the only client->server RPC left: ship the raw input
+            self._rpc(rec.payload_bytes, 32)
+            self._replay_inputs.append(np.asarray(call.h2d_value))
+            if len(self._replay_inputs) == len(self.ios.h2d_positions):
+                outs, done_at = self.server.run_replay(
+                    self._replay_inputs, self.clock.t
+                )
+                self._replay_outputs = outs
+                self._replay_done_at = done_at
+            return "cudaSuccess"
+
+        if rec.category == CAT_D2H:
+            # wait for the one-shot server execution, then download
+            self._wait_until(self._replay_done_at)
+            dt = (
+                self.network._rtt_at(self.clock.t)
+                + self.network.transfer_time(rec.response_bytes, self.clock.t)
+            )
+            self.clock.advance(dt)
+            self.meter.add(STATE_COMM, dt)
+            self.stats.rpcs += 1
+            self.stats.network_bytes += rec.payload_bytes + rec.response_bytes
+            out = self._replay_outputs[self._out_cursor]
+            self._out_cursor += 1
+            return out
+
+        # intermediate operator: answered from the recorded result, locally
+        self._local()
+        return expected.ret
+
+    def _fallback(self, call: InterceptedCall) -> Any:
+        """Sequence deviation (DAM): ship the locally-answered prefix to the
+        server for catch-up, revert to recording, re-search later."""
+        self.fallbacks += 1
+        self.mode = MODE_RECORDING
+        prefix = [
+            c
+            for c in self._replay_prefix
+            if c.record.category not in (CAT_H2D, CAT_D2H)
+        ]
+        if prefix:
+            payload = sum(c.record.payload_bytes for c in prefix)
+            self._rpc(payload, 32)
+            for c in prefix:
+                self.server.exec_call(c, self.clock.t)
+            self.logs.extend(c.record for c in prefix)
+            self.calls.extend(prefix)
+        self._replay_prefix = []
+        self._replay_pos = 0
+        return self._record_call(call)
+
+    # -- the sink ------------------------------------------------------------
+    def __call__(self, call: InterceptedCall) -> Any:
+        if self.variant != "rrto" or self.mode == MODE_RECORDING:
+            return self._record_call(call)
+        return self._replay_call(call)

@@ -1,0 +1,144 @@
+"""Jaxpr flattening — inline call-like equations into a flat operator stream.
+
+The CUDA shim in the paper sees one ``cudaLaunchKernel`` per *kernel*, not per
+framework-level wrapper.  JAX traces wrap many ops in call-like primitives
+(``custom_jvp_call`` around ``relu``, ``pjit`` around library functions…)
+whose equations cannot be re-executed from ``(prim, params)`` alone.  This
+module rewrites a ``ClosedJaxpr`` into a :class:`FlatJaxpr` where call-like
+equations are inlined recursively, leaving only leaf primitives (plus the
+structured-control-flow primitives ``scan``/``while``/``cond``, which remain
+atomic operators — a loop is one dispatch unit for record/replay purposes).
+
+Inner constants discovered during inlining are appended to the constvar list
+so the offload session can upload them like any other parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Sequence, Tuple, Union
+
+import jax.extend.core as jcore
+
+_INLINE_PRIMS = {
+    "custom_jvp_call",
+    "custom_vjp_call",
+    "custom_vjp_call_jaxpr",
+    "closed_call",
+    "core_call",
+    "pjit",
+    "jit",
+    "remat",
+    "checkpoint",
+    "remat2",
+    "custom_lin",
+}
+
+_counter = itertools.count()
+
+
+class FlatVar:
+    """A fresh SSA variable in the flattened program (identity-hashed)."""
+
+    __slots__ = ("aval", "uid")
+
+    def __init__(self, aval):
+        self.aval = aval
+        self.uid = next(_counter)
+
+    def __repr__(self):
+        return f"fv{self.uid}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLit:
+    val: Any
+    aval: Any
+
+
+@dataclasses.dataclass
+class FlatEqn:
+    primitive: jcore.Primitive
+    params: dict
+    invars: List[Union[FlatVar, FlatLit]]
+    outvars: List[FlatVar]
+
+
+@dataclasses.dataclass
+class FlatJaxpr:
+    constvars: List[FlatVar]
+    consts: List[Any]
+    invars: List[FlatVar]
+    outvars: List[Union[FlatVar, FlatLit]]
+    eqns: List[FlatEqn]
+
+
+def _inner_closed(eqn) -> Tuple[Any, List[Any]]:
+    """Extract (inner jaxpr, const values) from a call-like equation."""
+    p = eqn.params
+    for key in ("call_jaxpr", "fun_jaxpr", "jaxpr"):
+        if key in p:
+            inner = p[key]
+            if hasattr(inner, "jaxpr"):  # ClosedJaxpr
+                return inner.jaxpr, list(inner.consts)
+            return inner, []
+    raise ValueError(
+        f"call-like primitive {eqn.primitive.name} without an inner jaxpr"
+    )
+
+
+def flatten_closed_jaxpr(closed: jcore.ClosedJaxpr) -> FlatJaxpr:
+    jaxpr = closed.jaxpr
+    constvars: List[FlatVar] = []
+    consts: List[Any] = []
+    env: Dict[Any, FlatVar] = {}
+    eqns_out: List[FlatEqn] = []
+
+    def read(v) -> Union[FlatVar, FlatLit]:
+        if isinstance(v, jcore.Literal):
+            return FlatLit(v.val, v.aval)
+        return env[v]
+
+    def bind_const(var, value) -> None:
+        fv = FlatVar(var.aval)
+        env[var] = fv
+        constvars.append(fv)
+        consts.append(value)
+
+    def walk(jx, const_vals: Sequence[Any], arg_atoms) -> List[Union[FlatVar, FlatLit]]:
+        for cv, cval in zip(jx.constvars, const_vals):
+            bind_const(cv, cval)
+        for iv, atom in zip(jx.invars, arg_atoms):
+            if isinstance(atom, FlatLit):
+                # pass literal through a fresh var binding via identity eqn-free
+                # mapping: just substitute on read by aliasing through a dict of
+                # literal-valued invars
+                env[iv] = atom  # type: ignore[assignment]
+            else:
+                env[iv] = atom
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name in _INLINE_PRIMS:
+                inner, inner_consts = _inner_closed(eqn)
+                in_atoms = [read(v) for v in eqn.invars]
+                # some call prims hoist consts into leading args (num_consts)
+                results = walk(inner, inner_consts, in_atoms)
+                for ov, res in zip(eqn.outvars, results):
+                    env[ov] = res  # type: ignore[assignment]
+            else:
+                in_atoms = [read(v) for v in eqn.invars]
+                out_fvs = [FlatVar(ov.aval) for ov in eqn.outvars]
+                for ov, fv in zip(eqn.outvars, out_fvs):
+                    env[ov] = fv
+                eqns_out.append(
+                    FlatEqn(eqn.primitive, dict(eqn.params), in_atoms, out_fvs)
+                )
+        return [read(v) for v in jx.outvars]
+
+    invars = [FlatVar(v.aval) for v in jaxpr.invars]
+    for v, fv in zip(jaxpr.invars, invars):
+        env[v] = fv
+    outvars = walk(jaxpr, list(closed.consts), invars)
+    # `walk` bound top-level invars twice (zip with arg_atoms) — harmless,
+    # since the atoms are identical.
+    return FlatJaxpr(constvars, consts, invars, outvars, eqns_out)

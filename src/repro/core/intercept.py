@@ -1,0 +1,422 @@
+"""System-layer interception — the JAX analogue of the paper's LD_PRELOAD shim.
+
+A :class:`JaxprInterceptor` walks a model's jaxpr equation-by-equation, the
+way the CUDA shim sees one ``cudaLaunchKernel`` per operator, and emits
+:class:`InterceptedCall`s to a pluggable sink (the offload client, Alg. 3).
+
+Fidelity requirements driven by the Operator Sequence Search:
+
+* **Deterministic buffer addresses.**  PyTorch's caching allocator hands the
+  same addresses to the same allocation pattern in steady state — that is why
+  record-level log comparison works at all.  :class:`BufferArena` reproduces
+  this: exact-size LIFO free lists + refcount frees at each operand's last
+  use.  Steady-state iterations emit byte-identical records; the first
+  iteration(s) may differ (initialization variability the search must absorb).
+
+* **Framework noise.**  90.6 % of Cricket's RPCs are ``cudaGetDevice`` /
+  ``cudaGetLastError`` (Tab. III).  :class:`FrameworkNoiseModel` replays that
+  per-kernel query pattern with Bresenham-distributed extras so per-inference
+  totals match the paper's measured composition (4 735 / 607 per 522 kernels).
+
+* **Boundary markers.**  Inference inputs/outputs are emitted as
+  ``cudaMemcpyHtoD`` / ``cudaMemcpyDtoH`` records, each followed by a
+  ``cudaStreamSynchronize`` — the sync-grouped markers of observation ②.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+import jax.extend.core as jcore
+
+from repro.core.flatten import FlatJaxpr, FlatLit, FlatVar, flatten_closed_jaxpr
+
+from repro.core.records import (
+    FUNC_D2D,
+    FUNC_D2H,
+    FUNC_GET_DEVICE,
+    FUNC_GET_LAST_ERROR,
+    FUNC_H2D,
+    FUNC_MALLOC,
+    FUNC_SYNC,
+    OperatorRecord,
+)
+
+# ---------------------------------------------------------------------------
+# deterministic caching allocator
+# ---------------------------------------------------------------------------
+
+_ALIGN = 256
+
+
+class BufferArena:
+    """Exact-size-class caching allocator with lowest-address reuse (CUDA
+    caching-allocator behaviour: freed blocks are immediately reusable and the
+    same allocation pattern yields the same addresses).  Min-address policy
+    makes the steady state *stationary*: once an iteration starts from a given
+    free set and triggers no new arena growth, every subsequent identical
+    iteration allocates the identical address sequence — the property the
+    paper's record-level log matching relies on."""
+
+    def __init__(self, base: int = 0x7F0000000000):
+        self._cursor = base
+        self._free: Dict[int, List[int]] = {}   # size -> min-heap of addrs
+        self._size_of: Dict[int, int] = {}
+
+    def alloc(self, nbytes: int) -> int:
+        import heapq
+
+        nbytes = max(_ALIGN, (nbytes + _ALIGN - 1) // _ALIGN * _ALIGN)
+        bucket = self._free.get(nbytes)
+        if bucket:
+            return heapq.heappop(bucket)
+        addr = self._cursor
+        self._cursor += nbytes
+        self._size_of[addr] = nbytes
+        return addr
+
+    def free(self, addr: int) -> None:
+        import heapq
+
+        nbytes = self._size_of[addr]
+        heapq.heappush(self._free.setdefault(nbytes, []), addr)
+
+    @property
+    def high_water_mark(self) -> int:
+        return self._cursor
+
+
+# ---------------------------------------------------------------------------
+# framework noise
+# ---------------------------------------------------------------------------
+
+def _bresenham_count(index: int, rate: float) -> int:
+    """Deterministic per-index integer counts averaging ``rate``."""
+    return int((index + 1) * rate) - int(index * rate)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameworkNoiseModel:
+    """Per-kernel query chatter of the ML framework (PyTorch defaults are
+    calibrated to Tab. III loop-stage composition: 4735 cudaGetDevice and
+    607 cudaGetLastError per 522 cudaLaunchKernel)."""
+
+    get_device_rate: float = 4735.0 / 522.0
+    get_last_error_rate: float = 607.0 / 522.0
+
+    def queries_for(self, kernel_index: int) -> List[str]:
+        out: List[str] = []
+        out += [FUNC_GET_DEVICE] * _bresenham_count(kernel_index, self.get_device_rate)
+        out += [FUNC_GET_LAST_ERROR] * _bresenham_count(
+            kernel_index, self.get_last_error_rate
+        )
+        return out
+
+
+NO_NOISE = FrameworkNoiseModel(get_device_rate=0.0, get_last_error_rate=0.0)
+
+
+# ---------------------------------------------------------------------------
+# intercepted calls
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class InterceptedCall:
+    """One call crossing the (virtual) CUDA-runtime boundary.
+
+    ``record`` is what the RRTO recorder logs; the remaining fields are the
+    server-side payload (the full ``args`` the server received over RPC) that
+    the server replayer uses to re-execute the call (Alg. 4 line 10)."""
+
+    record: OperatorRecord
+    prim: Optional[jcore.Primitive] = None
+    params: Optional[dict] = None
+    # ordered operand list: ("a", addr) for device buffers, ("l", value) for
+    # inlined literals — exactly what the RPC payload carries in the paper
+    in_operands: Tuple[Tuple[str, Any], ...] = ()
+    out_addrs: Tuple[int, ...] = ()
+    out_avals: Tuple[Tuple[Tuple[int, ...], str], ...] = ()  # (shape, dtype)
+    h2d_value: Any = None            # live payload for HtoD transfers
+
+
+CallSink = Callable[[InterceptedCall], Any]
+
+
+def _params_sig(params: dict) -> Tuple:
+    """Stable hashable signature of primitive params (jaxprs and callables are
+    digested by their deterministic string form)."""
+    items = []
+    for k in sorted(params):
+        v = params[k]
+        try:
+            hash(v)
+            items.append((k, v))
+        except TypeError:
+            digest = hashlib.md5(str(v).encode()).hexdigest()[:16]
+            items.append((k, digest))
+    return tuple(items)
+
+
+def _literal_sig(value) -> Tuple:
+    arr = np.asarray(value)
+    return (str(arr.dtype), arr.shape, hashlib.md5(arr.tobytes()).hexdigest()[:16])
+
+
+def _aval_sig(avals) -> Tuple:
+    return tuple((tuple(a.shape), str(a.dtype)) for a in avals)
+
+
+def _aval_nbytes(aval) -> int:
+    n = 1
+    for s in aval.shape:
+        n *= int(s)
+    return n * aval.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# the interceptor
+# ---------------------------------------------------------------------------
+
+class JaxprInterceptor:
+    """Executes a model one operator at a time through a call sink, emitting
+    the record stream a transparent-offloading shim would observe."""
+
+    def __init__(
+        self,
+        sink: CallSink,
+        noise: FrameworkNoiseModel = FrameworkNoiseModel(),
+        arena: Optional[BufferArena] = None,
+        input_wire_divisor: float = 1.0,
+    ):
+        self.sink = sink
+        self.noise = noise
+        self.arena = arena or BufferArena()
+        self.input_wire_divisor = input_wire_divisor
+        self._kernel_counter = 0
+
+    # -- persistent (parameter) uploads ------------------------------------
+    def upload_params(self, leaves: Sequence[np.ndarray]) -> List[int]:
+        """Model-load phase: malloc + HtoD for every parameter leaf."""
+        addrs = []
+        for leaf in leaves:
+            arr = np.asarray(leaf)
+            addr = self.arena.alloc(int(arr.nbytes))
+            self.sink(
+                InterceptedCall(
+                    OperatorRecord(
+                        FUNC_MALLOC, (int(arr.nbytes),), out_buffers=(), payload_bytes=64
+                    )
+                )
+            )
+            self.sink(
+                InterceptedCall(
+                    OperatorRecord(
+                        FUNC_H2D,
+                        (addr, int(arr.nbytes)),
+                        in_buffers=(),
+                        out_buffers=(addr,),
+                        payload_bytes=int(arr.nbytes) + 64,
+                    ),
+                    out_addrs=(addr,),
+                    h2d_value=arr,
+                )
+            )
+            addrs.append(addr)
+        return addrs
+
+    # -- one inference ------------------------------------------------------
+    def run(
+        self,
+        closed_jaxpr: jcore.ClosedJaxpr,
+        param_addrs: Sequence[int],
+        inputs: Sequence[np.ndarray],
+        *,
+        resident_inputs: Optional[Dict[int, int]] = None,
+        download_outputs: bool = True,
+        keep_outputs: bool = False,
+    ) -> Any:
+        """Walk the jaxpr: HtoD the inputs, launch each equation as a kernel
+        RPC (preceded by framework noise), DtoH every output.  Returns the
+        values the application receives (whatever the sink returned for the
+        DtoH calls).
+
+        ``resident_inputs`` maps invar index -> device address for operands
+        already resident on the server (e.g. constants cached by a previous
+        initialization inference) — no HtoD is emitted for them.
+        ``download_outputs=False`` suppresses the DtoH markers (initialization
+        graphs whose results stay on-device); with ``keep_outputs=True`` the
+        output buffers persist and their addresses are returned alongside the
+        results as ``(results, out_addrs)``."""
+        from repro.core.costmodel import eqn_bytes, eqn_flops
+
+        resident_inputs = resident_inputs or {}
+        jaxpr = (
+            closed_jaxpr
+            if isinstance(closed_jaxpr, FlatJaxpr)
+            else flatten_closed_jaxpr(closed_jaxpr)
+        )
+        if len(param_addrs) != len(jaxpr.constvars):
+            raise ValueError(
+                f"{len(param_addrs)} param addrs for {len(jaxpr.constvars)} constvars"
+            )
+
+        kernel_index = 0  # per-inference: the framework's query chatter is a
+        # deterministic function of the op position within the model
+        addr_of: Dict[Any, int] = {}
+        freed: Set[int] = set()
+        for var, addr in zip(jaxpr.constvars, param_addrs):
+            addr_of[var] = addr
+
+        persistent_addrs = set(param_addrs) | set(resident_inputs.values())
+
+        def alloc(nbytes: int) -> int:
+            addr = self.arena.alloc(nbytes)
+            freed.discard(addr)  # re-allocated: eligible for freeing again
+            return addr
+
+        def maybe_free(addr: int) -> None:
+            if addr not in freed and addr not in persistent_addrs:
+                freed.add(addr)
+                self.arena.free(addr)
+
+        # last-use analysis for refcount frees
+        last_use: Dict[Any, int] = {}
+        for i, eqn in enumerate(jaxpr.eqns):
+            for v in eqn.invars:
+                if isinstance(v, FlatVar):
+                    last_use[v] = i
+        outvar_set = {v for v in jaxpr.outvars if isinstance(v, FlatVar)}
+
+        # ---- inference start: upload inputs (observation ② start marker)
+        for idx, (var, value) in enumerate(zip(jaxpr.invars, inputs)):
+            if idx in resident_inputs:
+                addr_of[var] = resident_inputs[idx]
+                continue
+            arr = np.asarray(value)
+            addr = alloc(int(arr.nbytes))
+            addr_of[var] = addr
+            wire = int(arr.nbytes / self.input_wire_divisor)
+            self.sink(
+                InterceptedCall(
+                    OperatorRecord(
+                        FUNC_H2D,
+                        (addr, int(arr.nbytes)),
+                        in_buffers=(),
+                        out_buffers=(addr,),
+                        payload_bytes=wire + 64,
+                    ),
+                    out_addrs=(addr,),
+                    h2d_value=arr,
+                )
+            )
+            self.sink(InterceptedCall(OperatorRecord(FUNC_SYNC, ())))
+
+        # ---- the operator stream
+        for i, eqn in enumerate(jaxpr.eqns):
+            in_operands: List[Tuple[str, Any]] = []
+            in_addrs: List[int] = []
+            lit_sigs: List[Tuple] = []
+            for v in eqn.invars:
+                if isinstance(v, FlatVar):
+                    in_operands.append(("a", addr_of[v]))
+                    in_addrs.append(addr_of[v])
+                else:  # Literal
+                    in_operands.append(("l", v.val))
+                    lit_sigs.append(_literal_sig(v.val))
+
+            out_addrs = tuple(
+                alloc(_aval_nbytes(v.aval)) for v in eqn.outvars
+            )
+            for v, addr in zip(eqn.outvars, out_addrs):
+                addr_of[v] = addr
+
+            prim_name = eqn.primitive.name
+            if prim_name == "copy":
+                func = FUNC_D2D
+            else:
+                func = f"kernel:{prim_name}"
+                for q in self.noise.queries_for(kernel_index):
+                    self.sink(InterceptedCall(OperatorRecord(q, ())))
+                kernel_index += 1
+
+            self.sink(
+                InterceptedCall(
+                    OperatorRecord(
+                        func,
+                        (
+                            prim_name,
+                            _params_sig(eqn.params),
+                            tuple(in_addrs),
+                            out_addrs,
+                            tuple(lit_sigs),
+                            _aval_sig([v.aval for v in eqn.outvars]),
+                        ),
+                        in_buffers=tuple(in_addrs),
+                        out_buffers=out_addrs,
+                        payload_bytes=512,
+                        flops=eqn_flops(eqn),
+                        mem_bytes=eqn_bytes(eqn),
+                    ),
+                    prim=eqn.primitive,
+                    params=dict(eqn.params),
+                    in_operands=tuple(in_operands),
+                    out_addrs=out_addrs,
+                    out_avals=_aval_sig([v.aval for v in eqn.outvars]),
+                )
+            )
+
+            # refcount frees: operands at their last use, dead outputs now
+            for v in eqn.invars:
+                if (
+                    isinstance(v, FlatVar)
+                    and last_use.get(v) == i
+                    and v not in outvar_set
+                ):
+                    maybe_free(addr_of[v])
+            for v in eqn.outvars:
+                if v not in last_use and v not in outvar_set:
+                    maybe_free(addr_of[v])
+
+        # ---- inference end: download outputs (observation ② end marker)
+        results: List[Any] = []
+        if download_outputs:
+            for var in jaxpr.outvars:
+                if isinstance(var, FlatLit):
+                    results.append(var.val)
+                    continue
+                addr = addr_of[var]
+                nbytes = _aval_nbytes(var.aval)
+                ret = self.sink(
+                    InterceptedCall(
+                        OperatorRecord(
+                            FUNC_D2H,
+                            (addr, nbytes),
+                            in_buffers=(addr,),
+                            out_buffers=(),
+                            payload_bytes=64,
+                            response_bytes=nbytes + 64,
+                        ),
+                        in_operands=(("a", addr),),
+                        out_avals=_aval_sig([var.aval]),
+                    )
+                )
+                self.sink(InterceptedCall(OperatorRecord(FUNC_SYNC, ())))
+                results.append(ret)
+
+        out_addr_list = [
+            addr_of[v] if isinstance(v, FlatVar) else None
+            for v in jaxpr.outvars
+        ]
+        if not keep_outputs:
+            # free everything inference-local so the next run reuses addresses
+            for var in jaxpr.outvars:
+                if isinstance(var, FlatVar):
+                    maybe_free(addr_of[var])
+        for var in jaxpr.invars:
+            if isinstance(var, FlatVar):
+                maybe_free(addr_of[var])
+        if keep_outputs:
+            return results, out_addr_list
+        return results

@@ -1,0 +1,355 @@
+"""End-to-end offload sessions — the five systems the paper compares.
+
+    device_only   run the model on the mobile device (no offloading)
+    nnto          native non-transparent offloading (model lives on the
+                  server; app ships input, receives output — code modified)
+    cricket       traditional transparent offloading: one RPC per call
+    semi_rrto     cricket + client-side caching of device-query RPCs (Fig. 11)
+    rrto          full record/replay with Operator Sequence Search
+
+Every system runs the *same* model function; transparent systems execute it
+through the jaxpr interceptor (the app is unmodified — interception happens
+below it), non-transparent systems call it directly (the "code modification").
+Latency and energy come from the simulated clock/network/power models; the
+*computed values* are real JAX executions and must agree across systems
+(asserted by tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.costmodel import (
+    GTX_2080TI,
+    JETSON_XAVIER_NX,
+    DeviceSpec,
+    jaxpr_bytes,
+    jaxpr_flops,
+)
+from repro.core.energy import (
+    STATE_COMM,
+    STATE_CONTROL,
+    STATE_INFERENCE,
+    STATE_STANDBY,
+    EnergyMeter,
+    PowerModel,
+)
+from repro.core.engine import (
+    REPLAY_FUSION_FACTOR,
+    REPLAY_KERNELS_PER_FUSION,
+    MODE_RECORDING,
+    MODE_REPLAYING,
+    OffloadServer,
+    RRTOClient,
+    SimClock,
+)
+from repro.core.intercept import (
+    BufferArena,
+    FrameworkNoiseModel,
+    JaxprInterceptor,
+)
+from repro.core.flatten import flatten_closed_jaxpr
+from repro.core.netsim import NetworkModel, get_network
+
+SYSTEMS = ("device_only", "nnto", "cricket", "semi_rrto", "rrto")
+
+# client-side application logic per inference (pre/post-processing)
+CLIENT_CONTROL_S = 0.5e-3
+
+
+@dataclasses.dataclass
+class OffloadableModel:
+    """A model as the offloading layer sees it: an apply function, parameters,
+    example inputs, and an optional one-time setup graph (initialization
+    inference variability, e.g. KAPAO's mesh-grid generation)."""
+
+    name: str
+    apply: Callable[..., Any]            # apply(params, [aux,] *inputs)
+    params: Any                          # pytree
+    example_inputs: Tuple[Any, ...]
+    setup: Optional[Callable[..., Any]] = None   # setup(params, *inputs) -> aux
+    # wire-format divisor for inference inputs (e.g. ~10x JPEG for camera
+    # frames); parameters always travel raw
+    input_wire_divisor: float = 1.0
+
+
+@dataclasses.dataclass
+class InferenceResult:
+    outputs: List[Any]
+    wall_seconds: float
+    joules: float
+    rpcs: int
+    network_bytes: float
+    server_busy_seconds: float
+    mode: str
+
+
+class OffloadSession:
+    """One application process using one offloading system."""
+
+    def __init__(
+        self,
+        model: OffloadableModel,
+        system: str,
+        *,
+        environment: str = "indoor",
+        network: Optional[NetworkModel] = None,
+        client_device: DeviceSpec = JETSON_XAVIER_NX,
+        server_device: DeviceSpec = GTX_2080TI,
+        noise: Optional[FrameworkNoiseModel] = None,
+        power: Optional[PowerModel] = None,
+        min_repeats: int = 3,
+        seed: int = 0,
+        execute: bool = True,
+    ):
+        if system not in SYSTEMS:
+            raise ValueError(f"unknown system {system!r}; pick from {SYSTEMS}")
+        self.model = model
+        self.system = system
+        self.network = network or get_network(environment, seed)
+        self.client_device = client_device
+        self.server_device = server_device
+        self.clock = SimClock()
+        self.meter = EnergyMeter(power or PowerModel())
+        self.execute = execute
+        self.server = OffloadServer(server_device, execute=execute)
+        self.history: List[InferenceResult] = []
+        self._loaded = False
+        self._infer_count = 0
+        self.stage_marks: Dict[str, int] = {}
+
+        # ---- trace the model once (shapes only; concrete consts captured)
+        params = model.params
+        ex = tuple(np.asarray(x) for x in model.example_inputs)
+        if model.setup is not None:
+            aux = jax.tree.map(np.asarray, jax.jit(model.setup)(params, *ex))
+            self._aux_leaves, self._aux_treedef = jax.tree.flatten(aux)
+            self._setup_jaxpr = jax.make_jaxpr(
+                lambda *i: jax.tree.leaves(model.setup(params, *i))
+            )(*ex)
+        else:
+            self._aux_leaves, self._aux_treedef = [], None
+            self._setup_jaxpr = None
+
+        n_aux = len(self._aux_leaves)
+
+        def _full_apply(args):
+            if model.setup is not None:
+                aux_l = list(args[:n_aux])
+                ins = args[n_aux:]
+                return model.apply(
+                    params, jax.tree.unflatten(self._aux_treedef, aux_l), *ins
+                )
+            return model.apply(params, *args)
+
+        self._full_apply = _full_apply
+        self._steady_jaxpr = flatten_closed_jaxpr(
+            jax.make_jaxpr(lambda *a: _full_apply(a))(*self._aux_leaves, *ex)
+        )
+        if self._setup_jaxpr is not None:
+            self._setup_jaxpr = flatten_closed_jaxpr(self._setup_jaxpr)
+
+        self._steady_flops = jaxpr_flops(self._steady_jaxpr)
+        self._steady_bytes = jaxpr_bytes(self._steady_jaxpr)
+        self._n_kernels = len(self._steady_jaxpr.eqns)
+
+        if system in ("cricket", "semi_rrto", "rrto"):
+            variant = "transparent" if system == "cricket" else system
+            self.client = RRTOClient(
+                self.server,
+                self.network,
+                self.clock,
+                self.meter,
+                variant=variant,
+                min_repeats=min_repeats,
+            )
+            self.interceptor = JaxprInterceptor(
+                self.client,
+                noise or FrameworkNoiseModel(),
+                input_wire_divisor=model.input_wire_divisor,
+            )
+        else:
+            self.client = None
+            self.interceptor = None
+            self._direct_fn = jax.jit(self._full_apply)
+        self._aux_addrs: Optional[Dict[int, int]] = None
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _const_key(arr: np.ndarray) -> Tuple:
+        import hashlib
+
+        arr = np.asarray(arr)
+        return (arr.shape, str(arr.dtype), hashlib.md5(arr.tobytes()).hexdigest())
+
+    def load(self) -> None:
+        """Model-load phase: parameters travel to where they execute."""
+        if self._loaded:
+            return
+        if self.system == "device_only":
+            # local disk -> device memory; negligible for the comparison
+            self.meter.add(STATE_CONTROL, 0.1)
+            self.clock.advance(0.1)
+        elif self.system == "nnto":
+            # the server hosts the model; nothing crosses the radio
+            self.meter.add(STATE_CONTROL, 0.05)
+            self.clock.advance(0.05)
+        else:
+            # upload every traced constant (the model parameters as captured
+            # by the jaxprs), deduplicated by content
+            registry: Dict[Tuple, int] = {}
+            unique: List[np.ndarray] = []
+            keys: List[Tuple] = []
+            jaxprs = [self._steady_jaxpr]
+            if self._setup_jaxpr is not None:
+                jaxprs.insert(0, self._setup_jaxpr)
+            for cj in jaxprs:
+                for c in cj.consts:
+                    k = self._const_key(c)
+                    if k not in registry:
+                        registry[k] = -1
+                        unique.append(np.asarray(c))
+                        keys.append(k)
+            addrs = self.interceptor.upload_params(unique)
+            for k, a in zip(keys, addrs):
+                registry[k] = a
+            self._const_registry = registry
+        self.stage_marks["after_load"] = (
+            len(self.client.logs) if self.client else 0
+        )
+        self._loaded = True
+
+    # ------------------------------------------------------------------
+    def _param_addrs_for(self, closed_jaxpr) -> List[int]:
+        return [self._const_registry[self._const_key(c)] for c in closed_jaxpr.consts]
+
+    def _run_intercepted(self, inputs: Sequence[np.ndarray]) -> List[Any]:
+        if self.model.setup is not None and self._aux_addrs is None:
+            # initialization inference: extra setup graph, outputs cached
+            _, aux_addrs = self.interceptor.run(
+                self._setup_jaxpr,
+                self._param_addrs_for(self._setup_jaxpr),
+                inputs,
+                download_outputs=False,
+                keep_outputs=True,
+            )
+            self._aux_addrs = {i: a for i, a in enumerate(aux_addrs)}
+        resident = dict(self._aux_addrs or {})
+        return self.interceptor.run(
+            self._steady_jaxpr,
+            self._param_addrs_for(self._steady_jaxpr),
+            list(self._aux_leaves) + [np.asarray(x) for x in inputs],
+            resident_inputs=resident,
+        )
+
+    def infer(self, *inputs) -> InferenceResult:
+        if not self._loaded:
+            self.load()
+        t0, e0 = self.clock.t, self.meter.snapshot()
+        busy0 = self.server.busy_seconds
+        rpcs0 = self.client.stats.rpcs if self.client else 0
+        bytes0 = self.client.stats.network_bytes if self.client else 0.0
+        inputs = tuple(np.asarray(x) for x in inputs)
+
+        if self.system == "device_only":
+            outputs = self._device_only(inputs)
+            mode = "local"
+        elif self.system == "nnto":
+            outputs = self._nnto(inputs)
+            mode = "offloaded"
+        else:
+            self.meter.add(STATE_CONTROL, CLIENT_CONTROL_S)
+            self.clock.advance(CLIENT_CONTROL_S)
+            mode = self.client.mode
+            outputs = self._run_intercepted(inputs)
+        self._infer_count += 1
+        if self._infer_count == 1:
+            self.stage_marks["after_first_inference"] = (
+                len(self.client.logs) if self.client else 0
+            )
+
+        res = InferenceResult(
+            outputs=outputs,
+            wall_seconds=self.clock.t - t0,
+            joules=self.meter.since(e0).joules,
+            rpcs=(self.client.stats.rpcs - rpcs0) if self.client else 0,
+            network_bytes=(
+                (self.client.stats.network_bytes - bytes0) if self.client else 0.0
+            ),
+            server_busy_seconds=self.server.busy_seconds - busy0,
+            mode=mode,
+        )
+        self.history.append(res)
+        return res
+
+    # ------------------------------------------------------------------
+    def _device_only(self, inputs) -> List[Any]:
+        args = list(self._aux_leaves) + list(inputs)
+        if self.execute:
+            outs = self._direct_fn(tuple(args))
+        else:
+            outs = [
+                np.zeros(v.aval.shape, v.aval.dtype)
+                for v in self._steady_jaxpr.outvars
+            ]
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        dt = self.client_device.sequence_time(
+            self._steady_flops,
+            self._steady_bytes,
+            num_kernels=self._n_kernels,
+            fusion_factor=1.0,  # eager per-op dispatch on the device
+        )
+        self.clock.advance(dt)
+        self.meter.add(STATE_INFERENCE, dt)
+        return [np.asarray(o) for o in outs]
+
+    def _nnto(self, inputs) -> List[Any]:
+        args = list(self._aux_leaves) + list(inputs)
+        if self.execute:
+            outs = self._direct_fn(tuple(args))
+        else:
+            outs = [
+                np.zeros(v.aval.shape, v.aval.dtype)
+                for v in self._steady_jaxpr.outvars
+            ]
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        outs = [np.asarray(o) for o in outs]
+        in_bytes = float(
+            sum(np.asarray(x).nbytes for x in inputs)
+            / self.model.input_wire_divisor
+        )
+        out_bytes = float(sum(o.nbytes for o in outs))
+        # app-level send -> server compute -> receive
+        up = self.network._rtt_at(self.clock.t) + self.network.transfer_time(
+            in_bytes, self.clock.t
+        )
+        self.clock.advance(up)
+        self.meter.add(STATE_COMM, up)
+        compute = self.server_device.sequence_time(
+            self._steady_flops,
+            self._steady_bytes,
+            num_kernels=max(1, self._n_kernels // REPLAY_KERNELS_PER_FUSION),
+            fusion_factor=REPLAY_FUSION_FACTOR,
+        )
+        self.server.busy_seconds += compute
+        self.clock.advance(compute)
+        self.meter.add(STATE_STANDBY, compute)
+        down = self.network.transfer_time(out_bytes, self.clock.t)
+        self.clock.advance(down)
+        self.meter.add(STATE_COMM, down)
+        self.meter.add(STATE_CONTROL, CLIENT_CONTROL_S)
+        self.clock.advance(CLIENT_CONTROL_S)
+        return outs
+
+    # ------------------------------------------------------------------
+    @property
+    def gpu_utilization(self) -> float:
+        """Server busy time / wall time — the Tab. IV proxy."""
+        if self.clock.t <= 0:
+            return 0.0
+        return self.server.busy_seconds / self.clock.t

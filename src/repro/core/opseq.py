@@ -1,0 +1,227 @@
+"""Operator Sequence Search — Alg. 1 (OperatorSequenceSearch) + Alg. 2
+(FastCheck / FullCheck) from the RRTO paper, plus the data-dependency
+validation of observation ③.
+
+Three-level match strategy (Sec. III-B2):
+  level 1 — candidate generation from memory-copy boundary markers (obs. ②):
+            candidates end at the last DtoH sync-group in the log and start at
+            an HtoD or immediately after a DtoH sync-group;
+  level 2 — FastCheck: linear-time repetition counting over the compact
+            category-tag string (obs. ①), pruning init-noise candidates;
+  level 3 — FullCheck: cyclic-rotation realignment to HtoD/DtoH boundaries,
+            data-dependency closure (obs. ③), then exact record-level
+            repetition verification.
+
+The search is hint-free: it sees nothing but the raw log.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Set
+
+from repro.core.records import (
+    CAT_D2H,
+    CAT_H2D,
+    CAT_SYNC,
+    InferenceSequence,
+    OperatorRecord,
+    category_trace,
+)
+
+DEFAULT_MIN_REPEATS = 3
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _sync_group_end(tags: str, idx: int) -> int:
+    """A memory copy groups any immediately-following synchronization calls
+    with it (paper: 'treating these copies as special memory transfer
+    operations and grouping any following synchronization calls')."""
+    j = idx
+    n = len(tags)
+    while j + 1 < n and tags[j + 1] == CAT_SYNC:
+        j += 1
+    return j
+
+
+def check_data_dependency(
+    logs: Sequence[OperatorRecord], start: int, length: int
+) -> bool:
+    """Observation ③: every operand read inside the candidate window must come
+    from (a) the raw input or a prior operator's output *within* the window, or
+    (b) a parameter-like buffer — one that is never written inside the window
+    (model weights, init-time cached constants).
+
+    A cyclically-rotated window fails: it reads an intermediate near its start
+    whose producing write sits *later* in the window (previous iteration's
+    tail), violating both (a) and (b).
+    """
+    end = start + length
+    written_in_window: Set[int] = set()
+    # buffers written anywhere in the window (any iteration-local intermediate
+    # is written exactly once per iteration, hence inside any full window)
+    window_writes: Set[int] = set()
+    for r in logs[start:end]:
+        window_writes.update(r.out_buffers)
+
+    ever_written_before: Set[int] = set()
+    for r in logs[:start]:
+        ever_written_before.update(r.out_buffers)
+
+    for r in logs[start:end]:
+        for b in r.in_buffers:
+            if b in written_in_window:
+                continue  # (a) produced earlier within the window
+            if b not in window_writes and b in ever_written_before:
+                continue  # (b) parameter-like: read-only inside the window
+            return False
+        written_in_window.update(r.out_buffers)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 — FastCheck & FullCheck
+# ---------------------------------------------------------------------------
+
+def fast_check(tags: str, start: int, length: int, min_repeats: int) -> bool:
+    """Count how many times the candidate's category string appears in
+    consecutive earlier positions of the log (the previous inferences).
+    Linear-time string compares on the compact tag string."""
+    if length <= 0 or start + length > len(tags):
+        return False
+    candidate = tags[start : start + length]
+    count, pos = 1, start
+    while pos - length >= 0 and tags[pos - length : pos] == candidate:
+        count += 1
+        pos -= length
+    return count >= min_repeats
+
+
+def full_check(
+    logs: Sequence[OperatorRecord],
+    start: int,
+    length: int,
+    min_repeats: int,
+    d2h_positions: Set[int],
+    *,
+    sync_group_ends: Optional[Set[int]] = None,
+) -> bool:
+    """Exhaustive verification of a realigned candidate:
+       1. the window must terminate at a DtoH sync-group boundary;
+       2. data-dependency closure (observation ③);
+       3. exact record-level repetition across earlier log segments."""
+    end = start + length - 1
+    if end >= len(logs) or start < 0 or length <= 0:
+        return False
+    boundary_ok = end in d2h_positions or (
+        sync_group_ends is not None and end in sync_group_ends
+    )
+    if not boundary_ok:
+        return False
+    if not check_data_dependency(logs, start, length):
+        return False
+    count, pos = 1, start
+    while pos - length >= 0:
+        if all(
+            logs[start + t] == logs[pos - length + t] for t in range(length)
+        ):
+            count += 1
+            pos -= length
+        else:
+            break
+    return count >= min_repeats
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 — OperatorSequenceSearch
+# ---------------------------------------------------------------------------
+
+def operator_sequence_search(
+    logs: Sequence[OperatorRecord],
+    min_repeats: int = DEFAULT_MIN_REPEATS,
+) -> Optional[InferenceSequence]:
+    """Identify the per-inference operator sequence from a raw log, or return
+    None when the log does not (yet) contain >= min_repeats full repetitions.
+    """
+    if not logs:
+        return None
+    tags = category_trace(logs)
+
+    h2d_starts = [i for i, t in enumerate(tags) if t == CAT_H2D]
+    d2h_marks = [i for i, t in enumerate(tags) if t == CAT_D2H]
+    if not h2d_starts or not d2h_marks:
+        return None
+    d2h_set = set(d2h_marks)
+
+    # the candidate end: the last DtoH in the log, extended over its sync group
+    seq_end = _sync_group_end(tags, d2h_marks[-1])
+    sync_group_ends = {_sync_group_end(tags, i) for i in d2h_marks}
+
+    # candidate starts: every HtoD, and the position right after each DtoH
+    # sync group (covers rotated phases, Fig. 5f)
+    starts = sorted(
+        set(h2d_starts)
+        | {_sync_group_end(tags, i) + 1 for i in d2h_marks if _sync_group_end(tags, i) + 1 < len(tags)}
+    )
+
+    h2d_set = set(h2d_starts)
+    # Iterate candidate starts from the LATEST (shortest candidate) first: a
+    # candidate spanning k consecutive iterations is also periodic (the
+    # merged-iterations failure of the naive approach, Fig. 5d), so the
+    # minimal period — the latest start that survives both checks — is the
+    # true inference sequence.
+    for j in reversed(starts):
+        length = seq_end - j + 1
+        if length <= 0 or j > seq_end:
+            continue
+        # a sequence longer than 1/min_repeats of the log cannot repeat enough
+        if length * min_repeats > len(logs):
+            continue
+        if not fast_check(tags, j, length, min_repeats):
+            continue
+        # realign a possibly-rotated candidate to a true HtoD start within one
+        # period before j (Alg. 1 line 12); the data-dependency check inside
+        # FullCheck rejects misaligned inner-HtoD starts.
+        for k in sorted((k for k in h2d_set if j - length <= k <= j), reverse=True):
+            if full_check(
+                logs,
+                k,
+                length,
+                min_repeats,
+                d2h_set,
+                sync_group_ends=sync_group_ends,
+            ):
+                return InferenceSequence(
+                    records=tuple(logs[k : k + length]),
+                    start_index=k,
+                )
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Naive baseline (used by benchmarks to show why obs.① alone fails and how
+# much the two-stage strategy prunes) — maximum repeated substring over the
+# raw record identities.
+# ---------------------------------------------------------------------------
+
+def naive_max_repeated_subsequence(
+    logs: Sequence[OperatorRecord], min_repeats: int = DEFAULT_MIN_REPEATS
+) -> Optional[InferenceSequence]:
+    """O(n^2)-ish brute force: longest suffix-window that tiles the tail of the
+    log at least min_repeats times.  Merges consecutive iterations (Fig. 5d)
+    and ignores boundaries — kept only as a benchmark baseline."""
+    n = len(logs)
+    for length in range(n // min_repeats, 0, -1):
+        start = n - length
+        count, pos = 1, start
+        while pos - length >= 0 and all(
+            logs[start + t] == logs[pos - length + t] for t in range(length)
+        ):
+            count += 1
+            pos -= length
+        if count >= min_repeats:
+            return InferenceSequence(
+                records=tuple(logs[start : start + length]), start_index=start
+            )
+    return None

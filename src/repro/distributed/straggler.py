@@ -1,0 +1,142 @@
+"""Straggler mitigation for the serving path: deadline-based hedged dispatch.
+
+At thousand-node scale, tail latency is dominated by slow replicas (network
+hiccups, preemptions).  The router dispatches each request to a primary
+replica; if no completion arrives within ``hedge_quantile`` of the observed
+latency distribution, it speculatively re-dispatches to a second replica and
+takes the first completion (cancelling the loser).  Classic hedged-requests
+(Dean & Barroso, "The Tail at Scale"), implemented against a simulated clock
+so tests are deterministic.
+
+For the training path, ``SkipAndRescale`` implements the standard
+drop-straggler collective policy: a step proceeds when >= quorum of workers
+contributed; gradient contributions are rescaled by the participation count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class ReplicaModel:
+    """Latency model of one serving replica (simulated)."""
+    name: str
+    base_latency_s: float
+    jitter: Callable[[int], float]        # request index -> extra latency
+    failed: bool = False
+
+    def latency(self, req_idx: int) -> Optional[float]:
+        if self.failed:
+            return None
+        return self.base_latency_s + max(0.0, self.jitter(req_idx))
+
+
+@dataclasses.dataclass
+class HedgeStats:
+    requests: int = 0
+    hedged: int = 0
+    primary_wins: int = 0
+    hedge_wins: int = 0
+    failures_recovered: int = 0
+    total_latency_s: float = 0.0
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def p99(self) -> float:
+        if not self.latencies:
+            return 0.0
+        xs = sorted(self.latencies)
+        return xs[min(len(xs) - 1, int(0.99 * len(xs)))]
+
+    @property
+    def mean(self) -> float:
+        return self.total_latency_s / max(1, self.requests)
+
+
+class HedgedRouter:
+    """Dispatch with speculative re-issue after an adaptive deadline."""
+
+    def __init__(
+        self,
+        replicas: List[ReplicaModel],
+        hedge_multiplier: float = 2.0,
+        min_observations: int = 8,
+    ):
+        self.replicas = replicas
+        self.hedge_multiplier = hedge_multiplier
+        self.min_observations = min_observations
+        self._observed: List[float] = []
+        self.stats = HedgeStats()
+        self._rr = 0
+
+    def _deadline(self) -> float:
+        if len(self._observed) < self.min_observations:
+            return float("inf") if not self._observed else (
+                self.hedge_multiplier * max(self._observed)
+            )
+        xs = sorted(self._observed)[-256:]
+        median = xs[len(xs) // 2]
+        return self.hedge_multiplier * median
+
+    def _pick(self, exclude: int) -> int:
+        for _ in range(len(self.replicas)):
+            self._rr = (self._rr + 1) % len(self.replicas)
+            if self._rr != exclude and not self.replicas[self._rr].failed:
+                return self._rr
+        raise RuntimeError("no healthy replica available")
+
+    def dispatch(self, req_idx: int) -> Tuple[float, str]:
+        """Returns (completion latency, winner name)."""
+        primary_idx = self._pick(exclude=-1)
+        primary = self.replicas[primary_idx]
+        t_primary = primary.latency(req_idx)
+        deadline = self._deadline()
+        self.stats.requests += 1
+
+        hedged = t_primary is None or t_primary > deadline
+        if not hedged:
+            self._observed.append(t_primary)
+            self.stats.primary_wins += 1
+            self.stats.total_latency_s += t_primary
+            self.stats.latencies.append(t_primary)
+            return t_primary, primary.name
+
+        self.stats.hedged += 1
+        backup_idx = self._pick(exclude=primary_idx)
+        backup = self.replicas[backup_idx]
+        t_backup = backup.latency(req_idx)
+        candidates = []
+        if t_primary is not None:
+            candidates.append((t_primary, primary.name))
+        if t_backup is not None:
+            candidates.append((deadline + t_backup, backup.name))
+        if not candidates:
+            raise RuntimeError("both replicas failed")
+        if t_primary is None:
+            self.stats.failures_recovered += 1
+        t, winner = min(candidates)
+        if winner == backup.name:
+            self.stats.hedge_wins += 1
+        else:
+            self.stats.primary_wins += 1
+        self._observed.append(t)
+        self.stats.total_latency_s += t
+        self.stats.latencies.append(t)
+        return t, winner
+
+
+@dataclasses.dataclass
+class SkipAndRescale:
+    """Training-side straggler policy: proceed at quorum, rescale gradients."""
+
+    world: int
+    quorum_fraction: float = 0.9
+
+    def step(self, arrived: List[bool]) -> Tuple[bool, float]:
+        """(proceed?, gradient rescale factor = world/participants)."""
+        n = sum(arrived)
+        if n < self.quorum_fraction * self.world:
+            return False, 1.0
+        return True, self.world / max(n, 1)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (each with ops.py jit wrapper + ref.py jnp oracle)."""

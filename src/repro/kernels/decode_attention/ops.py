@@ -1,0 +1,45 @@
+"""jit'd public wrapper for decode attention (one token vs KV cache)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _pallas_supported(q, k_cache) -> bool:
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    return (
+        jax.default_backend() == "tpu"
+        and d in (64, 128, 256)
+        and s % 512 == 0
+    )
+
+
+@partial(jax.jit, static_argnames=("window", "interpret", "force_ref"))
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    kv_len: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+    force_ref: bool = False,
+) -> jnp.ndarray:
+    """q (B,Hq,D) × cache (B,S,Hkv,D), valid lengths (B,) -> (B,Hq,D)."""
+    if force_ref:
+        return decode_attention_ref(q, k_cache, v_cache, kv_len, window=window)
+    if interpret or _pallas_supported(q, k_cache):
+        return decode_attention_pallas(
+            q, k_cache, v_cache, kv_len, window=window, interpret=interpret
+        )
+    return decode_attention_ref(q, k_cache, v_cache, kv_len, window=window)
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

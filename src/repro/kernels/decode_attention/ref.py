@@ -1,0 +1,115 @@
+"""Pure-jnp oracle for decode attention (one new token vs a KV cache).
+
+q: (B, Hq, D) — a single query position per sequence;
+k_cache, v_cache: (B, S, Hkv, D) — statically-shaped cache;
+kv_len: (B,) int32 — number of valid cache entries per sequence (positions
+>= kv_len are masked out).
+
+Optionally applies a sliding window (only the last ``window`` positions
+attend) — used by SWA archs at long context.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    kv_len: jnp.ndarray,
+    *,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    n_rep = hq // hkv
+    scale = 1.0 / float(d) ** 0.5
+
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    qf = q.astype(jnp.float32).reshape(b, hkv, n_rep, d)
+    # scores: (B, Hkv, n_rep, S)
+    s_mat = jnp.einsum("bgrd,bsgd->bgrs", qf, kf) * scale
+    pos = jnp.arange(s)[None, :]                      # (1, S)
+    ok = pos < kv_len[:, None]
+    if window is not None:
+        ok &= pos >= (kv_len[:, None] - window)
+    s_mat = jnp.where(ok[:, None, None, :], s_mat, NEG_INF)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bgrs,bsgd->bgrd", p, vf)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def decode_attention_q8_ref(
+    q: jnp.ndarray,          # (B, Hq, D)
+    k_q: jnp.ndarray,        # (B, S, Hkv, D) int8
+    v_q: jnp.ndarray,        # (B, S, Hkv, D) int8
+    k_s: jnp.ndarray,        # (B, S, Hkv) f32 per-position-per-head scales
+    v_s: jnp.ndarray,
+    kv_len: jnp.ndarray,     # (B,)
+    *,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """int8-quantized-cache decode attention: the cache is read at int8 width
+    (half the HBM traffic of bf16, quarter of f32); dequantization happens
+    per KV chunk inside the streaming-softmax scan so only a (chunk, D) f32
+    tile ever materializes — the on-chip dequant of a fused TPU kernel,
+    expressed portably."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_q.shape
+    n_rep = hq // hkv
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        k_q = jnp.pad(k_q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_q = jnp.pad(v_q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_s = jnp.pad(k_s, ((0, 0), (0, pad), (0, 0)))
+        v_s = jnp.pad(v_s, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    scale = 1.0 / float(d) ** 0.5
+    qf = q.astype(jnp.float32).reshape(b, hkv, n_rep, d)
+
+    kc = jnp.moveaxis(k_q.reshape(b, nc, chunk, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v_q.reshape(b, nc, chunk, hkv, d), 1, 0)
+    ksc = jnp.moveaxis(k_s.reshape(b, nc, chunk, hkv), 1, 0)
+    vsc = jnp.moveaxis(v_s.reshape(b, nc, chunk, hkv), 1, 0)
+
+    def step(carry, xs):
+        m_prev, l_prev, o_prev, ci = carry
+        kq_c, vq_c, ks_c, vs_c = xs
+        kf = kq_c.astype(jnp.float32) * ks_c[..., None]       # (B,chunk,Hkv,D)
+        vf = vq_c.astype(jnp.float32) * vs_c[..., None]
+        sm = jnp.einsum("bgrd,bcgd->bgrc", qf, kf) * scale     # (B,Hkv,rep,chunk)
+        pos = ci * chunk + jnp.arange(chunk)
+        ok = pos[None, :] < kv_len[:, None]
+        if window is not None:
+            ok &= pos[None, :] >= kv_len[:, None] - window
+        sm = jnp.where(ok[:, None, None, :], sm, NEG_INF)
+        m_new = jnp.maximum(m_prev, sm.max(-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sm - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(-1)
+        o_new = o_prev * alpha[..., None] + jnp.einsum("bgrc,bcgd->bgrd", p, vf)
+        return (m_new, l_new, o_new, ci + 1), None
+
+    m0 = jnp.full((b, hkv, n_rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, n_rep), jnp.float32)
+    o0 = jnp.zeros((b, hkv, n_rep, d), jnp.float32)
+    (m, l, o, _), _ = jax.lax.scan(step, (m0, l0, o0, jnp.int32(0)), (kc, vc, ksc, vsc))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def quantize_kv(x: jnp.ndarray):
+    """(..., D) -> int8 values + per-(...) scale."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]), -127, 127)
+    return q.astype(jnp.int8), s

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import (
+    flash_attention,
+    attention_chunked,
+    attention_dense,
+)

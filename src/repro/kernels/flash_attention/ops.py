@@ -1,0 +1,72 @@
+"""jit'd public wrapper for flash attention.
+
+Dispatch policy:
+  * TPU backend → Pallas kernel (compiled);
+  * interpret=True (tests) → Pallas kernel body in interpret mode;
+  * otherwise (CPU dry-run / fallback shapes) → chunked-jnp reference, which
+    implements identical blockwise math at O(S) memory.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_chunked, attention_dense
+
+
+def _pallas_supported(q, k) -> bool:
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    return (
+        jax.default_backend() == "tpu"
+        and d in (64, 128, 256)
+        and sq % 128 == 0
+        and sk % 128 == 0
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "logit_cap",
+        "q_offset",
+        "interpret",
+        "force_ref",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    q_offset: int = 0,
+    interpret: bool = False,
+    force_ref: bool = False,
+) -> jnp.ndarray:
+    """Fused attention: q (B,Sq,Hq,D) × kv (B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    if force_ref:
+        return attention_chunked(
+            q, k, v, causal=causal, window=window, logit_cap=logit_cap,
+            q_offset=q_offset,
+        )
+    if interpret or _pallas_supported(q, k):
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, logit_cap=logit_cap,
+            q_offset=q_offset, interpret=interpret,
+        )
+    return attention_chunked(
+        q, k, v, causal=causal, window=window, logit_cap=logit_cap,
+        q_offset=q_offset,
+    )
+
+
+__all__ = ["flash_attention", "attention_chunked", "attention_dense"]

@@ -1,0 +1,150 @@
+"""Pure-jnp oracle for flash attention.
+
+Two reference implementations:
+
+* :func:`attention_dense` — O(S^2) materialized-scores reference for small
+  shapes (the ground truth the kernel tests compare against);
+* :func:`attention_chunked` — O(S) streaming-softmax reference (numerically
+  identical math to the Pallas kernel, runnable at 32k+ sequence lengths on
+  any backend).  This is also the portable fallback the layers use when the
+  Pallas TPU kernel is unavailable (e.g. the CPU dry-run).
+
+Supports causal masking, sliding windows (Mistral/Mixtral SWA), GQA head
+grouping and attention logit soft-capping.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D)"""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _mask_bias(
+    q_pos: jnp.ndarray,
+    k_pos: jnp.ndarray,
+    causal: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """(Sq, Sk) additive mask bias."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_dense(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Materialized-scores reference.  q: (B, Sq, Hq, D); k,v: (B, Sk, Hkv, D).
+    ``q_offset`` places the query block at absolute positions
+    [q_offset, q_offset+Sq) against keys at [0, Sk)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    n_rep = hq // hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / jnp.sqrt(jnp.array(d, q.dtype)).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    if logit_cap is not None:
+        scores = logit_cap * jnp.tanh(scores / logit_cap)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(sk)
+    scores = scores + _mask_bias(q_pos, k_pos, causal, window)[None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_cap: Optional[float] = None,
+    q_offset: int = 0,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Streaming-softmax (flash) reference: scans KV in chunks keeping the
+    running (max, denom, weighted-sum) triple.  O(Sq * kv_chunk) live memory.
+    Numerics match the Pallas kernel blockwise algorithm."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    n_rep = hq // hkv
+    kv_chunk = min(kv_chunk, sk)
+    pad = (-sk) % kv_chunk
+    if pad:
+        # zero-pad the cache tail; padded positions are masked below via k_pos
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    valid_k = sk
+    sk = sk + pad
+    n_chunks = sk // kv_chunk
+    scale = 1.0 / float(d) ** 0.5
+
+    qf = q.astype(jnp.float32)
+    k_chunks = k.reshape(b, n_chunks, kv_chunk, hkv, d)
+    v_chunks = v.reshape(b, n_chunks, kv_chunk, hkv, d)
+    q_pos = jnp.arange(sq) + q_offset
+
+    def step(carry, chunk):
+        m_prev, l_prev, o_prev = carry
+        k_c, v_c, c_idx = chunk
+        k_c = _repeat_kv(k_c, n_rep).astype(jnp.float32)
+        v_c = _repeat_kv(v_c, n_rep).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_c) * scale
+        if logit_cap is not None:
+            s = logit_cap * jnp.tanh(s / logit_cap)
+        k_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        ok = jnp.broadcast_to((k_pos < valid_k)[None, :], (sq, kv_chunk))
+        if causal:
+            ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+        s = s + jnp.where(ok, 0.0, NEG_INF)[None, None]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        o_new = o_prev * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, v_c)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, hq, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    o0 = jnp.zeros((b, hq, sq, d), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        step,
+        (m0, l0, o0),
+        (
+            jnp.moveaxis(k_chunks, 1, 0),
+            jnp.moveaxis(v_chunks, 1, 0),
+            jnp.arange(n_chunks),
+        ),
+    )
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B,Sq,Hq,D)

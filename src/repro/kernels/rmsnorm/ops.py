@@ -1,0 +1,30 @@
+"""jit'd public wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@partial(jax.jit, static_argnames=("eps", "offset", "interpret", "force_ref"))
+def rmsnorm(
+    x: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    eps: float = 1e-6,
+    offset: float = 0.0,
+    interpret: bool = False,
+    force_ref: bool = False,
+) -> jnp.ndarray:
+    if force_ref:
+        return rmsnorm_ref(x, scale, eps, offset)
+    if interpret or jax.default_backend() == "tpu":
+        return rmsnorm_pallas(x, scale, eps, offset, interpret=interpret)
+    return rmsnorm_ref(x, scale, eps, offset)
+
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(
+    x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6, offset: float = 0.0
+) -> jnp.ndarray:
+    """y = x / rms(x) * (offset + scale), reduced over the trailing dim.
+    ``offset=1.0`` gives the Gemma/zero-centered-scale convention."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (offset + scale.astype(jnp.float32))).astype(x.dtype)

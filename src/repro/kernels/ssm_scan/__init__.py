@@ -1,0 +1,4 @@
+from repro.kernels.ssm_scan.ops import (
+    gated_scan, gated_step, ssm_scan, ssm_step,
+    gated_scan_ref, gated_step_ref, ssm_scan_ref, ssm_step_ref,
+)

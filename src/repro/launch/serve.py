@@ -1,0 +1,63 @@
+"""Serving driver: generate with a (reduced) arch locally or through the
+RRTO transparent-offloading stack.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+        --system rrto --tokens 24
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config, get_reduced_config
+from repro.serving.engine import LocalServing, RRTOServedLM
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--system", default="local",
+                    choices=["local", "rrto", "cricket", "semi_rrto"])
+    ap.add_argument("--environment", default="indoor", choices=["indoor", "outdoor"])
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    rng = np.random.default_rng(args.seed)
+    prompt = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+
+    if args.system == "local":
+        engine = LocalServing(cfg, seed=args.seed)
+        res = engine.generate({"tokens": prompt}, args.tokens)
+        print(f"[serve] local generation: {res.tokens.tolist()}")
+        return {"tokens": res.tokens.tolist()}
+
+    served = RRTOServedLM(
+        cfg,
+        system=args.system,
+        environment=args.environment,
+        bucket_len=args.prompt_len + args.tokens,
+        batch=args.batch,
+        seed=args.seed,
+    )
+    res = served.generate(prompt, args.tokens)
+    hist = served.session.history
+    print(f"[serve] {args.system} generation: {res.tokens.tolist()}")
+    print(f"[serve] RPCs/token: first={hist[0].rpcs} last={hist[-1].rpcs}; "
+          f"mode={served.session.client.mode}; "
+          f"latency/token last={hist[-1].wall_seconds*1e3:.2f} ms")
+    return {
+        "tokens": res.tokens.tolist(),
+        "rpcs_first": hist[0].rpcs,
+        "rpcs_last": hist[-1].rpcs,
+        "mode": served.session.client.mode,
+    }
+
+
+if __name__ == "__main__":
+    main()

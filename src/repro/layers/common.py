@@ -1,0 +1,42 @@
+"""Shared layer utilities: initializers, dense application, dtype policy."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Dtype = jnp.dtype
+
+
+def dense_init(key, in_dim: int, out_dims, dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init, shape (in_dim, *out_dims)."""
+    if isinstance(out_dims, int):
+        out_dims = (out_dims,)
+    shape = (in_dim, *out_dims)
+    std = in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def stacked_init(key, n: int, initializer, *args) -> jnp.ndarray:
+    """vmap an initializer over a leading layer axis (for scan stacks)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: initializer(k, *args))(keys)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x (..., in) @ w (in, *out) -> (..., *out), f32 accumulation."""
+    out_shape = x.shape[:-1] + w.shape[1:]
+    y = jax.lax.dot_general(
+        x,
+        w.reshape(w.shape[0], -1),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return y.reshape(out_shape).astype(x.dtype)
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return (n + m - 1) // m * m

@@ -1,0 +1,168 @@
+"""Mamba2 block (selective state-space duality) built on the SSD scan kernel.
+
+Block: in_proj -> (z | xBC | dt), short causal depthwise conv over xBC,
+SiLU, SSD scan over (x, dt, A, B, C), gated RMSNorm, out_proj.
+Decode keeps a (conv_state, ssm_state) pair per layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssm_scan import ssm_scan, ssm_step
+from repro.layers.common import dense, dense_init
+
+D_CONV = 4
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    n_groups = cfg.ssm_groups
+    conv_dim = d_inner + 2 * n_groups * cfg.ssm_state
+    return d_inner, n_heads, n_groups, conv_dim
+
+
+def mamba2_init(key, cfg, dtype) -> Dict[str, Any]:
+    kin, kconv, kout, kdt, ka = jax.random.split(key, 5)
+    d = cfg.d_model
+    di, nh, ng, cdim = _dims(cfg)
+    in_dim = 2 * di + 2 * ng * cfg.ssm_state + nh
+    return {
+        "in_proj": dense_init(kin, d, (in_dim,), dtype),
+        "conv_w": (
+            jax.random.normal(kconv, (D_CONV, cdim), jnp.float32) * 0.2
+        ).astype(dtype),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(kout, di, (d,), dtype),
+    }
+
+
+def mamba2_specs(cfg) -> Dict[str, Any]:
+    return {
+        "in_proj": P(None, "tp"),
+        "conv_w": P(None, "tp"),
+        "conv_b": P("tp"),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm": P("tp"),
+        "out_proj": P("tp", None),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d: xbc (B,S,C), w (K,C)."""
+    bsz, s, c = xbc.shape
+    pad = jnp.pad(xbc, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad,
+        w[:, None, :].astype(xbc.dtype),          # (K, 1, C) HWIO-ish
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=c,
+    )
+    return out + b.astype(xbc.dtype)
+
+
+def _split_proj(p, x, cfg):
+    di, nh, ng, cdim = _dims(cfg)
+    zxbcdt = dense(x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + cdim], axis=-1)
+    return z, xbc, dt, (di, nh, ng, cdim)
+
+
+def mamba2_forward(
+    p: Dict[str, Any], x: jnp.ndarray, cfg, *, return_state: bool = False
+):
+    b, s, _ = x.shape
+    z, xbc_pre, dt, (di, nh, ng, cdim) = _split_proj(p, x, cfg)
+    xbc = jax.nn.silu(
+        _causal_conv(xbc_pre, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + ng * cfg.ssm_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_final = ssm_scan(
+        xs.reshape(b, s, nh, cfg.ssm_head_dim),
+        dt,
+        A,
+        Bm.reshape(b, s, ng, cfg.ssm_state),
+        Cm.reshape(b, s, ng, cfg.ssm_state),
+        p["D"],
+        chunk=cfg.ssm_chunk,
+    )
+    y = y.reshape(b, s, di)
+    y = rmsnorm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+        p["norm"],
+        eps=cfg.norm_eps,
+    )
+    out = dense(y, p["out_proj"])
+    if return_state:
+        state = {
+            "conv": xbc_pre[:, -(D_CONV - 1):, :],
+            "ssm": h_final,  # (B, H, N, P)
+        }
+        return out, state
+    return out
+
+
+def init_mamba2_state(cfg, batch: int, dtype) -> Dict[str, jnp.ndarray]:
+    di, nh, ng, cdim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, D_CONV - 1, cdim), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba2_state_specs(cfg) -> Dict[str, Any]:
+    return {"conv": P("dp", None, "tp"), "ssm": P("dp", "tp", None, None)}
+
+
+def mamba2_decode_step(
+    p: Dict[str, Any],
+    x: jnp.ndarray,                     # (B, 1, D)
+    state: Dict[str, jnp.ndarray],
+    cfg,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    b = x.shape[0]
+    z, xbc, dt, (di, nh, ng, cdim) = _split_proj(p, x, cfg)
+    # conv state update: shift in the new column
+    window = jnp.concatenate([state["conv"], xbc], axis=1)      # (B, K, C)
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )
+    xbc_t = jax.nn.silu(conv_out).astype(x.dtype)               # (B, C)
+    xs, Bm, Cm = jnp.split(xbc_t, [di, di + ng * cfg.ssm_state], axis=-1)
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_new = ssm_step(
+        xs.reshape(b, nh, cfg.ssm_head_dim),
+        dt_t,
+        A,
+        Bm.reshape(b, ng, cfg.ssm_state),
+        Cm.reshape(b, ng, cfg.ssm_state),
+        p["D"],
+        state["ssm"],
+    )
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+        p["norm"],
+        eps=cfg.norm_eps,
+    )
+    out = dense(y, p["out_proj"])
+    return out, {"conv": window[:, 1:], "ssm": ssm_new}

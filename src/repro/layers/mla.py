@@ -1,0 +1,161 @@
+"""Multi-head Latent Attention (MLA, DeepSeek-V2 / MiniCPM3).
+
+KV is compressed into a low-rank latent c_kv (kv_lora) plus one shared RoPE
+key head; the decode cache stores only (c_kv, k_rope) — ~(kv_lora + rope) per
+position instead of 2 * H * d_head.
+
+* train/prefill: latents are expanded to per-head K/V and run through the
+  flash kernel (V is zero-padded from v_head_dim up to the qk head dim —
+  documented compute overhead, keeps a single fused kernel path);
+* decode: the *absorbed* form — W^UK is folded into the query and W^UV into
+  the output so attention runs directly in latent space, which is the whole
+  point of MLA at decode time.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.layers.common import dense, dense_init
+from repro.layers.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg, dtype) -> Dict[str, Any]:
+    kqa, kqb, kkva, kkvb, ko = jax.random.split(key, 5)
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.nope_head_dim + cfg.rope_head_dim
+    return {
+        "wq_a": dense_init(kqa, d, (cfg.q_lora,), dtype),
+        "q_a_norm": jnp.ones((cfg.q_lora,), dtype),
+        "wq_b": dense_init(kqb, cfg.q_lora, (h * qk,), dtype),
+        "wkv_a": dense_init(kkva, d, (cfg.kv_lora + cfg.rope_head_dim,), dtype),
+        "kv_a_norm": jnp.ones((cfg.kv_lora,), dtype),
+        "wkv_b": dense_init(
+            kkvb, cfg.kv_lora, (h * (cfg.nope_head_dim + cfg.v_head_dim),), dtype
+        ),
+        "wo": dense_init(ko, h * cfg.v_head_dim, (d,), dtype),
+    }
+
+
+def mla_specs(cfg) -> Dict[str, Any]:
+    return {
+        "wq_a": P(None, None),
+        "q_a_norm": P(None),
+        "wq_b": P(None, "tp"),
+        "wkv_a": P(None, None),
+        "kv_a_norm": P(None),
+        "wkv_b": P(None, "tp"),
+        "wo": P("tp", None),
+    }
+
+
+def _queries(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = dense(rmsnorm(dense(x, p["wq_a"]), p["q_a_norm"], eps=cfg.norm_eps), p["wq_b"])
+    q = q.reshape(b, s, h, cfg.nope_head_dim + cfg.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, x, cfg, positions):
+    b, s, _ = x.shape
+    kv_a = dense(x, p["wkv_a"])
+    c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_a_norm"], eps=cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope  # (B,S,kv_lora), (B,S,rope)
+
+
+def mla_forward(
+    p: Dict[str, Any],
+    x: jnp.ndarray,
+    cfg,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    return_kv: bool = False,
+):
+    """Train/prefill: expand latents to per-head K/V, flash attention."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latents(p, x, cfg, positions)
+
+    kv = dense(c_kv, p["wkv_b"]).reshape(
+        b, s, h, cfg.nope_head_dim + cfg.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [cfg.nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.rope_head_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qk_dim = cfg.nope_head_dim + cfg.rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - cfg.v_head_dim)))
+    out = flash_attention(q, k, v_pad, causal=True)
+    out = out[..., : cfg.v_head_dim].reshape(b, s, -1)
+    out = dense(out, p["wo"])
+    if return_kv:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_cache_specs(cfg) -> Dict[str, Any]:
+    return {"c_kv": P(None, "dp", None), "k_rope": P(None, "dp", None)}
+
+
+def mla_decode_step(
+    p: Dict[str, Any],
+    x: jnp.ndarray,                   # (B, 1, D)
+    cache: Dict[str, jnp.ndarray],
+    pos: jnp.ndarray,                 # scalar current length
+    cfg,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Absorbed-matrix decode: attention in latent space."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    q_nope, q_rope = _queries(p, x, cfg, positions)      # (B,1,H,·)
+    c_kv_new, k_rope_new = _latents(p, x, cfg, positions)
+
+    c_cache = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new, (0, pos, 0))
+    r_cache = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new, (0, pos, 0))
+
+    # absorb W^UK into q:  q_lat[b,h,c] = sum_n q_nope[b,h,n] * W_k[c,h,n]
+    w_kv_b = p["wkv_b"].reshape(cfg.kv_lora, h, cfg.nope_head_dim + cfg.v_head_dim)
+    w_k = w_kv_b[:, :, : cfg.nope_head_dim]              # (C, H, N)
+    w_v = w_kv_b[:, :, cfg.nope_head_dim :]              # (C, H, V)
+    q_lat = jnp.einsum("bhn,chn->bhc", q_nope[:, 0], w_k)
+
+    s_len = c_cache.shape[1]
+    scale = 1.0 / float(cfg.nope_head_dim + cfg.rope_head_dim) ** 0.5
+    scores = (
+        jnp.einsum("bhc,bsc->bhs", q_lat.astype(jnp.float32), c_cache.astype(jnp.float32))
+        + jnp.einsum(
+            "bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32), r_cache.astype(jnp.float32)
+        )
+    ) * scale
+    valid = jnp.arange(s_len)[None, :] < (pos + 1)
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsc->bhc", probs, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bhc,chv->bhv", o_lat, w_v.astype(jnp.float32))
+    out = dense(out.reshape(b, 1, -1).astype(x.dtype), p["wo"])
+    return out, {"c_kv": c_cache, "k_rope": r_cache}

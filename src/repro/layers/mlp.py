@@ -1,0 +1,33 @@
+"""Dense FFN blocks: SwiGLU (LLaMA-style) gated MLP."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.layers.common import dense, dense_init
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Dict[str, Any]:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(kg, d_model, (d_ff,), dtype),
+        "w_up": dense_init(ku, d_model, (d_ff,), dtype),
+        "w_down": dense_init(kd, d_ff, (d_model,), dtype),
+    }
+
+
+def mlp_specs() -> Dict[str, Any]:
+    return {
+        "w_gate": P(None, "tp"),
+        "w_up": P(None, "tp"),
+        "w_down": P("tp", None),
+    }
+
+
+def mlp_apply(p: Dict[str, Any], x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(dense(x, p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    u = dense(x, p["w_up"])
+    return dense(g * u, p["w_down"])

@@ -1,0 +1,28 @@
+"""Rotary position embeddings (RoPE), position-indexed so the same code path
+serves training (positions = arange), prefill (offset arange) and decode
+(scalar position per sequence)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies (d_head/2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray,          # (B, S, H, D)
+    positions: jnp.ndarray,  # (B, S) int32
+    theta: float = 1e6,
+) -> jnp.ndarray:
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                # (D/2,)
+    angles = positions.astype(jnp.float32)[..., None] * inv   # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,250 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel via the gated scan
+kernel) and sLSTM (scalar memory, recurrent over time).
+
+mLSTM maps exactly onto the gated linear recurrence:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T          (matrix state)
+    n_t = f_t n_{t-1} + i_t k_t                (normalizer state)
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with log-decay = log sigmoid(f̃) and input scale i_t = exp(min(ĩ, cap)).
+The normalizer rides along as an extra value column (v' = [v | 1]), so one
+scan produces both C_t q_t and n_t . q_t.  The input-gate exponent is capped
+instead of carrying the xLSTM running-max stabilizer across chunks — a
+documented simplification (DESIGN.md) that keeps the recurrence chunkable.
+
+sLSTM keeps per-head scalar state (c, n, m) with the exponential-gating
+stabilizer m_t = max(f̃ + m_{t-1}, ĩ) and head-wise recurrent gate weights;
+it scans over time (inherently sequential — the paper gives no parallel
+form).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssm_scan import gated_scan, gated_step
+from repro.layers.common import dense, dense_init
+
+I_GATE_CAP = 8.0
+UP_FACTOR = 2
+
+
+def _mdims(cfg):
+    di = UP_FACTOR * cfg.d_model
+    nh = cfg.n_heads
+    dh = di // nh
+    return di, nh, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg, dtype) -> Dict[str, Any]:
+    kup, kq, kk, kv, kg, kdown = jax.random.split(key, 6)
+    d = cfg.d_model
+    di, nh, dh = _mdims(cfg)
+    return {
+        "up_proj": dense_init(kup, d, (2 * di,), dtype),       # x_in | z gate
+        # block-diagonal per-head projections (xLSTM design): (NH, DH, DH)
+        "wq": jax.vmap(lambda k_: dense_init(k_, dh, (dh,), dtype))(
+            jax.random.split(kq, nh)
+        ),
+        "wk": jax.vmap(lambda k_: dense_init(k_, dh, (dh,), dtype))(
+            jax.random.split(kk, nh)
+        ),
+        "wv": jax.vmap(lambda k_: dense_init(k_, dh, (dh,), dtype))(
+            jax.random.split(kv, nh)
+        ),
+        "w_gates": dense_init(kg, di, (2 * nh,), jnp.float32),  # ĩ | f̃ per head
+        "norm": jnp.ones((di,), dtype),
+        "down_proj": dense_init(kdown, di, (d,), dtype),
+    }
+
+
+def mlstm_specs(cfg) -> Dict[str, Any]:
+    return {
+        "up_proj": P(None, "tp"),
+        "wq": P(None, None, "tp"),
+        "wk": P(None, None, "tp"),
+        "wv": P(None, None, "tp"),
+        "w_gates": P(None, None),
+        "norm": P("tp"),
+        "down_proj": P("tp", None),
+    }
+
+
+def _mlstm_qkvg(p, x, cfg):
+    b, s, _ = x.shape
+    di, nh, dh = _mdims(cfg)
+    up = dense(x, p["up_proj"])
+    x_in, z = jnp.split(up, 2, axis=-1)
+    xh = x_in.reshape(b, s, nh, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"]).astype(x.dtype)
+    k = (jnp.einsum("bshd,hde->bshe", xh, p["wk"]) / float(dh) ** 0.5).astype(x.dtype)
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"]).astype(x.dtype)
+    gates = dense(x_in.astype(jnp.float32), p["w_gates"])
+    i_t, f_t = jnp.split(gates, 2, axis=-1)                 # (B,S,NH)
+    log_decay = jax.nn.log_sigmoid(f_t)
+    in_scale = jnp.exp(jnp.minimum(i_t, I_GATE_CAP))
+    return q, k, v, log_decay, in_scale, z, (di, nh, dh)
+
+
+def mlstm_forward(
+    p: Dict[str, Any], x: jnp.ndarray, cfg, *, return_state: bool = False
+):
+    b, s, _ = x.shape
+    q, k, v, ld, gi, z, (di, nh, dh) = _mlstm_qkvg(p, x, cfg)
+    ones = jnp.ones((b, s, nh, 1), v.dtype)
+    v_aug = jnp.concatenate([v, ones], axis=-1)             # (B,S,NH,DH+1)
+    y_aug, h_final = gated_scan(v_aug, ld, gi, k, q, None, chunk=cfg.ssm_chunk)
+    y, nq = y_aug[..., :dh], y_aug[..., dh:]
+    y = y / jnp.maximum(jnp.abs(nq), 1.0)
+    y = y.reshape(b, s, di)
+    y = rmsnorm(y, p["norm"], eps=cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(y, p["down_proj"])
+    if return_state:
+        return out, h_final
+    return out
+
+
+def init_mlstm_state(cfg, batch: int) -> jnp.ndarray:
+    di, nh, dh = _mdims(cfg)
+    # state (B, NH, N=dh, P=dh+1): matrix memory + normalizer column
+    return jnp.zeros((batch, nh, dh, dh + 1), jnp.float32)
+
+
+def mlstm_state_specs(cfg, batch: int = 0, dp_size: int = 16):
+    # matrix memory (B, NH, DH, DH+1): shard batch when it fills dp, else the
+    # key dim; head counts are small (4) so never sharded over tp=16
+    if batch >= dp_size:
+        return P("dp", None, "tp", None)
+    return P(None, None, "tp", None)
+
+
+def mlstm_decode_step(
+    p: Dict[str, Any], x: jnp.ndarray, state: jnp.ndarray, cfg
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b = x.shape[0]
+    q, k, v, ld, gi, z, (di, nh, dh) = _mlstm_qkvg(p, x, cfg)
+    v_aug = jnp.concatenate([v, jnp.ones((b, 1, nh, 1), v.dtype)], axis=-1)
+    y_aug, state_new = gated_step(
+        v_aug[:, 0], ld[:, 0], gi[:, 0], k[:, 0], q[:, 0], None, state
+    )
+    y, nq = y_aug[..., :dh], y_aug[..., dh:]
+    y = (y / jnp.maximum(jnp.abs(nq), 1.0)).reshape(b, 1, di)
+    y = rmsnorm(y, p["norm"], eps=cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return dense(y, p["down_proj"]), state_new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype) -> Dict[str, Any]:
+    kw, kr, kup, kdown = jax.random.split(key, 4)
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    return {
+        # input weights for (z, i, f, o) gates
+        "w_in": dense_init(kw, d, (4 * d,), dtype),
+        # head-wise recurrent weights (NH, DH, 4*DH)
+        "r": (
+            jax.random.normal(kr, (nh, dh, 4 * dh), jnp.float32) * (dh ** -0.5)
+        ).astype(dtype),
+        "norm": jnp.ones((d,), dtype),
+        "up_proj": dense_init(kup, d, (2 * cfg.slstm_ff,), dtype),
+        "down_proj": dense_init(kdown, cfg.slstm_ff, (d,), dtype),
+    }
+
+
+def slstm_specs(cfg) -> Dict[str, Any]:
+    return {
+        "w_in": P(None, "tp"),
+        "r": P("tp", None, None),
+        "norm": P(None),
+        "up_proj": P(None, "tp"),
+        "down_proj": P("tp", None),
+    }
+
+
+def _slstm_cell(gates_x, h_prev, state, r):
+    """One sLSTM time step.  gates_x: (B,NH,DH,4), h_prev (B,NH,DH),
+    state = (c, n, m) each (B,NH,DH)."""
+    c, n, m = state
+    rec = jnp.einsum("bhd,hde->bhe", h_prev.astype(jnp.float32), r.astype(jnp.float32))
+    rec = rec.reshape(*h_prev.shape[:2], -1, 4)
+    g = gates_x + rec
+    z_t = jnp.tanh(g[..., 0])
+    i_t = g[..., 1]
+    f_t = g[..., 2]
+    o_t = jax.nn.sigmoid(g[..., 3])
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, (c_new, n_new, m_new)
+
+
+def slstm_forward(
+    p: Dict[str, Any], x: jnp.ndarray, cfg, *, return_state: bool = False
+):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    gates_x = dense(x.astype(jnp.float32), p["w_in"]).reshape(b, s, nh, dh, 4)
+
+    def step(carry, g_t):
+        h_prev, state = carry
+        h_new, state_new = _slstm_cell(g_t, h_prev, state, p["r"])
+        return (h_new, state_new), h_new
+
+    h0 = jnp.zeros((b, nh, dh), jnp.float32)
+    st0 = (h0, h0, jnp.full((b, nh, dh), -1e30, jnp.float32))
+    (h_last, st_last), hs = jax.lax.scan(step, (h0, st0), jnp.moveaxis(gates_x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], eps=cfg.norm_eps)
+    up = dense(y, p["up_proj"])
+    u, g = jnp.split(up, 2, axis=-1)
+    out = dense(u * jax.nn.sigmoid(g.astype(jnp.float32)).astype(x.dtype), p["down_proj"])
+    if return_state:
+        return out, (h_last, *st_last)
+    return out
+
+
+def init_slstm_state(cfg, batch: int) -> Tuple[jnp.ndarray, ...]:
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return (z, z, z, jnp.full((batch, nh, dh), -1e30, jnp.float32))
+
+
+def slstm_state_specs(cfg, batch: int = 0, dp_size: int = 16):
+    z = P("dp" if batch >= dp_size else None, None, None)
+    return (z, z, z, z)
+
+
+def slstm_decode_step(
+    p: Dict[str, Any], x: jnp.ndarray, state, cfg
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    b, _, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    h_prev, c, n, m = state
+    gates_x = dense(x[:, 0].astype(jnp.float32), p["w_in"]).reshape(b, nh, dh, 4)
+    h_new, (c2, n2, m2) = _slstm_cell(gates_x, h_prev, (c, n, m), p["r"])
+    y = h_new.reshape(b, 1, d).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], eps=cfg.norm_eps)
+    up = dense(y, p["up_proj"])
+    u, g = jnp.split(up, 2, axis=-1)
+    out = dense(u * jax.nn.sigmoid(g.astype(jnp.float32)).astype(x.dtype), p["down_proj"])
+    return out, (h_new, c2, n2, m2)

@@ -1,0 +1,304 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356), transformer backbone
+only: the conv audio frontend is a STUB — ``input_specs`` feeds precomputed
+frame embeddings (B, enc_seq, D), per the assignment rules for [audio] archs.
+
+Encoder: bidirectional self-attention over frames (learned positions).
+Decoder: causal self-attention + cross-attention to encoder output.
+Norm layers use RMSNorm for substrate uniformity (documented deviation from
+Whisper's LayerNorm; structurally identical cost).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import maybe_shard
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.layers.attention import (
+    attn_decode_step,
+    attn_forward,
+    attn_init,
+    attn_specs,
+    init_kv_cache,
+)
+from repro.layers.common import dense, dense_init, stacked_init
+from repro.layers.mlp import mlp_apply, mlp_init, mlp_specs
+
+
+# -- cross attention ---------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    return {
+        "wq": dense_init(kq, d, (h * dh,), dtype),
+        "wk": dense_init(kk, d, (h * dh,), dtype),
+        "wv": dense_init(kv, d, (h * dh,), dtype),
+        "wo": dense_init(ko, h * dh, (d,), dtype),
+    }
+
+
+def cross_attn_specs():
+    return {"wq": P(None, "tp"), "wk": P(None, "tp"), "wv": P(None, "tp"), "wo": P("tp", None)}
+
+
+def cross_attn_apply(p, x, enc_kv, cfg):
+    """x (B,Sd,D) queries against precomputed encoder K/V (B,Se,H,dh)."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = dense(x, p["wq"]).reshape(b, s, h, dh)
+    out = flash_attention(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return dense(out.reshape(b, s, -1), p["wo"])
+
+
+def cross_kv(p, enc_out, cfg):
+    b, se, _ = enc_out.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    return {
+        "k": dense(enc_out, p["wk"]).reshape(b, se, h, dh),
+        "v": dense(enc_out, p["wv"]).reshape(b, se, h, dh),
+    }
+
+
+# -- layers ------------------------------------------------------------------
+
+def _enc_layer_init(key, cfg, dtype):
+    ka, kf = jax.random.split(key)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_init(ka, cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_init(kf, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _enc_layer_specs(cfg):
+    return {
+        "attn_norm": P(None),
+        "attn": attn_specs(cfg),
+        "mlp_norm": P(None),
+        "mlp": mlp_specs(),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    ka, kc, kf = jax.random.split(key, 3)
+    return {
+        "self_norm": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": attn_init(ka, cfg, dtype),
+        "cross_norm": jnp.ones((cfg.d_model,), dtype),
+        "cross_attn": cross_attn_init(kc, cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp": mlp_init(kf, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_specs(cfg):
+    return {
+        "self_norm": P(None),
+        "self_attn": attn_specs(cfg),
+        "cross_norm": P(None),
+        "cross_attn": cross_attn_specs(),
+        "mlp_norm": P(None),
+        "mlp": mlp_specs(),
+    }
+
+
+# -- model -------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kpe, kpd, kenc, kdec, kh = jax.random.split(key, 6)
+    return {
+        "embed": (
+            jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5
+        ).astype(dtype),
+        "enc_pos": (
+            jax.random.normal(kpe, (cfg.enc_seq, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dtype),
+        "dec_pos": (
+            jax.random.normal(kpd, (cfg.max_target_positions, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dtype),
+        "encoder": stacked_init(kenc, cfg.enc_layers, _enc_layer_init, cfg, dtype),
+        "decoder": stacked_init(kdec, cfg.dec_layers, _dec_layer_init, cfg, dtype),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(kh, cfg.d_model, (cfg.padded_vocab,), dtype),
+    }
+
+
+def param_specs(cfg: ArchConfig):
+    enc = jax.tree.map(
+        lambda s: P(None, *s), _enc_layer_specs(cfg), is_leaf=lambda s: isinstance(s, P)
+    )
+    dec = jax.tree.map(
+        lambda s: P(None, *s), _dec_layer_specs(cfg), is_leaf=lambda s: isinstance(s, P)
+    )
+    return {
+        "embed": P("tp", None),
+        "enc_pos": P(None, None),
+        "dec_pos": P(None, None),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_norm": P(None),
+        "final_norm": P(None),
+        "lm_head": P(None, "tp"),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: (B, enc_seq, D) precomputed embeddings (conv frontend stub).
+    cfg.encoder_sp: sequence parallelism — activations sharded over "tp" on
+    the frame dim (requires enc_seq % tp == 0, e.g. the padded 1504), so the
+    MLP/norm work splits across the model axis with only the attention K/V
+    gathered per layer (EXPERIMENTS.md §Perf, whisper cell)."""
+    h = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None]
+    act_spec = P("dp", "tp", None) if cfg.encoder_sp else P("dp", None, None)
+    h = maybe_shard(h, act_spec)
+
+    def one(x, lp):
+        hn = rmsnorm(x, lp["attn_norm"], eps=cfg.norm_eps)
+        x = x + attn_forward(lp["attn"], hn, cfg, causal=False)
+        x = maybe_shard(x, act_spec)
+        hn = rmsnorm(x, lp["mlp_norm"], eps=cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], hn)
+        return maybe_shard(x, act_spec), None
+
+    h, _ = jax.lax.scan(one, h, params["encoder"])
+    return rmsnorm(h, params["enc_norm"], eps=cfg.norm_eps)
+
+
+def decode_train(params, enc_out, tokens, cfg: ArchConfig,
+                 return_hidden: bool = False):
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][None, :s]
+
+    def one(x, lp):
+        hn = rmsnorm(x, lp["self_norm"], eps=cfg.norm_eps)
+        x = x + attn_forward(lp["self_attn"], hn, cfg, causal=True)
+        hn = rmsnorm(x, lp["cross_norm"], eps=cfg.norm_eps)
+        kv = cross_kv(lp["cross_attn"], enc_out, cfg)
+        x = x + cross_attn_apply(lp["cross_attn"], hn, kv, cfg)
+        hn = rmsnorm(x, lp["mlp_norm"], eps=cfg.norm_eps)
+        return x + mlp_apply(lp["mlp"], hn), None
+
+    h, _ = jax.lax.scan(one, h, params["decoder"])
+    if return_hidden:
+        return h
+    h = rmsnorm(h, params["final_norm"], eps=cfg.norm_eps)
+    return dense(h, params["lm_head"]).astype(jnp.float32)
+
+
+def head_weights(params, cfg: ArchConfig):
+    return params["lm_head"]
+
+
+def forward(params, batch, cfg: ArchConfig, *, remat: bool = False,
+            return_hidden: bool = False):
+    enc_out = encode(params, batch["frames"], cfg)
+    return decode_train(params, enc_out, batch["tokens"], cfg,
+                        return_hidden=return_hidden)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < cfg.vocab)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# -- serving ------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    max_seq = min(max_seq, cfg.max_target_positions)
+    dtype = jnp.dtype(cfg.dtype)
+    self_kv = init_kv_cache(cfg, batch, max_seq, dtype)
+    one_cross = {
+        "k": jnp.zeros((batch, cfg.enc_seq, cfg.n_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, cfg.enc_seq, cfg.n_heads, cfg.d_head), dtype),
+    }
+    return {
+        "self": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.dec_layers, *x.shape)), self_kv
+        ),
+        "cross": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.dec_layers, *x.shape)), one_cross
+        ),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, dp_size: int = 16):
+    from repro.models.lm import kv_spec
+
+    spec = kv_spec(cfg, batch, dp_size)
+    kv = {"k": spec, "v": spec}
+    return {"self": kv, "cross": kv}
+
+
+def prefill(params, batch, cfg: ArchConfig, max_seq: int):
+    """Encode frames, fill cross KV per decoder layer, run the decoder prompt
+    (BOS-style short prompt) to fill the self cache."""
+    max_seq = min(max_seq, cfg.max_target_positions)
+    enc_out = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0) + params["dec_pos"][None, :s]
+    dtype = jnp.dtype(cfg.dtype)
+
+    def one(x, lp):
+        hn = rmsnorm(x, lp["self_norm"], eps=cfg.norm_eps)
+        a, (k, v) = attn_forward(lp["self_attn"], hn, cfg, causal=True, return_kv=True)
+        x = x + a
+        pad = max_seq - s
+        self_kv = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype),
+        }
+        hn = rmsnorm(x, lp["cross_norm"], eps=cfg.norm_eps)
+        ckv = cross_kv(lp["cross_attn"], enc_out, cfg)
+        x = x + cross_attn_apply(lp["cross_attn"], hn, ckv, cfg)
+        hn = rmsnorm(x, lp["mlp_norm"], eps=cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], hn)
+        return x, {
+            "self": self_kv,
+            "cross": jax.tree.map(lambda t: t.astype(dtype), ckv),
+        }
+
+    h, cache = jax.lax.scan(one, h, params["decoder"])
+    h = rmsnorm(h[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return dense(h, params["lm_head"]).astype(jnp.float32), cache
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig):
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)[None]
+
+    def one(x, scanned):
+        lp, lc = scanned
+        hn = rmsnorm(x, lp["self_norm"], eps=cfg.norm_eps)
+        a, self_new = attn_decode_step(lp["self_attn"], hn, lc["self"], pos, cfg)
+        x = x + a
+        hn = rmsnorm(x, lp["cross_norm"], eps=cfg.norm_eps)
+        # cross attention against the static encoder KV
+        q = dense(hn, lp["cross_attn"]["wq"]).reshape(b, cfg.n_heads, cfg.d_head)
+        enc_len = jnp.full((b,), cfg.enc_seq, jnp.int32)
+        c = decode_attention(q, lc["cross"]["k"], lc["cross"]["v"], enc_len)
+        x = x + dense(c.reshape(b, 1, -1), lp["cross_attn"]["wo"])
+        hn = rmsnorm(x, lp["mlp_norm"], eps=cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], hn)
+        return x, {"self": self_new, "cross": lc["cross"]}
+
+    x, new_cache = jax.lax.scan(one, x, (params["decoder"], cache))
+    h = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    return dense(h, params["lm_head"]).astype(jnp.float32), new_cache

@@ -1,0 +1,299 @@
+"""Zamba2-style hybrid LM: a Mamba2 backbone with ONE shared attention+MLP
+block applied every ``attn_every`` Mamba blocks (the Zamba2 weight-sharing
+pattern, arXiv:2411.15242).
+
+The Mamba stack scans in groups of ``attn_every``; the shared block (single
+param set, reused at every application site) runs between groups.  Leftover
+layers (n_layers % attn_every) form a final partial group — documented in
+DESIGN.md as the grouping convention.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import maybe_shard
+from repro.kernels.rmsnorm import rmsnorm
+from repro.layers.attention import (
+    attn_decode_step,
+    attn_forward,
+    attn_init,
+    attn_specs,
+    init_kv_cache,
+)
+from repro.layers.common import dense, dense_init, stacked_init
+from repro.layers.mamba2 import (
+    init_mamba2_state,
+    mamba2_decode_step,
+    mamba2_forward,
+    mamba2_init,
+    mamba2_specs,
+    mamba2_state_specs,
+)
+from repro.layers.mlp import mlp_apply, mlp_init, mlp_specs
+
+
+def _groups(cfg: ArchConfig) -> Tuple[int, int]:
+    k = cfg.attn_every
+    return cfg.n_layers // k, cfg.n_layers % k
+
+
+def _mamba_layer_init(key, cfg, dtype):
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "mamba": mamba2_init(key, cfg, dtype),
+    }
+
+
+def _mamba_layer_specs(cfg):
+    return {"norm": P(None), "mamba": mamba2_specs(cfg)}
+
+
+def init_params(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, km, kt, ka, kf, kh = jax.random.split(key, 6)
+    n_full, n_rest = _groups(cfg)
+    p = {
+        "embed": (
+            jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5
+        ).astype(dtype),
+        # (n_full, attn_every, ...) stacked mamba layers for scanned groups
+        "mamba_groups": stacked_init(
+            km,
+            n_full,
+            lambda k_, cfg_, dt: stacked_init(
+                k_, cfg.attn_every, _mamba_layer_init, cfg_, dt
+            ),
+            cfg,
+            dtype,
+        ),
+        # the single SHARED attention block (Zamba2 weight sharing)
+        "shared_attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "shared_attn": attn_init(ka, cfg, dtype),
+        "shared_mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "shared_mlp": mlp_init(kf, cfg.d_model, cfg.d_ff, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(kh, cfg.d_model, (cfg.padded_vocab,), dtype),
+    }
+    if n_rest:
+        p["mamba_tail"] = stacked_init(kt, n_rest, _mamba_layer_init, cfg, dtype)
+    return p
+
+
+def param_specs(cfg: ArchConfig):
+    n_full, n_rest = _groups(cfg)
+    layer = _mamba_layer_specs(cfg)
+    grp = jax.tree.map(
+        lambda s: P(None, None, *s), layer, is_leaf=lambda s: isinstance(s, P)
+    )
+    specs = {
+        "embed": P("tp", None),
+        "mamba_groups": grp,
+        "shared_attn_norm": P(None),
+        "shared_attn": attn_specs(cfg),
+        "shared_mlp_norm": P(None),
+        "shared_mlp": mlp_specs(),
+        "final_norm": P(None),
+        "lm_head": P(None, "tp"),
+    }
+    if n_rest:
+        specs["mamba_tail"] = jax.tree.map(
+            lambda s: P(None, *s), layer, is_leaf=lambda s: isinstance(s, P)
+        )
+    return specs
+
+
+def _shared_block(params, x, cfg, positions):
+    h = rmsnorm(x, params["shared_attn_norm"], eps=cfg.norm_eps)
+    x = x + attn_forward(params["shared_attn"], h, cfg, positions=positions)
+    h = rmsnorm(x, params["shared_mlp_norm"], eps=cfg.norm_eps)
+    return x + mlp_apply(params["shared_mlp"], h)
+
+
+def head_weights(params, cfg: ArchConfig):
+    return params["lm_head"]
+
+
+def forward(params, batch, cfg: ArchConfig, *, remat: bool = False,
+            return_hidden: bool = False):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = maybe_shard(h, P("dp", None, None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def mamba_group(x, gp):
+        def one(x_, lp):
+            hn = rmsnorm(x_, lp["norm"], eps=cfg.norm_eps)
+            return x_ + mamba2_forward(lp["mamba"], hn, cfg), None
+
+        if remat:
+            x, _ = jax.lax.scan(jax.checkpoint(one, prevent_cse=False), x, gp)
+        else:
+            x, _ = jax.lax.scan(one, x, gp)
+        return x
+
+    n_full, n_rest = _groups(cfg)
+
+    def group_step(x, gp):
+        x = mamba_group(x, gp)
+        x = _shared_block(params, x, cfg, positions)
+        return x, None
+
+    h, _ = jax.lax.scan(group_step, h, params["mamba_groups"])
+    if n_rest:
+        h = mamba_group(h, params["mamba_tail"])
+    if return_hidden:
+        return h
+    h = rmsnorm(h, params["final_norm"], eps=cfg.norm_eps)
+    return dense(h, params["lm_head"]).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < cfg.vocab)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    """Decode state: per-mamba-layer (conv, ssm) + a KV cache for every
+    shared-attention application site."""
+    dtype = jnp.dtype(cfg.dtype)
+    n_full, n_rest = _groups(cfg)
+    one_state = init_mamba2_state(cfg, batch, dtype)
+    grp_states = jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            x[None, None], (n_full, cfg.attn_every, *x.shape)
+        ),
+        one_state,
+    )
+    kv = init_kv_cache(cfg, batch, max_seq, dtype)
+    kv_sites = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_full, *x.shape)), kv
+    )
+    cache = {"mamba_groups": grp_states, "shared_kv": kv_sites}
+    if n_rest:
+        cache["mamba_tail"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_rest, *x.shape)), one_state
+        )
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, batch: int, dp_size: int = 16):
+    n_full, n_rest = _groups(cfg)
+    st = mamba2_state_specs(cfg)
+    grp = jax.tree.map(
+        lambda s: P(None, None, *s), st, is_leaf=lambda s: isinstance(s, P)
+    )
+    from repro.models.lm import kv_spec
+
+    spec = kv_spec(cfg, batch, dp_size)
+    kv = {"k": spec, "v": spec}
+    specs = {"mamba_groups": grp, "shared_kv": kv}
+    if n_rest:
+        specs["mamba_tail"] = jax.tree.map(
+            lambda s: P(None, *s), st, is_leaf=lambda s: isinstance(s, P)
+        )
+    return specs
+
+
+def prefill(params, batch, cfg: ArchConfig, max_seq: int):
+    """Prompt processing producing decode state: Mamba states come from the
+    chunked scan's final recurrent state, attention KV from each shared-block
+    application site (padded to max_seq)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    n_full, n_rest = _groups(cfg)
+
+    def mamba_group_collect(x, gp):
+        def one(x_, lp):
+            hn = rmsnorm(x_, lp["norm"], eps=cfg.norm_eps)
+            out, st = mamba2_forward(lp["mamba"], hn, cfg, return_state=True)
+            return x_ + out, st
+
+        return jax.lax.scan(one, x, gp)
+
+    def group_step(x, gp):
+        x, states = mamba_group_collect(x, gp)
+        hn = rmsnorm(x, params["shared_attn_norm"], eps=cfg.norm_eps)
+        a, (k, v) = attn_forward(
+            params["shared_attn"], hn, cfg, positions=positions, return_kv=True
+        )
+        pad = max_seq - s
+        kv = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype),
+        }
+        x = x + a
+        hn = rmsnorm(x, params["shared_mlp_norm"], eps=cfg.norm_eps)
+        x = x + mlp_apply(params["shared_mlp"], hn)
+        return x, (states, kv)
+
+    h, (grp_states, kv_sites) = jax.lax.scan(group_step, h, params["mamba_groups"])
+    cache = {"mamba_groups": grp_states, "shared_kv": kv_sites}
+    if n_rest:
+        h, tail_states = mamba_group_collect(h, params["mamba_tail"])
+        cache["mamba_tail"] = tail_states
+    h = rmsnorm(h[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    logits = dense(h, params["lm_head"]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig):
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    n_full, n_rest = _groups(cfg)
+
+    def group_step(x, scanned):
+        gp, gstate, kv = scanned
+
+        def one(x_, layer):
+            lp, lstate = layer
+            hn = rmsnorm(x_, lp["norm"], eps=cfg.norm_eps)
+            out, new_state = mamba2_decode_step(lp["mamba"], hn, lstate, cfg)
+            return x_ + out, new_state
+
+        x, new_gstate = jax.lax.scan(one, x, (gp, gstate))
+        # shared attention block at this site
+        hn = rmsnorm(x, params["shared_attn_norm"], eps=cfg.norm_eps)
+        a, new_kv = attn_decode_step(params["shared_attn"], hn, kv, pos, cfg)
+        x = x + a
+        hn = rmsnorm(x, params["shared_mlp_norm"], eps=cfg.norm_eps)
+        x = x + mlp_apply(params["shared_mlp"], hn)
+        return x, (new_gstate, new_kv)
+
+    x, (new_groups, new_kv) = jax.lax.scan(
+        group_step,
+        x,
+        (params["mamba_groups"], cache["mamba_groups"], cache["shared_kv"]),
+    )
+    new_cache = {"mamba_groups": new_groups, "shared_kv": new_kv}
+    if n_rest:
+        def one_tail(x_, layer):
+            lp, lstate = layer
+            hn = rmsnorm(x_, lp["norm"], eps=cfg.norm_eps)
+            out, new_state = mamba2_decode_step(lp["mamba"], hn, lstate, cfg)
+            return x_ + out, new_state
+
+        x, new_tail = jax.lax.scan(
+            one_tail, x, (params["mamba_tail"], cache["mamba_tail"])
+        )
+        new_cache["mamba_tail"] = new_tail
+    h = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    logits = dense(h, params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,353 @@
+"""Generic decoder-only LM covering the dense / MoE / MLA / VLM families
+(qwen3-*, deepseek-67b, minicpm3-4b, mixtral-8x7b, llama4-maverick,
+llava-next backbone).
+
+Layers are grouped into scan "super-blocks" of ``moe_every`` layers so
+interleaved dense/MoE stacks still scan with a uniform param structure; the
+layer stack is a single ``lax.scan`` (small HLO, fast multi-pod compiles).
+
+API (shared by all model families in this repo):
+    init_params(key, cfg)            -> params pytree
+    param_specs(cfg)                 -> same-structure PartitionSpec pytree
+    forward(params, batch, cfg)      -> logits (train / prefill math)
+    loss_fn(params, batch, cfg)      -> scalar LM loss
+    init_cache(cfg, batch, max_seq)  -> decode cache pytree
+    cache_specs(cfg, batch)          -> PartitionSpec pytree for the cache
+    prefill(params, tokens, cfg)     -> (logits, cache)
+    decode_step(params, token, cache, pos, cfg) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import maybe_shard
+from repro.kernels.rmsnorm import rmsnorm
+from repro.layers.attention import (
+    attn_decode_step,
+    attn_forward,
+    attn_init,
+    attn_specs,
+    init_kv_cache,
+)
+from repro.layers.common import dense, dense_init, stacked_init
+from repro.layers.mla import (
+    init_mla_cache,
+    mla_decode_step,
+    mla_forward,
+    mla_init,
+    mla_specs,
+)
+from repro.layers.mlp import mlp_apply, mlp_init, mlp_specs
+from repro.layers.moe import moe_apply, moe_init, moe_specs
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# one layer / one super-block
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ArchConfig, moe: bool, dtype):
+    ka, kf = jax.random.split(key)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": (
+            mla_init(ka, cfg, dtype) if cfg.attn_kind == "mla" else attn_init(ka, cfg, dtype)
+        ),
+        "ffn": moe_init(kf, cfg, dtype) if moe else mlp_init(kf, cfg.d_model, cfg.d_ff, dtype),
+    }
+    return p
+
+
+def _layer_specs(cfg: ArchConfig, moe: bool):
+    return {
+        "attn_norm": P(None),
+        "mlp_norm": P(None),
+        "attn": mla_specs(cfg) if cfg.attn_kind == "mla" else attn_specs(cfg),
+        "ffn": moe_specs(cfg) if moe else mlp_specs(),
+    }
+
+
+def _layer_forward(lp, x, cfg: ArchConfig, moe: bool, positions):
+    h = rmsnorm(x, lp["attn_norm"], eps=cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        h = mla_forward(lp["attn"], h, cfg, positions=positions)
+    else:
+        h = attn_forward(lp["attn"], h, cfg, positions=positions)
+    x = x + h
+    h = rmsnorm(x, lp["mlp_norm"], eps=cfg.norm_eps)
+    h = moe_apply(lp["ffn"], h, cfg) if moe else mlp_apply(lp["ffn"], h)
+    return x + h
+
+
+def _superblock_init(key, cfg: ArchConfig, dtype):
+    """A super-block is ``moe_every`` layers: dense layers then one MoE layer
+    (or a single dense/MoE layer when moe_every == 1)."""
+    keys = jax.random.split(key, cfg.moe_every)
+    return {
+        f"sub{j}": _layer_init(keys[j], cfg, moe=cfg.moe_layer(j), dtype=dtype)
+        for j in range(cfg.moe_every)
+    }
+
+
+def _superblock_specs(cfg: ArchConfig):
+    return {
+        f"sub{j}": _layer_specs(cfg, moe=cfg.moe_layer(j))
+        for j in range(cfg.moe_every)
+    }
+
+
+def _superblock_forward(sbp, x, cfg: ArchConfig, positions):
+    for j in range(cfg.moe_every):
+        x = _layer_forward(sbp[f"sub{j}"], x, cfg, cfg.moe_layer(j), positions)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def _n_superblocks(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.moe_every == 0, (cfg.n_layers, cfg.moe_every)
+    return cfg.n_layers // cfg.moe_every
+
+
+def init_params(key, cfg: ArchConfig):
+    dtype = _dtype(cfg)
+    ke, kl, kh = jax.random.split(key, 3)
+    p = {
+        "embed": (
+            jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5
+        ).astype(dtype),
+        "blocks": stacked_init(
+            kl, _n_superblocks(cfg), _superblock_init, cfg, dtype
+        ),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kh, cfg.d_model, (cfg.padded_vocab,), dtype)
+    return p
+
+
+def param_specs(cfg: ArchConfig):
+    block = _superblock_specs(cfg)
+    # prepend the scan (layer-stack) axis to every block spec
+    block = jax.tree.map(
+        lambda s: P(None, *s), block, is_leaf=lambda s: isinstance(s, P)
+    )
+    specs = {
+        "embed": P("tp", None),
+        "blocks": block,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, "tp")
+    return specs
+
+
+def _embed(params, tokens, cfg: ArchConfig):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return h
+
+
+def head_weights(params, cfg: ArchConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def _logits(params, h, cfg: ArchConfig):
+    h = rmsnorm(h, params["final_norm"], eps=cfg.norm_eps)
+    return dense(h, head_weights(params, cfg)).astype(jnp.float32)
+
+
+def forward(
+    params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    *,
+    remat: bool = False,
+    return_hidden: bool = False,
+):
+    """Full-sequence forward.  batch: {"tokens": (B,S)[, "patches": (B,P,D)]}."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    h = _embed(params, tokens, cfg)
+    if cfg.num_patches:
+        patches = batch["patches"].astype(h.dtype)     # (B, P, D) stubbed frontend
+        h = jnp.concatenate([patches, h], axis=1)
+    s = h.shape[1]
+    h = maybe_shard(h, P("dp", None, None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    body = functools.partial(_superblock_forward, cfg=cfg, positions=positions)
+    fn = (lambda x, sbp: (body(sbp, x), None))
+    if remat:
+        fn = jax.checkpoint(fn, prevent_cse=False)
+    h, _ = jax.lax.scan(fn, h, params["blocks"])
+    if cfg.num_patches:
+        h = h[:, cfg.num_patches :]
+    if return_hidden:
+        return h
+    return _logits(params, h, cfg)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < cfg.vocab)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache + prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    dtype = _dtype(cfg)
+    n_sb = _n_superblocks(cfg)
+
+    def one(j):
+        if cfg.attn_kind == "mla":
+            return init_mla_cache(cfg, batch, max_seq, dtype)
+        return init_kv_cache(cfg, batch, max_seq, dtype)
+
+    sub = {f"sub{j}": one(j) for j in range(cfg.moe_every)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_sb, *x.shape)), sub
+    )
+
+
+def kv_spec(cfg: ArchConfig, batch: int, dp_size: int, tp_size: int = 16) -> P:
+    """KV cache (L, B, S, Hkv, Dh): batch over dp when it fills the axis,
+    else sequence over dp (SP); heads over tp when divisible, else sequence
+    over tp (sequence-parallel decode with partial-softmax combine)."""
+    b_ax = "dp" if batch >= dp_size else None
+    s_axes = [] if batch >= dp_size else ["dp"]
+    h_ax = "tp" if cfg.n_kv_heads % tp_size == 0 else None
+    if h_ax is None:
+        s_axes.append("tp")
+    s_ax = tuple(s_axes) if len(s_axes) > 1 else (s_axes[0] if s_axes else None)
+    return P(None, b_ax, s_ax, h_ax, None)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, dp_size: int = 16):
+    """Shard batch over dp when it fills the axis, else sequence (SP)."""
+    if cfg.attn_kind == "mla":
+        # latent cache (L, B, S, C): latent dim over tp, batch/seq over dp
+        b_ax = "dp" if batch >= dp_size else None
+        s_ax = None if batch >= dp_size else "dp"
+        one = {
+            "c_kv": P(None, b_ax, s_ax, "tp"),
+            "k_rope": P(None, b_ax, s_ax, "tp"),
+        }
+    else:
+        spec = kv_spec(cfg, batch, dp_size)
+        one = {"k": spec, "v": spec}
+        if cfg.kv_cache_bits == 8:
+            scale_spec = P(*spec[:-1])
+            one["ks"] = scale_spec
+            one["vs"] = scale_spec
+    return {f"sub{j}": one for j in range(cfg.moe_every)}
+
+
+def prefill(params, batch, cfg: ArchConfig, max_seq: int):
+    """Run the full prompt, return (last-position logits, filled cache)."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    h = _embed(params, tokens, cfg)
+    if cfg.num_patches:
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    s = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    dtype = _dtype(cfg)
+
+    def body(x, sbp):
+        caches = {}
+        for j in range(cfg.moe_every):
+            lp = sbp[f"sub{j}"]
+            hn = rmsnorm(x, lp["attn_norm"], eps=cfg.norm_eps)
+            if cfg.attn_kind == "mla":
+                a, (c_kv, k_rope) = mla_forward(
+                    lp["attn"], hn, cfg, positions=positions, return_kv=True
+                )
+                pad = max_seq - s
+                caches[f"sub{j}"] = {
+                    "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))).astype(dtype),
+                    "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))).astype(dtype),
+                }
+            else:
+                a, (k, v) = attn_forward(
+                    lp["attn"], hn, cfg, positions=positions, return_kv=True
+                )
+                pad = max_seq - s
+                if cfg.kv_cache_bits == 8:
+                    from repro.kernels.decode_attention import quantize_kv
+
+                    kq, ks = quantize_kv(k)
+                    vq, vs = quantize_kv(v)
+                    caches[f"sub{j}"] = {
+                        "k": jnp.pad(kq, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                        "v": jnp.pad(vq, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                        "ks": jnp.pad(ks, ((0, 0), (0, pad), (0, 0))),
+                        "vs": jnp.pad(vs, ((0, 0), (0, pad), (0, 0))),
+                    }
+                else:
+                    caches[f"sub{j}"] = {
+                        "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype),
+                        "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype),
+                    }
+            x = x + a
+            hn = rmsnorm(x, lp["mlp_norm"], eps=cfg.norm_eps)
+            hn = (
+                moe_apply(lp["ffn"], hn, cfg)
+                if cfg.moe_layer(j)
+                else mlp_apply(lp["ffn"], hn)
+            )
+            x = x + hn
+        return x, caches
+
+    h, cache = jax.lax.scan(body, h, params["blocks"])
+    logits = _logits(params, h[:, -1:], cfg)
+    return logits, cache
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig):
+    """One decode step.  token (B, 1) int32; pos scalar int32 (current len)."""
+    b = token.shape[0]
+    x = _embed(params, token, cfg)
+
+    def body(x, scanned):
+        sbp, lc = scanned
+        new_lc = {}
+        for j in range(cfg.moe_every):
+            lp = sbp[f"sub{j}"]
+            hn = rmsnorm(x, lp["attn_norm"], eps=cfg.norm_eps)
+            if cfg.attn_kind == "mla":
+                a, c_new = mla_decode_step(lp["attn"], hn, lc[f"sub{j}"], pos, cfg)
+            else:
+                a, c_new = attn_decode_step(lp["attn"], hn, lc[f"sub{j}"], pos, cfg)
+            new_lc[f"sub{j}"] = c_new
+            x = x + a
+            hn = rmsnorm(x, lp["mlp_norm"], eps=cfg.norm_eps)
+            hn = (
+                moe_apply(lp["ffn"], hn, cfg)
+                if cfg.moe_layer(j)
+                else mlp_apply(lp["ffn"], hn)
+            )
+            x = x + hn
+        return x, new_lc
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    logits = _logits(params, x, cfg)
+    return logits, new_cache

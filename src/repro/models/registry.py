@@ -1,0 +1,108 @@
+"""Model registry: maps an ArchConfig to its family module (uniform API) and
+builds ShapeDtypeStruct input specs for every (arch × assigned shape) cell.
+
+The step being lowered per shape kind:
+    train_4k     -> train_step(params, opt_state, batch)  (training/train.py)
+    prefill_32k  -> prefill(params, batch)
+    decode_32k / long_500k -> serve_step = decode_step(params, token, cache, pos)
+"""
+from __future__ import annotations
+
+import types
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.models import encdec, hybrid, lm, xlstm_lm
+
+
+def get_model(cfg: ArchConfig) -> types.ModuleType:
+    if cfg.is_encoder_decoder:
+        return encdec
+    if cfg.attn_every:
+        return hybrid
+    if cfg.slstm_every:
+        return xlstm_lm
+    return lm
+
+
+def shape_applies(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    return shape.name not in cfg.skip_shapes
+
+
+def effective_lengths(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, int]:
+    """Per-arch effective sequence lengths for a nominal shape (whisper's
+    decoder is capped at max_target_positions; its encoder is fixed 1500)."""
+    seq = shape.seq_len
+    if cfg.is_encoder_decoder:
+        dec = min(seq, cfg.max_target_positions)
+        return {"seq": dec, "enc_seq": cfg.enc_seq, "nominal": seq}
+    return {"seq": seq, "nominal": seq}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for a *training / prefill* batch."""
+    b = shape.global_batch
+    eff = effective_lengths(cfg, shape)
+    s = eff["seq"]
+    dt_tok = jnp.int32
+    specs: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), dt_tok)
+    elif cfg.num_patches:
+        s_text = max(1, s - cfg.num_patches)
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_text), dt_tok)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), dt_tok)
+    if shape.kind == "train":
+        # labels align with the text positions the LM predicts
+        specs["labels"] = jax.ShapeDtypeStruct(specs["tokens"].shape, dt_tok)
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(token, cache, pos) ShapeDtypeStructs for serve_step lowering."""
+    model = get_model(cfg)
+    b = shape.global_batch
+    eff = effective_lengths(cfg, shape)
+    max_seq = eff["seq"]
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: model.init_cache(cfg, b, max_seq))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return token, cache, pos
+
+
+def params_shape(cfg: ArchConfig):
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), cfg)
+    )
+
+
+def param_count(cfg: ArchConfig) -> int:
+    shapes = params_shape(cfg)
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top_k of the expert stack + the rest)."""
+    total = param_count(cfg)
+    if not cfg.moe_experts:
+        return total
+    shapes = params_shape(cfg)
+    expert_leaves = 0
+    for leaf in jax.tree.leaves(shapes):
+        # stacked expert weights: (n_superblocks, E, d_in, d_out)
+        if leaf.ndim == 4 and leaf.shape[1] == cfg.moe_experts:
+            expert_leaves += int(np.prod(leaf.shape))
+    inactive = expert_leaves * (1 - cfg.moe_top_k / cfg.moe_experts)
+    return int(total - inactive)

@@ -1,0 +1,254 @@
+"""xLSTM LM (arXiv:2405.04517): mLSTM blocks with an sLSTM block every
+``slstm_every`` positions (the paper's [7:1] ratio at 1.3B).  The mLSTM runs
+through the chunkwise gated-scan kernel; sLSTM scans over time.
+
+Layer grouping mirrors models/hybrid.py: scan over groups of
+(slstm_every - 1) mLSTM blocks, then one sLSTM block, repeated; leftover
+mLSTM blocks form a tail group.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import maybe_shard
+from repro.kernels.rmsnorm import rmsnorm
+from repro.layers.common import dense, dense_init, stacked_init
+from repro.layers.xlstm import (
+    init_mlstm_state,
+    init_slstm_state,
+    mlstm_decode_step,
+    mlstm_forward,
+    mlstm_init,
+    mlstm_specs,
+    mlstm_state_specs,
+    slstm_decode_step,
+    slstm_forward,
+    slstm_init,
+    slstm_specs,
+    slstm_state_specs,
+)
+
+
+def _groups(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_groups, mlstm_per_group, n_tail_mlstm)."""
+    k = cfg.slstm_every
+    n_groups = cfg.n_layers // k
+    tail = cfg.n_layers % k
+    return n_groups, k - 1, tail
+
+
+def _m_layer_init(key, cfg, dtype):
+    return {"norm": jnp.ones((cfg.d_model,), dtype), "mlstm": mlstm_init(key, cfg, dtype)}
+
+
+def _m_layer_specs(cfg):
+    return {"norm": P(None), "mlstm": mlstm_specs(cfg)}
+
+
+def _s_layer_init(key, cfg, dtype):
+    return {"norm": jnp.ones((cfg.d_model,), dtype), "slstm": slstm_init(key, cfg, dtype)}
+
+
+def _s_layer_specs(cfg):
+    return {"norm": P(None), "slstm": slstm_specs(cfg)}
+
+
+def init_params(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, km, ks, kt, kh = jax.random.split(key, 5)
+    ng, m_per, tail = _groups(cfg)
+    p = {
+        "embed": (
+            jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5
+        ).astype(dtype),
+        "m_groups": stacked_init(
+            km,
+            ng,
+            lambda k_, cfg_, dt: stacked_init(k_, m_per, _m_layer_init, cfg_, dt),
+            cfg,
+            dtype,
+        ),
+        "s_blocks": stacked_init(ks, ng, _s_layer_init, cfg, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(kh, cfg.d_model, (cfg.padded_vocab,), dtype),
+    }
+    if tail:
+        p["m_tail"] = stacked_init(kt, tail, _m_layer_init, cfg, dtype)
+    return p
+
+
+def param_specs(cfg: ArchConfig):
+    ng, m_per, tail = _groups(cfg)
+    m_layer = _m_layer_specs(cfg)
+    specs = {
+        "embed": P("tp", None),
+        "m_groups": jax.tree.map(
+            lambda s: P(None, None, *s), m_layer, is_leaf=lambda s: isinstance(s, P)
+        ),
+        "s_blocks": jax.tree.map(
+            lambda s: P(None, *s), _s_layer_specs(cfg),
+            is_leaf=lambda s: isinstance(s, P),
+        ),
+        "final_norm": P(None),
+        "lm_head": P(None, "tp"),
+    }
+    if tail:
+        specs["m_tail"] = jax.tree.map(
+            lambda s: P(None, *s), m_layer, is_leaf=lambda s: isinstance(s, P)
+        )
+    return specs
+
+
+def _m_group(x, gp, cfg, remat):
+    def one(x_, lp):
+        hn = rmsnorm(x_, lp["norm"], eps=cfg.norm_eps)
+        return x_ + mlstm_forward(lp["mlstm"], hn, cfg), None
+
+    fn = jax.checkpoint(one, prevent_cse=False) if remat else one
+    x, _ = jax.lax.scan(fn, x, gp)
+    return x
+
+
+def head_weights(params, cfg: ArchConfig):
+    return params["lm_head"]
+
+
+def forward(params, batch, cfg: ArchConfig, *, remat: bool = False,
+            return_hidden: bool = False):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = maybe_shard(h, P("dp", None, None))
+    ng, m_per, tail = _groups(cfg)
+
+    def group_step(x, scanned):
+        gp, sp = scanned
+        x = _m_group(x, gp, cfg, remat=remat)
+        hn = rmsnorm(x, sp["norm"], eps=cfg.norm_eps)
+        x = x + slstm_forward(sp["slstm"], hn, cfg)
+        return x, None
+
+    h, _ = jax.lax.scan(group_step, h, (params["m_groups"], params["s_blocks"]))
+    if tail:
+        h = _m_group(h, params["m_tail"], cfg, remat=remat)
+    if return_hidden:
+        return h
+    h = rmsnorm(h, params["final_norm"], eps=cfg.norm_eps)
+    return dense(h, params["lm_head"]).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat: bool = True):
+    logits = forward(params, batch, cfg, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < cfg.vocab)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    ng, m_per, tail = _groups(cfg)
+    m_state = init_mlstm_state(cfg, batch)
+    s_state = init_slstm_state(cfg, batch)
+    cache = {
+        "m_groups": jnp.broadcast_to(
+            m_state[None, None], (ng, m_per, *m_state.shape)
+        ),
+        "s_blocks": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (ng, *x.shape)), s_state
+        ),
+    }
+    if tail:
+        cache["m_tail"] = jnp.broadcast_to(m_state[None], (tail, *m_state.shape))
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, batch: int, dp_size: int = 16):
+    ng, m_per, tail = _groups(cfg)
+    m = mlstm_state_specs(cfg, batch, dp_size)
+    s = slstm_state_specs(cfg, batch, dp_size)
+    specs = {
+        "m_groups": P(None, None, *m),
+        "s_blocks": jax.tree.map(
+            lambda x: P(None, *x), s, is_leaf=lambda x: isinstance(x, P)
+        ),
+    }
+    if tail:
+        specs["m_tail"] = P(None, *m)
+    return specs
+
+
+def prefill(params, batch, cfg: ArchConfig, max_seq: int = 0):
+    """Chunked-parallel prompt pass; recurrent states come out of the scans."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    ng, m_per, tail = _groups(cfg)
+
+    def m_layer_collect(x_, lp):
+        hn = rmsnorm(x_, lp["norm"], eps=cfg.norm_eps)
+        out, state = mlstm_forward(lp["mlstm"], hn, cfg, return_state=True)
+        return x_ + out, state
+
+    def group_step(x, scanned):
+        gp, sp = scanned
+        x, m_states = jax.lax.scan(m_layer_collect, x, gp)
+        hn = rmsnorm(x, sp["norm"], eps=cfg.norm_eps)
+        out, s_state = slstm_forward(sp["slstm"], hn, cfg, return_state=True)
+        return x + out, (m_states, s_state)
+
+    h, (m_states, s_states) = jax.lax.scan(
+        group_step, h, (params["m_groups"], params["s_blocks"])
+    )
+    cache = {"m_groups": m_states, "s_blocks": s_states}
+    if tail:
+        h, tail_states = jax.lax.scan(m_layer_collect, h, params["m_tail"])
+        cache["m_tail"] = tail_states
+    h = rmsnorm(h[:, -1:], params["final_norm"], eps=cfg.norm_eps)
+    return dense(h, params["lm_head"]).astype(jnp.float32), cache
+
+
+def decode_step(params, token, cache, pos, cfg: ArchConfig):
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token, axis=0)
+    ng, m_per, tail = _groups(cfg)
+
+    def m_step(x_, layer):
+        lp, lstate = layer
+        hn = rmsnorm(x_, lp["norm"], eps=cfg.norm_eps)
+        out, st = mlstm_decode_step(lp["mlstm"], hn, lstate, cfg)
+        return x_ + out, st
+
+    def group_step(x, scanned):
+        gp, sp, gstate, sstate = scanned
+        x, m_new = jax.lax.scan(m_step, x, (gp, gstate))
+        hn = rmsnorm(x, sp["norm"], eps=cfg.norm_eps)
+        out, s_new = slstm_decode_step(sp["slstm"], hn, sstate, cfg)
+        return x + out, (m_new, s_new)
+
+    x, (m_new, s_new) = jax.lax.scan(
+        group_step,
+        x,
+        (
+            params["m_groups"],
+            params["s_blocks"],
+            cache["m_groups"],
+            cache["s_blocks"],
+        ),
+    )
+    new_cache = {"m_groups": m_new, "s_blocks": s_new}
+    if tail:
+        x, tail_new = jax.lax.scan(m_step, x, (params["m_tail"], cache["m_tail"]))
+        new_cache["m_tail"] = tail_new
+    h = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+    return dense(h, params["lm_head"]).astype(jnp.float32), new_cache

@@ -1,0 +1,49 @@
+"""LM losses.  The chunked cross-entropy never materializes the full
+(B, S, V) logits tensor — at llama4 scale that would be 1M tokens x 202k
+vocab x 4 B = 0.8 PB globally.  Instead it scans the sequence in chunks,
+computing head projection + log-softmax + NLL per chunk; the backward
+recomputes per chunk under the same scan (jax.checkpoint)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import rmsnorm
+
+CHUNK_LEN = 256
+
+
+def chunked_lm_loss(h, final_norm_scale, head_w, labels, cfg, chunk_len: int = CHUNK_LEN):
+    """h: (B, S, D) final hidden; head_w: (D, Vpad); labels: (B, S) int32
+    (-1 or >= vocab entries are masked)."""
+    b, s, d = h.shape
+    chunk_len = min(chunk_len, s)
+    pad = (-s) % chunk_len
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = h.shape[1] // chunk_len
+    h_c = h.reshape(b, n_chunks, chunk_len, d).swapaxes(0, 1)
+    l_c = labels.reshape(b, n_chunks, chunk_len).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def one_chunk(carry, xs):
+        total, count = carry
+        hc, lc = xs
+        hn = rmsnorm(hc, final_norm_scale, eps=cfg.norm_eps)
+        logits = jax.lax.dot_general(
+            hn, head_w, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        safe = jnp.clip(lc, 0, logits.shape[-1] - 1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0) & (lc < cfg.vocab)
+        return (total + (nll * mask).sum(), count + mask.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        one_chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (h_c, l_c)
+    )
+    return total / jnp.maximum(count, 1)

@@ -1,0 +1,52 @@
+"""make_train_step: loss + grad + AdamW update as one jit-able function,
+with remat over the layer scan and chunked cross-entropy.  This is the
+function the multi-pod dry-run lowers for every train-shape cell."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import get_model
+from repro.training.losses import chunked_lm_loss
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_loss_fn(cfg: ArchConfig, *, remat: bool = True):
+    model = get_model(cfg)
+
+    def loss_fn(params, batch):
+        h = model.forward(params, batch, cfg, remat=remat, return_hidden=True)
+        head = model.head_weights(params, cfg)
+        return chunked_lm_loss(
+            h, params["final_norm"], head, batch["labels"], cfg
+        )
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: Optional[AdamWConfig] = None,
+    *,
+    remat: bool = True,
+):
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = make_loss_fn(cfg, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt_state["step"]}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, seed: int = 0):
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed), cfg)
+    return params, init_opt_state(params)

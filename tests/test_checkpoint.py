@@ -1,0 +1,102 @@
+"""Checkpoint store: save/restore round-trip, atomic publish, restart
+resume, async writes, elastic resharding via device_put shardings."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def make_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros((16,))},
+        "opt": {"m": jnp.ones((8, 16)), "step": jnp.int32(7)},
+    }
+
+
+class TestStore:
+    def test_roundtrip(self, tmp_path):
+        tree = make_tree()
+        store.save(str(tmp_path), 10, tree)
+        restored = store.restore(str(tmp_path), 10, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_step(self, tmp_path):
+        tree = make_tree()
+        store.save(str(tmp_path), 5, tree)
+        store.save(str(tmp_path), 15, tree)
+        assert store.latest_step(str(tmp_path)) == 15
+
+    def test_latest_ignores_partial_tmp(self, tmp_path):
+        tree = make_tree()
+        store.save(str(tmp_path), 5, tree)
+        os.makedirs(tmp_path / "step_00000009.tmp")  # crashed writer remnant
+        assert store.latest_step(str(tmp_path)) == 5
+
+    def test_latest_none_when_empty(self, tmp_path):
+        assert store.latest_step(str(tmp_path)) is None
+
+    def test_async_save(self, tmp_path):
+        tree = make_tree()
+        t = store.save_async(str(tmp_path), 3, tree)
+        t.join()
+        assert store.latest_step(str(tmp_path)) == 3
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        store.save(str(tmp_path), 1, make_tree())
+        bad = make_tree()
+        bad["params"]["w"] = jnp.zeros((4, 4))
+        with pytest.raises(ValueError, match="shape mismatch"):
+            store.restore(str(tmp_path), 1, bad)
+
+    def test_restore_with_shardings(self, tmp_path):
+        """Elastic path: restore with explicit shardings (single-device mesh
+        here; the 256<->512-chip reshard is exercised by the dry-run meshes)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        tree = make_tree()
+        store.save(str(tmp_path), 2, tree)
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+        restored = store.restore(str(tmp_path), 2, tree, shardings=shardings)
+        np.testing.assert_array_equal(
+            np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+        )
+
+
+class TestTrainRestart:
+    def test_crash_and_resume_reproduces_stream(self, tmp_path):
+        """Train 30 steps with a crash at 20: resumed losses must continue
+        from the checkpoint (deterministic data stream + state restore)."""
+        from repro.launch import train
+
+        ckpt = str(tmp_path / "ckpt")
+        args = [
+            "--arch", "qwen3-0.6b", "--reduced", "--steps", "30",
+            "--batch", "2", "--seq", "32", "--ckpt-dir", ckpt,
+            "--ckpt-every", "10", "--log-every", "5",
+        ]
+        crashed = train.main(args + ["--kill-at", "20"])
+        assert crashed["crashed_at"] == 20
+        assert store.latest_step(ckpt) == 20
+
+        resumed = train.main(args)
+        assert resumed["final_loss"] is not None
+        straight = train.main(
+            [
+                "--arch", "qwen3-0.6b", "--reduced", "--steps", "30",
+                "--batch", "2", "--seq", "32", "--log-every", "5",
+            ]
+        )
+        # resumed run ends at the same loss as the uninterrupted run
+        np.testing.assert_allclose(
+            resumed["final_loss"], straight["final_loss"], rtol=1e-4
+        )

@@ -1,0 +1,67 @@
+"""Network + energy models: trace statistics match the paper's measured
+environments, RPC timing monotonicity, energy integration."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.energy import (
+    STATE_COMM,
+    STATE_INFERENCE,
+    STATE_STANDBY,
+    EnergyMeter,
+    PowerModel,
+)
+from repro.core.netsim import get_network, indoor_network, outdoor_network
+
+
+class TestNetsim:
+    def test_trace_means_match_paper(self):
+        assert indoor_network().mean_mbps == pytest.approx(93.0, abs=3.0)
+        assert outdoor_network().mean_mbps == pytest.approx(73.0, abs=3.0)
+
+    def test_outdoor_more_variable(self):
+        i = indoor_network().trace_bytes_per_s
+        o = outdoor_network().trace_bytes_per_s
+        assert o.std() / o.mean() > i.std() / i.mean()
+
+    def test_deterministic(self):
+        a = indoor_network(seed=0).trace_bytes_per_s
+        b = indoor_network(seed=0).trace_bytes_per_s
+        np.testing.assert_array_equal(a, b)
+
+    def test_rpc_time_monotone_in_payload(self):
+        net = indoor_network()
+        t1 = net.rpc_time(1e3, 64, 0.0)
+        t2 = net.rpc_time(1e6, 64, 0.0)
+        assert t2 > t1
+
+    def test_unknown_env_raises(self):
+        with pytest.raises(ValueError):
+            get_network("underwater")
+
+
+class TestEnergy:
+    def test_power_states_match_tab2(self):
+        pm = PowerModel()
+        assert pm.power(STATE_INFERENCE) == 13.35
+        assert pm.power(STATE_COMM) == 4.25
+        assert pm.power(STATE_STANDBY) == 4.04
+
+    def test_integration(self):
+        m = EnergyMeter()
+        m.add(STATE_INFERENCE, 2.0)
+        m.add(STATE_COMM, 1.0)
+        assert m.joules == pytest.approx(2 * 13.35 + 4.25)
+        assert m.mean_watts == pytest.approx((2 * 13.35 + 4.25) / 3)
+
+    def test_since_delta(self):
+        m = EnergyMeter()
+        m.add(STATE_COMM, 1.0)
+        snap = m.snapshot()
+        m.add(STATE_COMM, 2.0)
+        assert m.since(snap).joules == pytest.approx(2 * 4.25)
+
+    def test_negative_duration_rejected(self):
+        with pytest.raises(ValueError):
+            EnergyMeter().add(STATE_COMM, -1.0)

@@ -1,0 +1,198 @@
+"""Operator Sequence Search — unit + hypothesis property tests.
+
+The invariant under test (paper Sec. III-B2): for any log of the form
+[arbitrary load/init noise] + [S repeated >= R times (+ partial tail)], the
+search recovers exactly S, provided S starts at an HtoD, ends at a DtoH sync
+group, and satisfies data-dependency closure.
+"""
+from __future__ import annotations
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.opseq import (
+    check_data_dependency,
+    fast_check,
+    naive_max_repeated_subsequence,
+    operator_sequence_search,
+)
+from repro.core.records import (
+    FUNC_D2H,
+    FUNC_GET_DEVICE,
+    FUNC_H2D,
+    FUNC_MALLOC,
+    FUNC_SYNC,
+    OperatorRecord,
+    category_trace,
+)
+
+
+def K(name, ins, outs):
+    return OperatorRecord(
+        f"kernel:{name}", (name, ins, outs), in_buffers=ins, out_buffers=outs
+    )
+
+
+def H2D(dst):
+    return OperatorRecord(FUNC_H2D, (dst,), out_buffers=(dst,))
+
+
+def D2H(src):
+    return OperatorRecord(FUNC_D2H, (src,), in_buffers=(src,))
+
+
+def SYNC():
+    return OperatorRecord(FUNC_SYNC, ())
+
+
+def Q():
+    return OperatorRecord(FUNC_GET_DEVICE, ())
+
+
+PARAM_ADDRS = (900, 901, 902)
+
+
+def make_load_noise(n_params=3):
+    logs = []
+    for i in range(n_params):
+        logs.append(OperatorRecord(FUNC_MALLOC, (PARAM_ADDRS[i],)))
+        logs.append(H2D(PARAM_ADDRS[i]))
+    return logs
+
+
+def make_sequence(rng, n_kernels, n_d2h=1, with_noise=True, seed_addr=1):
+    """A coherent inference sequence: chained buffers, query noise, final
+    DtoH(s) + syncs."""
+    seq = [H2D(seed_addr), SYNC()]
+    prev = seed_addr
+    outs = []
+    for k in range(n_kernels):
+        addr = 10 + k
+        if with_noise and k % 2 == 0:
+            seq.append(Q())
+        param = PARAM_ADDRS[int(rng.integers(0, len(PARAM_ADDRS)))]
+        seq.append(K(f"op{int(rng.integers(0, 13))}", (prev, param), (addr,)))
+        prev = addr
+        outs.append(addr)
+    for j in range(n_d2h):
+        seq.append(D2H(outs[-(j + 1)] if j < len(outs) else prev))
+        seq.append(SYNC())
+    return seq
+
+
+class TestUnits:
+    def test_fast_check_periodicity(self):
+        tags = "xxx" + "HKKDs" * 4
+        assert fast_check(tags, 3 + 5 * 3, 5, 3)
+        assert not fast_check(tags, 3 + 5 * 3, 5, 5)
+
+    def test_data_dependency_accepts_aligned(self, rng):
+        seq = make_sequence(rng, 5)
+        logs = make_load_noise() + seq * 3
+        start = len(make_load_noise()) + len(seq) * 2
+        assert check_data_dependency(logs, start, len(seq))
+
+    def test_data_dependency_rejects_rotation(self, rng):
+        seq = make_sequence(rng, 5)
+        logs = make_load_noise() + seq * 4
+        # rotated window: starts one op into the sequence
+        start = len(make_load_noise()) + len(seq) * 2 + 3
+        assert not check_data_dependency(logs, start, len(seq))
+
+    def test_search_basic(self, rng):
+        seq = make_sequence(rng, 8)
+        logs = make_load_noise() + seq * 4
+        ios = operator_sequence_search(logs, 3)
+        assert ios is not None
+        assert list(ios.records) == seq
+
+    def test_search_insufficient_repeats(self, rng):
+        seq = make_sequence(rng, 8)
+        logs = make_load_noise() + seq * 2
+        assert operator_sequence_search(logs, 3) is None
+
+    def test_search_with_init_inference(self, rng):
+        seq = make_sequence(rng, 8)
+        init = make_sequence(rng, 11, seed_addr=1)  # different first inference
+        logs = make_load_noise() + init + seq * 4
+        ios = operator_sequence_search(logs, 3)
+        assert ios is not None and list(ios.records) == seq
+
+    def test_search_multi_d2h_mid_inference_cut(self, rng):
+        seq = make_sequence(rng, 6, n_d2h=3)
+        logs = make_load_noise() + seq * 5
+        # cut right after the first D2H sync group of the 5th iteration
+        first_d2h = next(
+            i for i, r in enumerate(seq) if r.func == FUNC_D2H
+        )
+        cut = len(make_load_noise()) + len(seq) * 4 + first_d2h + 2
+        ios = operator_sequence_search(logs[:cut], 3)
+        assert ios is not None and list(ios.records) == seq
+
+    def test_naive_merges_iterations(self, rng):
+        seq = make_sequence(rng, 4)
+        logs = make_load_noise() + seq * 4
+        naive = naive_max_repeated_subsequence(logs, 2)
+        assert naive is not None and len(naive) == 2 * len(seq)
+
+    def test_num_rpcs_replayed(self, rng):
+        seq = make_sequence(rng, 6, n_d2h=3)
+        logs = make_load_noise() + seq * 4
+        ios = operator_sequence_search(logs, 3)
+        assert ios.num_rpcs_replayed == 1 + 3  # 1 HtoD + 3 DtoH
+
+
+class TestProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        n_kernels=st.integers(2, 40),
+        n_repeats=st.integers(3, 6),
+        n_d2h=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+        noise_kernels=st.integers(0, 25),
+    )
+    def test_planted_sequence_recovered(
+        self, n_kernels, n_repeats, n_d2h, seed, noise_kernels
+    ):
+        rng = np.random.default_rng(seed)
+        seq = make_sequence(rng, n_kernels, n_d2h=n_d2h)
+        logs = make_load_noise()
+        if noise_kernels:
+            logs += make_sequence(rng, noise_kernels, n_d2h=1)  # init variability
+        logs += seq * n_repeats
+        ios = operator_sequence_search(logs, 3)
+        assert ios is not None
+        assert list(ios.records) == seq
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_kernels=st.integers(2, 30),
+        repeats=st.integers(0, 2),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_never_identifies_below_min_repeats(self, n_kernels, repeats, seed):
+        rng = np.random.default_rng(seed)
+        seq = make_sequence(rng, n_kernels)
+        logs = make_load_noise() + seq * repeats
+        assert operator_sequence_search(logs, 3) is None
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_kernels=st.integers(2, 25),
+        n_repeats=st.integers(3, 5),
+        cut_extra=st.integers(0, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_partial_tail_iteration_is_harmless(
+        self, n_kernels, n_repeats, cut_extra, seed
+    ):
+        """A truncated in-flight iteration after the repeats must not corrupt
+        the result (search triggered mid-inference)."""
+        rng = np.random.default_rng(seed)
+        seq = make_sequence(rng, n_kernels)
+        logs = make_load_noise() + seq * n_repeats + seq[: cut_extra % len(seq)]
+        ios = operator_sequence_search(logs, 3)
+        if ios is not None:
+            assert list(ios.records) == seq

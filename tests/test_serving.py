@@ -1,0 +1,51 @@
+"""Serving engine: local generation vs RRTO-served generation equivalence,
+per-token RPC collapse, and the op-sequence identification on decode."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.serving.engine import LocalServing, RRTOServedLM
+
+CFG = ArchConfig(
+    name="t", family="dense", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_head=16, d_ff=128, vocab=256, dtype="float32", rope_theta=1e4,
+)
+
+
+@pytest.fixture(scope="module")
+def generated():
+    prompt = np.random.default_rng(0).integers(0, 256, (1, 8)).astype(np.int32)
+    local = LocalServing(CFG, seed=3)
+    r_local = local.generate({"tokens": prompt}, max_new_tokens=12)
+    served = RRTOServedLM(CFG, bucket_len=32, batch=1, seed=3, min_repeats=3)
+    r_srv = served.generate(prompt, max_new_tokens=12)
+    return r_local, r_srv, served
+
+
+class TestRRTOServing:
+    def test_tokens_identical(self, generated):
+        r_local, r_srv, _ = generated
+        np.testing.assert_array_equal(r_srv.tokens, r_local.tokens)
+
+    def test_rpc_collapse(self, generated):
+        _, _, served = generated
+        hist = served.session.history
+        assert hist[0].rpcs > 100          # recording: per-operator RPCs
+        assert hist[-1].rpcs <= 3          # replaying: input + output only
+        assert served.session.client.mode == "replaying"
+
+    def test_replay_speedup(self, generated):
+        _, _, served = generated
+        hist = served.session.history
+        assert hist[-1].wall_seconds < hist[0].wall_seconds / 5
+
+    def test_cricket_served_stays_slow(self):
+        prompt = np.random.default_rng(0).integers(0, 256, (1, 8)).astype(np.int32)
+        served = RRTOServedLM(
+            CFG, system="cricket", bucket_len=16, batch=1, seed=3
+        )
+        r = served.generate(prompt, max_new_tokens=4)
+        hist = served.session.history
+        assert hist[-1].rpcs > 100

@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the paper's system: the KAPAO headline
+numbers hold at reduced scale + analytic full scale, and the multi-pod dry-run
+machinery produces coherent artifacts for a representative arch."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+
+class TestPaperHeadline:
+    @pytest.fixture(scope="class")
+    def kapao_metrics(self):
+        from repro.core.offload import OffloadSession
+        from repro.models.cnn_zoo import make_kapao_calibrated
+
+        model = make_kapao_calibrated(scale=1.0, input_size=640)
+        out = {}
+        for system in ("device_only", "nnto", "cricket", "rrto"):
+            sess = OffloadSession(model, system, environment="indoor", execute=False)
+            sess.load()
+            rs = [sess.infer(*model.example_inputs) for _ in range(7)]
+            out[system] = rs[-1]
+        return out
+
+    def test_rrto_vs_cricket_latency(self, kapao_metrics):
+        red = 1 - kapao_metrics["rrto"].wall_seconds / kapao_metrics["cricket"].wall_seconds
+        assert 0.90 <= red <= 0.99, f"latency reduction {red:.3f} vs paper 0.95"
+
+    def test_rrto_vs_device_latency(self, kapao_metrics):
+        red = 1 - kapao_metrics["rrto"].wall_seconds / kapao_metrics["device_only"].wall_seconds
+        assert 0.55 <= red <= 0.85, f"latency reduction {red:.3f} vs paper 0.72"
+
+    def test_rrto_matches_nnto(self, kapao_metrics):
+        ratio = kapao_metrics["rrto"].wall_seconds / kapao_metrics["nnto"].wall_seconds
+        assert ratio < 1.5
+
+    def test_rpc_counts(self, kapao_metrics):
+        assert kapao_metrics["cricket"].rpcs == 5895  # Tab. III/IV
+        assert kapao_metrics["rrto"].rpcs == 11       # Tab. IV
+
+    def test_energy_reduction(self, kapao_metrics):
+        red = 1 - kapao_metrics["rrto"].joules / kapao_metrics["cricket"].joules
+        assert red > 0.90  # paper: 94 %
+
+
+class TestDryRunArtifacts:
+    def test_results_present_and_coherent(self):
+        d = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+        if not os.path.isdir(d):
+            pytest.skip("dry-run artifacts not generated yet")
+        files = [f for f in os.listdir(d) if f.endswith(".json")]
+        assert len(files) >= 60
+        ok = failed = 0
+        for f in files:
+            rec = json.load(open(os.path.join(d, f)))
+            if rec["status"] == "ok":
+                ok += 1
+                w = rec["hlo_weighted"]
+                assert w["flops"] > 0
+                assert w["hbm_bytes"] > 0
+            elif rec["status"] == "failed":
+                failed += 1
+        assert failed == 0, f"{failed} dry-run cells failed"
+        assert ok >= 60
