@@ -1,0 +1,182 @@
+"""Multi-tenant scaling sweep — N clients (1..64) over one RRTO edge server.
+
+What the paper's single-client evaluation cannot show: when many clients run
+the *same* model, the shared IOS fingerprint cache amortizes the Operator
+Sequence Search across the fleet.  Clients join staggered (the realistic
+arrival pattern); the first client pays the full ``min_repeats`` recording
+phase, every later client adopts the cached IOS after a single recorded
+inference, and the compiled replay executable is built exactly once.  The
+sweep reports, per client count:
+
+* total recording-phase RPCs (should grow sublinearly — the headline),
+* replay-executable compiles (must stay 1),
+* cache hit rate on program lookups,
+* p50/p99 per-inference latency over the measured replay rounds,
+* mean cross-client replay batch size and shared-ingress traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, List, Sequence
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import OffloadableModel
+from repro.serving.multitenant import RRTOEdgeServer
+
+CLIENT_COUNTS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def make_model(seed: int = 0, d_in: int = 64, d_hidden: int = 128, d_out: int = 16):
+    """A small MLP client app — every client runs this same binary."""
+    rng = np.random.default_rng(seed)
+    params = {
+        "w1": rng.normal(0, 0.1, (d_in, d_hidden)).astype(np.float32),
+        "w2": rng.normal(0, 0.1, (d_hidden, d_hidden)).astype(np.float32),
+        "w3": rng.normal(0, 0.1, (d_hidden, d_out)).astype(np.float32),
+    }
+
+    def apply(p, x):
+        h = jnp.tanh(x @ p["w1"])
+        h = jnp.tanh(h @ p["w2"])
+        return [h @ p["w3"]]
+
+    x = rng.normal(0, 1, (4, d_in)).astype(np.float32)
+    return OffloadableModel("mlp64", apply, params, (x,)), x
+
+
+@dataclasses.dataclass
+class ScalingPoint:
+    clients: int
+    recording_rpcs: int
+    solo_recording_rpcs: int   # what the first (cold-cache) client paid alone
+    recording_inferences: int
+    compiles: int
+    cache_hit_rate: float
+    adopted_clients: int
+    p50_replay_ms: float
+    p99_replay_ms: float
+    mean_batch: float
+    link_mb: float            # shared-link traffic, both directions
+
+
+def run_point(
+    n_clients: int,
+    *,
+    measure_rounds: int = 20,
+    min_repeats: int = 3,
+    execute: bool = False,
+    environment: str = "indoor",
+    batch_window_s: float = 2e-3,
+) -> ScalingPoint:
+    model, x = make_model()
+    edge = RRTOEdgeServer(
+        execute=execute,
+        environment=environment,
+        batch_window_s=batch_window_s,
+    )
+
+    # staggered arrivals: one new client joins per round, everyone connected
+    # keeps inferring; late joiners find the cache warm
+    joined: List[str] = []
+    warm_rounds = 0
+    while len(joined) < n_clients or not all(
+        edge.sessions[c].client.mode == "replaying" for c in joined
+    ):
+        if len(joined) < n_clients:
+            sess = edge.connect(model, min_repeats=min_repeats)
+            joined.append(sess.client_id)
+        edge.run_round({c: (x,) for c in joined})
+        warm_rounds += 1
+        if warm_rounds > n_clients + 10 * min_repeats:
+            raise RuntimeError("clients failed to reach the replay phase")
+
+    recording_rpcs = edge.recording_rpc_total()
+    solo_recording_rpcs = sum(
+        r.rpcs for r in edge.sessions[joined[0]].history if r.mode == "recording"
+    )
+    recording_inferences = sum(
+        sum(1 for r in s.history if r.mode == "recording")
+        for s in edge.sessions.values()
+    )
+
+    # measured steady-state replay rounds
+    replay_lat: List[float] = []
+    for _ in range(measure_rounds):
+        results = edge.run_round({c: (x,) for c in joined})
+        replay_lat.extend(r.wall_seconds for r in results.values())
+
+    summary = edge.summary()
+    return ScalingPoint(
+        clients=n_clients,
+        recording_rpcs=recording_rpcs,
+        solo_recording_rpcs=solo_recording_rpcs,
+        recording_inferences=recording_inferences,
+        compiles=summary["compiles"],
+        cache_hit_rate=edge.cache.stats.hit_rate,
+        adopted_clients=sum(
+            1 for s in edge.sessions.values() if s.client.cache_adopted
+        ),
+        p50_replay_ms=float(np.percentile(replay_lat, 50) * 1e3),
+        p99_replay_ms=float(np.percentile(replay_lat, 99) * 1e3),
+        mean_batch=summary["mean_batch"],
+        link_mb=summary["link_bytes"] / 1e6,
+    )
+
+
+def run(
+    client_counts: Sequence[int] = CLIENT_COUNTS, **kwargs
+) -> List[ScalingPoint]:
+    return [run_point(n, **kwargs) for n in client_counts]
+
+
+def main() -> List[ScalingPoint]:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, nargs="+", default=list(CLIENT_COUNTS))
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--execute", action="store_true",
+                    help="really execute on-device (default: account only)")
+    ap.add_argument("--environment", default="indoor")
+    ap.add_argument("--window-ms", type=float, default=2.0)
+    args = ap.parse_args()
+
+    points = run(
+        tuple(args.clients),
+        measure_rounds=args.rounds,
+        execute=args.execute,
+        environment=args.environment,
+        batch_window_s=args.window_ms * 1e-3,
+    )
+    print(
+        f"{'clients':>7s} {'rec-RPCs':>9s} {'vs-linear':>9s} {'rec-infs':>8s} "
+        f"{'compiles':>8s} {'adopted':>7s} {'hit%':>6s} "
+        f"{'p50ms':>8s} {'p99ms':>8s} {'batch':>6s} {'linkMB':>9s}"
+    )
+    for p in points:
+        # linear baseline: every client pays what the cold-cache client paid
+        linear = p.solo_recording_rpcs * p.clients
+        print(
+            f"{p.clients:7d} {p.recording_rpcs:9d} "
+            f"{p.recording_rpcs / max(linear, 1):9.2f} "
+            f"{p.recording_inferences:8d} {p.compiles:8d} {p.adopted_clients:7d} "
+            f"{100 * p.cache_hit_rate:6.1f} {p.p50_replay_ms:8.3f} "
+            f"{p.p99_replay_ms:8.3f} {p.mean_batch:6.2f} {p.link_mb:9.2f}"
+        )
+    sub = all(
+        p.recording_rpcs < 0.9 * p.solo_recording_rpcs * p.clients
+        for p in points
+        if p.clients > 1
+    )
+    once = all(p.compiles == 1 for p in points)
+    print(f"sublinear_recording_rpcs={sub} compile_once={once}")
+    return points
+
+
+if __name__ == "__main__":
+    main()

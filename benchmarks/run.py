@@ -19,6 +19,7 @@ def main() -> None:
         fig10_kapao,
         fig11_semi_rrto,
         fig12_model_zoo,
+        multiclient_scaling,
         opseq_search_perf,
         roofline,
         tab3_rpc_composition,
@@ -94,6 +95,16 @@ def main() -> None:
     rows.append((
         "opseq_search_10k_trace", big["search_ms"] * 1e3,
         f"trace_len={big['trace_len']}",
+    ))
+
+    print("== multiclient_scaling ==", file=sys.stderr, flush=True)
+    scale = multiclient_scaling.run(client_counts=(1, 8, 32), measure_rounds=10)
+    big = scale[-1]
+    rows.append((
+        "multiclient_scaling_32",
+        big.p50_replay_ms * 1e3,
+        f"recRPCs_vs_linear={big.recording_rpcs / (big.solo_recording_rpcs * big.clients):.2f};"
+        f"compiles={big.compiles};hit={100 * big.cache_hit_rate:.0f}%",
     ))
 
     print("== roofline ==", file=sys.stderr, flush=True)

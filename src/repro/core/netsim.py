@@ -49,13 +49,40 @@ def synth_bandwidth_trace(
 
 
 @dataclasses.dataclass
+class ServerIngress:
+    """Shared edge-server ingress capacity (AP backhaul / server NIC).
+
+    In a multi-tenant deployment every client's wireless link terminates at
+    the same server; once enough clients transfer concurrently, the shared
+    ingress — not the per-client radio — becomes the bottleneck.  The model
+    is a fair-share pipe: each of ``active_clients`` concurrently-served
+    links gets ``capacity_bytes_per_s / active_clients``, and a client's
+    effective bandwidth is the min of its own link and that share.  The
+    multi-tenant harness updates ``active_clients`` as sessions join/leave.
+    """
+
+    capacity_bytes_per_s: float = 1e9 / 8.0     # gigabit backhaul
+    active_clients: int = 1
+    # aggregate traffic through the shared link, BOTH directions (every
+    # transfer_time call on an attached client link accumulates here)
+    bytes_total: float = 0.0
+
+    def share(self) -> float:
+        return self.capacity_bytes_per_s / max(1, self.active_clients)
+
+
+@dataclasses.dataclass
 class NetworkModel:
     """RPC/link timing: per-call latency = RTT + payload/bw(t) + resp/bw(t).
 
     ``base_rtt_s`` is the *effective* per-RPC round trip calibrated to the
     paper's measured Cricket/RRTO latency ratio (small RPCs are pipelined by
     the TCP stack, so the effective cost sits well under a raw Wi-Fi ping —
-    see EXPERIMENTS.md §Paper-validation for the calibration)."""
+    see EXPERIMENTS.md §Paper-validation for the calibration).
+
+    ``ingress`` optionally ties this client link to a shared
+    :class:`ServerIngress`; transfers are then capped at the ingress fair
+    share, modelling many clients contending for one edge server."""
 
     name: str
     trace_bytes_per_s: np.ndarray
@@ -63,6 +90,7 @@ class NetworkModel:
     rtt_jitter_s: float = 5e-5
     per_rpc_cpu_s: float = 30e-6      # serialization / libtirpc stack cost
     interval_s: float = TRACE_INTERVAL_S
+    ingress: Optional[ServerIngress] = None
 
     def bandwidth_at(self, t: float) -> float:
         idx = int(t / self.interval_s) % len(self.trace_bytes_per_s)
@@ -78,7 +106,11 @@ class NetworkModel:
         """Pure payload serialization over the link at time t."""
         if nbytes <= 0:
             return 0.0
-        return nbytes / self.bandwidth_at(t)
+        bw = self.bandwidth_at(t)
+        if self.ingress is not None:
+            bw = min(bw, self.ingress.share())
+            self.ingress.bytes_total += nbytes
+        return nbytes / bw
 
     def rpc_time(self, payload_bytes: float, response_bytes: float, t: float) -> float:
         """Blocking RPC: request out, response back, plus stack overheads."""

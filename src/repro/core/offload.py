@@ -88,7 +88,14 @@ class InferenceResult:
 
 
 class OffloadSession:
-    """One application process using one offloading system."""
+    """One application process using one offloading system.
+
+    By default the session is single-tenant: it owns its clock and GPU
+    server.  Pass a shared ``server`` (and usually a shared ``clock``) plus a
+    unique ``client_id`` to multiplex several sessions over one simulated
+    edge server — per-client state (mode, log, energy meter, device-memory
+    namespace) stays separated while the kernel queue, replay cache and GPU
+    occupancy are shared (see ``repro.serving.multitenant``)."""
 
     def __init__(
         self,
@@ -103,19 +110,34 @@ class OffloadSession:
         power: Optional[PowerModel] = None,
         min_repeats: int = 3,
         seed: int = 0,
-        execute: bool = True,
+        execute: Optional[bool] = None,
+        server: Optional[OffloadServer] = None,
+        clock: Optional[SimClock] = None,
+        client_id: str = "c0",
     ):
         if system not in SYSTEMS:
             raise ValueError(f"unknown system {system!r}; pick from {SYSTEMS}")
+        if server is not None:
+            # the realism level is a server property; a conflicting per-client
+            # request would silently produce placeholder outputs
+            if execute is not None and execute != server.execute:
+                raise ValueError(
+                    f"execute={execute} conflicts with the shared server's "
+                    f"execute={server.execute}"
+                )
+            execute = server.execute
+        elif execute is None:
+            execute = True
         self.model = model
         self.system = system
+        self.client_id = client_id
         self.network = network or get_network(environment, seed)
         self.client_device = client_device
         self.server_device = server_device
-        self.clock = SimClock()
+        self.clock = clock or SimClock()
         self.meter = EnergyMeter(power or PowerModel())
         self.execute = execute
-        self.server = OffloadServer(server_device, execute=execute)
+        self.server = server or OffloadServer(server_device, execute=execute)
         self.history: List[InferenceResult] = []
         self._loaded = False
         self._infer_count = 0
@@ -165,6 +187,7 @@ class OffloadSession:
                 self.meter,
                 variant=variant,
                 min_repeats=min_repeats,
+                client_id=client_id,
             )
             self.interceptor = JaxprInterceptor(
                 self.client,
@@ -226,6 +249,13 @@ class OffloadSession:
     def _param_addrs_for(self, closed_jaxpr) -> List[int]:
         return [self._const_registry[self._const_key(c)] for c in closed_jaxpr.consts]
 
+    def _steady_invars(self, inputs: Sequence[Any]):
+        """One steady inference's invar values (in order) + resident map
+        (invar index -> device address).  The single source for both the
+        interceptor walk and the batcher's wire-input preview."""
+        values = list(self._aux_leaves) + [np.asarray(x) for x in inputs]
+        return values, dict(self._aux_addrs or {})
+
     def _run_intercepted(self, inputs: Sequence[np.ndarray]) -> List[Any]:
         if self.model.setup is not None and self._aux_addrs is None:
             # initialization inference: extra setup graph, outputs cached
@@ -237,13 +267,23 @@ class OffloadSession:
                 keep_outputs=True,
             )
             self._aux_addrs = {i: a for i, a in enumerate(aux_addrs)}
-        resident = dict(self._aux_addrs or {})
+        values, resident = self._steady_invars(inputs)
         return self.interceptor.run(
             self._steady_jaxpr,
             self._param_addrs_for(self._steady_jaxpr),
-            list(self._aux_leaves) + [np.asarray(x) for x in inputs],
+            values,
             resident_inputs=resident,
         )
+
+    def replay_wire_inputs(self, inputs: Sequence[Any]) -> List[np.ndarray]:
+        """The HtoD payloads one replay-phase inference of ``inputs`` ships,
+        in wire order (non-resident invars only, mirroring the interceptor's
+        upload loop).  Used by the multi-tenant batcher to preload a round's
+        inputs before clients submit."""
+        values, resident = self._steady_invars(inputs)
+        return [
+            np.asarray(v) for i, v in enumerate(values) if i not in resident
+        ]
 
     def infer(self, *inputs) -> InferenceResult:
         if not self._loaded:

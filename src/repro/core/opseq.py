@@ -16,6 +16,7 @@ The search is hint-free: it sees nothing but the raw log.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import List, Optional, Sequence, Set
 
 from repro.core.records import (
@@ -24,10 +25,29 @@ from repro.core.records import (
     CAT_SYNC,
     InferenceSequence,
     OperatorRecord,
+    canonical_address_map,
     category_trace,
 )
 
 DEFAULT_MIN_REPEATS = 3
+
+
+def ios_fingerprint(records: Sequence[OperatorRecord]) -> str:
+    """Content-address of an inference operator sequence.
+
+    Structural hash over the category-tag string plus every record's
+    address-canonicalized identity (primitive, params signature, shapes,
+    dtypes, canonical buffer indices).  Two clients running the same model
+    through their own interceptors/allocators produce the same fingerprint,
+    which is what lets a multi-tenant edge server share one compiled replay
+    executable — and the already-validated IOS itself — across them.
+    """
+    canon = canonical_address_map(records)
+    payload = (
+        category_trace(records),
+        tuple(r.structural_identity(canon) for r in records),
+    )
+    return hashlib.sha256(repr(payload).encode()).hexdigest()
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,7 @@ memory transfers and syncs that bracket them).  Records must be:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Categories (the "compact string of operator categories" used by FastCheck).
@@ -86,6 +86,33 @@ class OperatorRecord:
     def identity(self) -> Tuple[str, Tuple]:
         return (self.func, self.args_sig)
 
+    def structural_identity(self, canon: "Dict[int, int]") -> Tuple:
+        """Address-free identity for cross-client IOS fingerprinting.
+
+        ``identity()`` embeds concrete device addresses, which are only stable
+        within one client's allocator.  Two clients running the same model
+        produce isomorphic logs whose addresses differ but whose *allocation
+        pattern* matches; replacing each address with its index in ``canon``
+        (first-appearance order over the sequence, see
+        :func:`canonical_address_map`) yields an identity that is equal across
+        such clients and still distinguishes different operator graphs.
+        """
+        known = set(self.in_buffers) | set(self.out_buffers)
+
+        def canonize(x):
+            if isinstance(x, tuple):
+                return tuple(canonize(e) for e in x)
+            if isinstance(x, int) and not isinstance(x, bool) and x in known:
+                return ("b", canon[x])
+            return x
+
+        return (
+            self.func,
+            canonize(self.args_sig),
+            tuple(canon[a] for a in self.in_buffers),
+            tuple(canon[a] for a in self.out_buffers),
+        )
+
     def __eq__(self, other: object) -> bool:  # record-level comparison
         if not isinstance(other, OperatorRecord):
             return NotImplemented
@@ -98,6 +125,22 @@ class OperatorRecord:
 def category_trace(logs) -> str:
     """Linearize a log into the compact category string used by FastCheck."""
     return "".join(r.category for r in logs)
+
+
+def canonical_address_map(records: Sequence[OperatorRecord]) -> Dict[int, int]:
+    """Number every buffer address in ``records`` by first appearance.
+
+    The resulting map is the canonical frame for
+    :meth:`OperatorRecord.structural_identity`: isomorphic sequences recorded
+    by different clients (different allocator bases, same allocation pattern)
+    map onto identical index sequences.
+    """
+    canon: Dict[int, int] = {}
+    for r in records:
+        for addr in (*r.in_buffers, *r.out_buffers):
+            if addr not in canon:
+                canon[addr] = len(canon)
+    return canon
 
 
 @dataclasses.dataclass

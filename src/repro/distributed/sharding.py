@@ -16,6 +16,25 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def current_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh()`` across jax versions.
+
+    jax >= 0.5 exposes the thread-local abstract mesh directly; on older
+    releases the only reliable context signal is the physical mesh installed
+    by ``with mesh:``, which carries an equivalent ``.abstract_mesh`` view.
+    Returns None when no mesh context is active.
+    """
+    gam = getattr(jax.sharding, "get_abstract_mesh", None)
+    if gam is not None:
+        return gam()
+    from jax._src import mesh as _mesh_impl  # jax < 0.5 fallback
+
+    env_mesh = _mesh_impl.thread_resources.env.physical_mesh
+    if env_mesh.empty:
+        return None
+    return env_mesh.abstract_mesh
+
+
 def _phys_axes(axis, mesh_axis_names) -> Any:
     if axis is None:
         return None
@@ -48,7 +67,7 @@ def translate_tree(tree, mesh_axis_names: Sequence[str]):
 
 def maybe_shard(x, spec: P):
     """Apply a logical sharding constraint iff a mesh context is active."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     return jax.lax.with_sharding_constraint(

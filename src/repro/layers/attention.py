@@ -197,7 +197,9 @@ def attn_decode_step(
         return out, new_cache
     k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
     v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.distributed.sharding import current_abstract_mesh
+
+    mesh = current_abstract_mesh()
     if (
         getattr(cfg, "sp_decode", False)
         and mesh is not None

@@ -200,7 +200,9 @@ def moe_apply(p: Dict[str, Any], x: jnp.ndarray, cfg) -> jnp.ndarray:
 
     b, s, d = x.shape
     t = b * s
-    mesh = _jax.sharding.get_abstract_mesh()
+    from repro.distributed.sharding import current_abstract_mesh
+
+    mesh = current_abstract_mesh()
     use_sm = (
         cfg.moe_groups
         and mesh is not None

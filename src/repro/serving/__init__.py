@@ -1,0 +1,33 @@
+"""RRTO serving — single-client LM serving and the multi-tenant edge server.
+
+Public API:
+
+* :class:`~repro.serving.engine.LocalServing` — plain prefill/decode engine.
+* :class:`~repro.serving.engine.RRTOServedLM` — one mobile client generating
+  through the RRTO transparent-offloading stack.
+* :class:`~repro.serving.engine.MultiClientServedLM` — N clients running the
+  same LM against one shared edge server (fingerprint cache + batched replay).
+* :class:`~repro.serving.multitenant.RRTOEdgeServer` — the shared server
+  state and cooperative round driver for arbitrary offloadable models.
+* :class:`~repro.serving.replay_cache.ReplayCache` — content-addressed LRU
+  cache of compiled replay executables.
+"""
+from repro.serving.engine import (
+    GenerationResult,
+    LocalServing,
+    MultiClientServedLM,
+    RRTOServedLM,
+)
+from repro.serving.multitenant import ReplayBatcher, RRTOEdgeServer
+from repro.serving.replay_cache import CacheStats, ReplayCache
+
+__all__ = [
+    "CacheStats",
+    "GenerationResult",
+    "LocalServing",
+    "MultiClientServedLM",
+    "ReplayBatcher",
+    "ReplayCache",
+    "RRTOEdgeServer",
+    "RRTOServedLM",
+]

@@ -17,11 +17,19 @@ Two deployment modes:
   recompute formulation keeps the demo functionally exact — outputs match
   ``LocalServing`` token-for-token — without donation plumbing, and the RPC
   accounting, which is what the paper measures, is identical.)
+
+* ``MultiClientServedLM`` — the multi-tenant edge deployment: N mobile
+  clients run the same LM app against one shared
+  :class:`~repro.serving.multitenant.RRTOEdgeServer`.  All clients emit the
+  same IOS fingerprint, so the first client's Operator Sequence Search and
+  replay compilation are amortized across the fleet (later clients adopt the
+  cached IOS after a single recorded inference), and same-step replay
+  submissions execute as one cross-client batched call.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +38,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.offload import OffloadableModel, OffloadSession
 from repro.models.registry import get_model
+from repro.serving.multitenant import RRTOEdgeServer
 
 
 @dataclasses.dataclass
@@ -85,21 +94,36 @@ class LocalServing:
 
 
 class RRTOServedLM:
-    """LLM generation through the RRTO transparent-offloading stack."""
+    """LLM generation through the RRTO transparent-offloading stack.
+
+    Single-client by default.  Pass ``edge`` (a shared
+    :class:`~repro.serving.multitenant.RRTOEdgeServer`) plus a unique
+    ``client_id`` to attach this client to a multi-tenant edge server instead
+    of a private one — the session then shares that server's replay cache,
+    GPU queue, ingress link and clock with its co-tenants."""
 
     def __init__(
         self,
         cfg: ArchConfig,
         *,
         system: str = "rrto",
-        environment: str = "indoor",
+        environment: Optional[str] = None,
         bucket_len: int = 64,
         batch: int = 1,
         seed: int = 0,
         min_repeats: int = 3,
-        execute: bool = True,
+        execute: Optional[bool] = None,
         params=None,
+        edge: Optional[RRTOEdgeServer] = None,
+        client_id: Optional[str] = None,
     ):
+        if edge is not None and (environment is not None or execute is not None):
+            # these are edge-server properties; a per-client override would be
+            # silently ignored, so reject it loudly
+            raise ValueError(
+                "environment/execute are set on the RRTOEdgeServer in "
+                "multi-tenant mode"
+            )
         self.cfg = cfg
         self.bucket_len = bucket_len
         model = get_model(cfg)
@@ -117,21 +141,29 @@ class RRTOServedLM:
                 jnp.argmax(last[:, 0, : cfg.vocab], axis=-1).astype(jnp.int32)
             ]
 
-        self.session = OffloadSession(
-            OffloadableModel(
-                name=f"{cfg.name}-nexttoken",
-                apply=next_token,
-                params=params,
-                example_inputs=(
-                    np.zeros((batch, bucket_len), np.int32),
-                    np.zeros((), np.int32),
-                ),
+        offloadable = OffloadableModel(
+            name=f"{cfg.name}-nexttoken",
+            apply=next_token,
+            params=params,
+            example_inputs=(
+                np.zeros((batch, bucket_len), np.int32),
+                np.zeros((), np.int32),
             ),
-            system,
-            environment=environment,
-            min_repeats=min_repeats,
-            execute=execute,
         )
+        if edge is not None:
+            if system != "rrto":
+                raise ValueError("multi-tenant mode serves the rrto system only")
+            self.session = edge.connect(
+                offloadable, client_id=client_id, min_repeats=min_repeats
+            )
+        else:
+            self.session = OffloadSession(
+                offloadable,
+                system,
+                environment=environment if environment is not None else "indoor",
+                min_repeats=min_repeats,
+                execute=execute if execute is not None else True,
+            )
 
     def generate(self, prompt: np.ndarray, max_new_tokens: int) -> GenerationResult:
         """Greedy generation; every next-token call goes through the
@@ -152,3 +184,94 @@ class RRTOServedLM:
         return GenerationResult(
             tokens=np.concatenate(out, axis=1), steps=max_new_tokens
         )
+
+
+class MultiClientServedLM:
+    """N mobile clients generating with the same LM over one edge server.
+
+    Every client runs the identical ``next_token`` app (same model, same
+    parameters, its own prompt), so all of them produce the same IOS
+    fingerprint: the first client to finish the Operator Sequence Search
+    populates the shared replay cache, every later client adopts the cached
+    IOS after a single recorded inference, and same-step replay submissions
+    are batched into one GPU call by the edge server's
+    :class:`~repro.serving.multitenant.ReplayBatcher`."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        num_clients: int,
+        *,
+        bucket_len: int = 64,
+        seed: int = 0,
+        min_repeats: int = 3,
+        execute: bool = True,
+        environment: str = "indoor",
+        cache_capacity: int = 8,
+        batch_window_s: float = 2e-3,
+        edge: Optional[RRTOEdgeServer] = None,
+    ):
+        if num_clients < 1:
+            raise ValueError(f"need at least one client, got {num_clients}")
+        self.cfg = cfg
+        self.bucket_len = bucket_len
+        model = get_model(cfg)
+        # one app binary on every device: identical parameters, so the replay
+        # executable (not just the IOS) is shareable verbatim
+        params = model.init_params(jax.random.PRNGKey(seed), cfg)
+        self.edge = edge or RRTOEdgeServer(
+            execute=execute,
+            cache_capacity=cache_capacity,
+            batch_window_s=batch_window_s,
+            environment=environment,
+        )
+        self.clients = [
+            RRTOServedLM(
+                cfg,
+                bucket_len=bucket_len,
+                batch=1,
+                min_repeats=min_repeats,
+                params=params,
+                edge=self.edge,
+                client_id=f"c{i}",
+            )
+            for i in range(num_clients)
+        ]
+
+    def generate(
+        self, prompts: Sequence[np.ndarray], max_new_tokens: int
+    ) -> List[GenerationResult]:
+        """Lockstep greedy generation: one token per client per round, with
+        replay-phase clients batched on the shared GPU."""
+        if len(prompts) != len(self.clients):
+            raise ValueError(
+                f"{len(prompts)} prompts for {len(self.clients)} clients"
+            )
+        bufs: List[np.ndarray] = []
+        curs: List[int] = []
+        for prompt in prompts:
+            b, s = prompt.shape
+            assert s + max_new_tokens <= self.bucket_len, "bucket overflow"
+            buf = np.zeros((b, self.bucket_len), np.int32)
+            buf[:, :s] = prompt
+            bufs.append(buf)
+            curs.append(s)
+        outs: List[List[np.ndarray]] = [[] for _ in self.clients]
+        for _ in range(max_new_tokens):
+            round_inputs = {
+                client.session.client_id: (bufs[i], np.int32(curs[i]))
+                for i, client in enumerate(self.clients)
+            }
+            results = self.edge.run_round(round_inputs)
+            for i, client in enumerate(self.clients):
+                res = results[client.session.client_id]
+                nxt = np.asarray(res.outputs[0]).astype(np.int32)
+                outs[i].append(nxt[:, None])
+                bufs[i][:, curs[i]] = nxt
+                curs[i] += 1
+        return [
+            GenerationResult(
+                tokens=np.concatenate(o, axis=1), steps=max_new_tokens
+            )
+            for o in outs
+        ]

@@ -1,0 +1,267 @@
+"""Multi-tenant RRTO edge server — N concurrent clients over one GPU server.
+
+Single-tenant RRTO (``core/offload.py``) gives one mobile client a private
+simulated server.  An edge deployment is the opposite shape: one GPU box, many
+clients, most of them running the *same* model.  This module composes the
+shared pieces:
+
+* :class:`RRTOEdgeServer` — the shared state: one simulated
+  :class:`~repro.core.engine.OffloadServer` (kernel queue + GPU occupancy),
+  one :class:`~repro.serving.replay_cache.ReplayCache` (fingerprint ->
+  compiled replay executable), one
+  :class:`~repro.core.netsim.ServerIngress` (clients contend for server
+  ingress bandwidth), one :class:`ReplayBatcher`, and a shared
+  :class:`~repro.core.engine.SimClock`.  Per-client state (mode, log, energy
+  meter, device-memory namespace) lives in each
+  :class:`~repro.core.offload.OffloadSession` / server-side
+  :class:`~repro.core.engine.ClientContext`.
+
+* :class:`ReplayBatcher` — cross-client batched replay.  Replay submissions
+  for the same IOS fingerprint arriving within a batching window execute as
+  one batched call on the shared GPU: the first submission flushes the
+  round's preloaded group, pays the window wait plus one sub-linear batched
+  execution (``ReplayProgram.batched_compute_seconds``), and every member
+  completes at the group's finish time.
+
+Simulation contract: sessions share one clock, so ``run_round`` drives them
+cooperatively — recording-phase clients serialize their RPC storms through
+the shared server (contention is real and visible in the latency numbers),
+and replay-phase clients batch.  Because a member's outputs must be available
+synchronously inside its own ``infer()`` call, the harness *preloads* each
+round's replay inputs into the batcher; the first submitter executes the
+whole group functionally, and later members collect their precomputed
+outputs.  A member that misses the window (submits after ``t_open +
+window_s``) keeps its precomputed values but pays a solo GPU slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import GTX_2080TI, DeviceSpec
+from repro.core.engine import (
+    MODE_REPLAYING,
+    OffloadServer,
+    RRTOClient,
+    SimClock,
+)
+from repro.core.netsim import ServerIngress, get_network
+from repro.core.offload import InferenceResult, OffloadableModel, OffloadSession
+from repro.serving.replay_cache import ReplayCache
+
+
+def _inputs_equal(a: Sequence[np.ndarray], b: Sequence[np.ndarray]) -> bool:
+    return len(a) == len(b) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
+    )
+
+
+@dataclasses.dataclass
+class _BatchGroup:
+    done_at: float                   # batched execution completion time
+    # client_id -> preloaded inputs (values execute lazily at submit time, so
+    # a member that never submits — e.g. a DAM fallback mid-walk — leaves no
+    # speculative writes in its device-memory namespace)
+    pending: Dict[str, List[np.ndarray]]
+
+    def claim(self, client_id: str, inputs: Sequence[np.ndarray]) -> bool:
+        preloaded = self.pending.pop(client_id, None)
+        return preloaded is not None and _inputs_equal(preloaded, inputs)
+
+
+class ReplayBatcher:
+    """Groups same-fingerprint replay submissions into batched executions."""
+
+    def __init__(self, server: OffloadServer, *, window_s: float = 2e-3):
+        self.server = server
+        self.window_s = window_s
+        # fingerprint -> list of (client, wire inputs) preloaded for the round
+        self._pending: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]] = {}
+        self._groups: Dict[str, _BatchGroup] = {}
+        self.batches_executed = 0
+        self.batched_replays = 0     # submissions served from a batch
+        self.solo_replays = 0        # submissions that fell back to solo
+        self.batch_sizes: List[int] = []
+
+    def begin_round(
+        self, entries: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]]
+    ) -> None:
+        """Preload one driving round: for each fingerprint, the replay-phase
+        clients that will submit this round and their wire inputs."""
+        self._pending = {fp: list(members) for fp, members in entries.items()}
+        self._groups = {}
+
+    def make_submit(self, client: RRTOClient):
+        """A bound submit hook for ``RRTOClient.replay_submit``."""
+
+        def submit(inputs: List[np.ndarray], t: float):
+            return self.submit(client, inputs, t)
+
+        return submit
+
+    def submit(
+        self, client: RRTOClient, inputs: List[np.ndarray], t: float
+    ) -> Tuple[List[Any], float]:
+        fp = client.ios_fp
+        group = self._groups.get(fp) if fp is not None else None
+        if group is None:
+            group = self._execute_group(fp, t)
+        if group is None:
+            # nothing preloaded for this fingerprint: plain solo replay
+            self.solo_replays += 1
+            return self.server.run_replay(inputs, t, client.client_id)
+        if not group.claim(client.client_id, inputs):
+            self.solo_replays += 1
+            return self.server.run_replay(inputs, t, client.client_id)
+        # Preloaded members are concurrent by construction (the harness
+        # declared them one round); the serialized shared-clock driving means
+        # a later member's submit time can already exceed the group's finish,
+        # in which case its wait is simply zero.
+        outs = self.server.replay_values(inputs, client.client_id)
+        self.batched_replays += 1
+        return outs, max(group.done_at, t)
+
+    # ------------------------------------------------------------------
+    def _execute_group(self, fp: Optional[str], t: float) -> Optional[_BatchGroup]:
+        members = self._pending.pop(fp, None) if fp is not None else None
+        if not members:
+            return None
+        first = members[0][0]
+        program = self.server.context(first.client_id).replay.program
+        # the batch slot count is the admitted membership; a member that ends
+        # up falling back mid-walk still occupied its scheduled slot
+        batch = len(members)
+        compute = program.batched_compute_seconds(self.server.device, batch)
+        # a lone submitter flushes immediately; a real group waits out the
+        # batching window for its co-tenants before the one-shot execution
+        start = t + (self.window_s if batch > 1 else 0.0)
+        done_at = self.server.occupy(compute, start)
+        group = _BatchGroup(
+            done_at=done_at,
+            pending={cl.client_id: wire for cl, wire in members},
+        )
+        self._groups[fp] = group
+        self.batches_executed += 1
+        self.batch_sizes.append(batch)
+        return group
+
+
+class RRTOEdgeServer:
+    """Shared edge-server state + the cooperative multi-client driver."""
+
+    def __init__(
+        self,
+        *,
+        server_device: DeviceSpec = GTX_2080TI,
+        execute: bool = True,
+        cache_capacity: int = 8,
+        batch_window_s: float = 2e-3,
+        environment: str = "indoor",
+        ingress: Optional[ServerIngress] = None,
+        clock: Optional[SimClock] = None,
+    ):
+        self.clock = clock or SimClock()
+        self.cache = ReplayCache(cache_capacity)
+        self.server = OffloadServer(
+            server_device, execute=execute, replay_cache=self.cache
+        )
+        self.ingress = ingress or ServerIngress()
+        self.batcher = ReplayBatcher(self.server, window_s=batch_window_s)
+        self.environment = environment
+        self.sessions: Dict[str, OffloadSession] = {}
+
+    def connect(
+        self,
+        model: OffloadableModel,
+        *,
+        client_id: Optional[str] = None,
+        seed: Optional[int] = None,
+        min_repeats: int = 3,
+        **session_kwargs: Any,
+    ) -> OffloadSession:
+        """Attach one mobile client running ``model`` to this edge server.
+
+        Each client gets its own wireless link (seeded per client) tied to the
+        shared server ingress, its own energy meter, and a server-side
+        device-memory namespace keyed by ``client_id``."""
+        cid = client_id if client_id is not None else f"c{len(self.sessions)}"
+        if cid in self.sessions:
+            raise ValueError(f"client id {cid!r} already connected")
+        network = get_network(
+            self.environment, seed if seed is not None else len(self.sessions)
+        )
+        network.ingress = self.ingress
+        sess = OffloadSession(
+            model,
+            "rrto",
+            network=network,
+            server=self.server,
+            clock=self.clock,
+            client_id=cid,
+            min_repeats=min_repeats,
+            **session_kwargs,
+        )
+        sess.client.replay_submit = self.batcher.make_submit(sess.client)
+        self.sessions[cid] = sess
+        self.ingress.active_clients = len(self.sessions)
+        return sess
+
+    # ------------------------------------------------------------------
+    def run_round(
+        self, inputs_by_client: Dict[str, Tuple[Any, ...]]
+    ) -> Dict[str, InferenceResult]:
+        """Drive one inference per listed client, batching replays.
+
+        Replay-phase clients' wire inputs are preloaded into the batcher so
+        same-fingerprint submissions within the batching window execute as one
+        batched call; recording-phase clients run their per-operator RPC
+        storms serialized through the shared server and ingress."""
+        self.ingress.active_clients = len(inputs_by_client)
+        entries: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]] = {}
+        for cid, inputs in inputs_by_client.items():
+            sess = self.sessions[cid]
+            cl = sess.client
+            if cl.mode == MODE_REPLAYING and cl.ios_fp is not None:
+                entries.setdefault(cl.ios_fp, []).append(
+                    (cl, sess.replay_wire_inputs(inputs))
+                )
+        self.batcher.begin_round(entries)
+        return {
+            cid: self.sessions[cid].infer(*inputs)
+            for cid, inputs in inputs_by_client.items()
+        }
+
+    # ------------------------------------------------------------------
+    @property
+    def compile_count(self) -> int:
+        """Replay executables actually built (cache misses), not bindings."""
+        return self.server.compile_count
+
+    def recording_rpc_total(self) -> int:
+        """Total RPCs issued by clients while in the recording phase."""
+        total = 0
+        for sess in self.sessions.values():
+            for r in sess.history:
+                if r.mode == "recording":
+                    total += r.rpcs
+        return total
+
+    def summary(self) -> Dict[str, Any]:
+        return dict(
+            clients=len(self.sessions),
+            cache=dataclasses.asdict(self.cache.stats),
+            cached_programs=len(self.cache),
+            compiles=self.compile_count,
+            batches=self.batcher.batches_executed,
+            batched_replays=self.batcher.batched_replays,
+            solo_replays=self.batcher.solo_replays,
+            mean_batch=(
+                float(np.mean(self.batcher.batch_sizes))
+                if self.batcher.batch_sizes
+                else 0.0
+            ),
+            link_bytes=self.ingress.bytes_total,  # both directions
+            gpu_busy_seconds=self.server.busy_seconds,
+        )

@@ -1,0 +1,84 @@
+"""Content-addressed replay cache — the multi-tenant heart of the edge server.
+
+RRTO's economics hinge on one fact: after the Operator Sequence Search locks
+an inference operator sequence (IOS), every inference costs 2 RPCs instead of
+thousands.  A single-tenant server pays the search *and* the replay
+compilation once per client.  But clients running the same model produce the
+same IOS — so the server keys compiled :class:`~repro.core.engine.ReplayProgram`s
+by the canonical IOS fingerprint (:func:`repro.core.opseq.ios_fingerprint`)
+and shares them:
+
+* a client whose recorded log matches a cached fingerprint adopts the IOS
+  after a *single* recorded inference (no ``min_repeats`` wait) — total
+  recording-phase RPCs grow sublinearly in client count;
+* the one-shot XLA executable is compiled exactly once per fingerprint;
+* eviction is LRU with a bounded capacity (an edge box serves a rotating
+  population of model versions, not an unbounded zoo).
+
+The cache stores only *programs* (pure functions of the recorded payloads);
+per-client address bindings live in each client's
+:class:`~repro.core.engine.ClientContext`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.engine import ReplayProgram
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class ReplayCache:
+    """LRU map: IOS fingerprint -> compiled :class:`ReplayProgram`."""
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[str, ReplayProgram]" = OrderedDict()
+        self.stats = CacheStats()
+
+    def __contains__(self, fingerprint: str) -> bool:
+        # membership probes (the client-side cache-adoption check) do not
+        # count as hits/misses; only get() does
+        return fingerprint in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, fingerprint: str) -> Optional["ReplayProgram"]:
+        program = self._entries.get(fingerprint)
+        if program is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(fingerprint)
+        self.stats.hits += 1
+        return program
+
+    def put(self, fingerprint: str, program: "ReplayProgram") -> None:
+        if fingerprint in self._entries:
+            self._entries.move_to_end(fingerprint)
+        self._entries[fingerprint] = program
+        self.stats.insertions += 1
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+
+    @property
+    def fingerprints(self):
+        """Fingerprints in LRU order (oldest first)."""
+        return list(self._entries.keys())

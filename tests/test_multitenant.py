@@ -1,0 +1,230 @@
+"""Multi-tenant replay-cache serving: fingerprint stability across clients,
+cache-hit adoption skipping the recording phase, LRU eviction, cross-client
+batched replay correctness, per-client state isolation, and single-client
+equivalence with the pre-refactor path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.netsim import ServerIngress, indoor_network
+from repro.core.offload import OffloadableModel, OffloadSession
+from repro.core.opseq import ios_fingerprint
+from repro.serving.multitenant import RRTOEdgeServer
+from repro.serving.replay_cache import ReplayCache
+
+
+def make_mlp(seed=0, d_in=16, d_hidden=32, d_out=8):
+    rng = np.random.default_rng(seed)
+    params = {
+        "w1": rng.normal(0, 0.1, (d_in, d_hidden)).astype(np.float32),
+        "w2": rng.normal(0, 0.1, (d_hidden, d_out)).astype(np.float32),
+    }
+
+    def apply(p, x):
+        return [jnp.tanh(x @ p["w1"]) @ p["w2"]]
+
+    x = rng.normal(0, 1, (2, d_in)).astype(np.float32)
+    return OffloadableModel(f"mlp{seed}", apply, params, (x,)), x
+
+
+def make_deep_mlp(seed=0, d=16):
+    rng = np.random.default_rng(seed)
+    params = {
+        "w1": rng.normal(0, 0.1, (d, d)).astype(np.float32),
+        "w2": rng.normal(0, 0.1, (d, d)).astype(np.float32),
+        "w3": rng.normal(0, 0.1, (d, d)).astype(np.float32),
+    }
+
+    def apply(p, x):
+        h = jnp.tanh(x @ p["w1"])
+        h = jax.nn.relu(h @ p["w2"])
+        return [h @ p["w3"]]
+
+    x = rng.normal(0, 1, (2, d)).astype(np.float32)
+    return OffloadableModel(f"deep{seed}", apply, params, (x,)), x
+
+
+class TestFingerprint:
+    def test_stable_across_clients(self):
+        """Two independent sessions (own interceptor, own allocator) running
+        the same model must produce the same IOS fingerprint."""
+        ios = []
+        for seed in (0, 1):  # different network seeds, same model structure
+            model, x = make_mlp()
+            sess = OffloadSession(
+                model, "rrto", min_repeats=3, seed=seed, execute=False
+            )
+            sess.load()
+            for _ in range(5):
+                sess.infer(x)
+            assert sess.client.ios is not None
+            ios.append(sess.client.ios)
+        assert ios_fingerprint(ios[0].records) == ios_fingerprint(ios[1].records)
+
+    def test_differs_across_models(self):
+        fps = []
+        for maker in (make_mlp, make_deep_mlp):
+            model, x = maker()
+            sess = OffloadSession(model, "rrto", min_repeats=3, execute=False)
+            sess.load()
+            for _ in range(5):
+                sess.infer(x)
+            fps.append(ios_fingerprint(sess.client.ios.records))
+        assert fps[0] != fps[1]
+
+    def test_param_values_do_not_matter(self):
+        """Same architecture, different weights -> same fingerprint (the
+        structure, not the data, is the content address)."""
+        fps = []
+        for seed in (0, 7):
+            model, x = make_mlp(seed=seed)
+            sess = OffloadSession(model, "rrto", min_repeats=3, execute=False)
+            sess.load()
+            for _ in range(5):
+                sess.infer(x)
+            fps.append(ios_fingerprint(sess.client.ios.records))
+        assert fps[0] == fps[1]
+
+
+class TestCacheAdoption:
+    def test_late_client_skips_recording(self):
+        """A client joining after the cache is warm adopts the IOS after a
+        single recorded inference instead of min_repeats of them."""
+        model, x = make_mlp()
+        edge = RRTOEdgeServer(execute=True)
+        first = edge.connect(model, min_repeats=3)
+        for _ in range(3):
+            edge.run_round({"c0": (x,)})
+        assert first.client.mode == "replaying"
+        assert not first.client.cache_adopted
+
+        late = edge.connect(model, min_repeats=3)
+        edge.run_round({"c0": (x,), "c1": (x,)})
+        assert late.client.mode == "replaying"
+        assert late.client.cache_adopted
+        rec = [r for r in late.history if r.mode == "recording"]
+        assert len(rec) == 1  # one recorded inference, not three
+
+    def test_compile_exactly_once(self):
+        model, x = make_mlp()
+        edge = RRTOEdgeServer(execute=True)
+        edge.connect(model)
+        for _ in range(3):
+            edge.run_round({"c0": (x,)})
+        for i in range(3):
+            edge.connect(model)
+            edge.run_round({f"c{j}": (x,) for j in range(i + 2)})
+        assert edge.compile_count == 1
+        assert edge.cache.stats.hits == 3  # one bind per adopting client
+
+    def test_batched_replay_outputs_correct(self):
+        model, x = make_mlp()
+        ref = np.asarray(jax.jit(model.apply)(model.params, x)[0])
+        edge = RRTOEdgeServer(execute=True)
+        for i in range(3):
+            edge.connect(model)
+        all_ids = list(edge.sessions)
+        for _ in range(4):
+            results = edge.run_round({c: (x,) for c in all_ids})
+        assert all(
+            s.client.mode == "replaying" for s in edge.sessions.values()
+        )
+        for r in results.values():
+            np.testing.assert_allclose(
+                np.asarray(r.outputs[0]), ref, rtol=1e-5, atol=1e-5
+            )
+        assert edge.batcher.batches_executed >= 1
+        assert max(edge.batcher.batch_sizes) == 3
+
+    def test_per_client_params_isolated(self):
+        """Clients with the same architecture but different weights share one
+        compiled program yet keep their own parameter memory."""
+        m0, x = make_mlp(seed=0)
+        m1, _ = make_mlp(seed=7)
+        edge = RRTOEdgeServer(execute=True)
+        edge.connect(m0)
+        edge.connect(m1)
+        for _ in range(4):
+            results = edge.run_round({"c0": (x,), "c1": (x,)})
+        assert edge.compile_count == 1  # same fingerprint, one program
+        for model, cid in ((m0, "c0"), (m1, "c1")):
+            ref = np.asarray(jax.jit(model.apply)(model.params, x)[0])
+            np.testing.assert_allclose(
+                np.asarray(results[cid].outputs[0]), ref, rtol=1e-5, atol=1e-5
+            )
+
+
+class TestLRUEviction:
+    def test_evicts_least_recently_used(self):
+        class P:  # stand-in program
+            pass
+
+        cache = ReplayCache(capacity=2)
+        pa, pb, pc = P(), P(), P()
+        cache.put("a", pa)
+        cache.put("b", pb)
+        assert cache.get("a") is pa  # touch a -> b becomes LRU
+        cache.put("c", pc)
+        assert "b" not in cache and "a" in cache and "c" in cache
+        assert cache.stats.evictions == 1
+
+    def test_refetch_after_eviction_recompiles(self):
+        """Evicting a fingerprint forces a rebuild on the next miss."""
+        model_a, xa = make_mlp()
+        model_b, xb = make_deep_mlp()
+        edge = RRTOEdgeServer(execute=True)
+        edge.cache.capacity = 1
+        edge.connect(model_a)           # c0 locks model A -> cached
+        for _ in range(3):
+            edge.run_round({"c0": (xa,)})
+        edge.connect(model_b)           # c1 locks model B -> evicts A
+        for _ in range(3):
+            edge.run_round({"c0": (xa,), "c1": (xb,)})
+        assert edge.compile_count == 2
+        assert edge.cache.stats.evictions == 1
+        # a third client on model A misses the (evicted) entry and recompiles
+        edge.connect(model_a)
+        for _ in range(3):
+            edge.run_round({"c0": (xa,), "c1": (xb,), "c2": (xa,)})
+        assert edge.sessions["c2"].client.mode == "replaying"
+        assert edge.compile_count == 3
+
+
+class TestSingleClientEquivalence:
+    def test_edge_single_client_matches_plain_session(self):
+        """One client through the multi-tenant stack behaves like the plain
+        single-tenant OffloadSession: same outputs, same mode trajectory,
+        same per-inference RPC counts."""
+        model, x = make_mlp()
+        plain = OffloadSession(
+            model, "rrto", network=indoor_network(0), min_repeats=3
+        )
+        plain.load()
+        plain_hist = [plain.infer(x) for _ in range(6)]
+
+        edge = RRTOEdgeServer(execute=True)
+        sess = edge.connect(model, seed=0)
+        edge_hist = [edge.run_round({"c0": (x,)})["c0"] for _ in range(6)]
+
+        for p, e in zip(plain_hist, edge_hist):
+            assert p.mode == e.mode
+            assert p.rpcs == e.rpcs
+            np.testing.assert_allclose(
+                np.asarray(p.outputs[0]),
+                np.asarray(e.outputs[0]),
+                rtol=1e-6,
+                atol=1e-6,
+            )
+
+    def test_ingress_contention_slows_transfers(self):
+        ing = ServerIngress(capacity_bytes_per_s=10e6)
+        net = indoor_network(0)
+        net.ingress = ing
+        ing.active_clients = 1
+        t1 = net.transfer_time(1e6, 0.0)
+        ing.active_clients = 10
+        t10 = net.transfer_time(1e6, 0.0)
+        assert t10 > t1 * 5  # fair share: 10 MB/s -> 1 MB/s per client
