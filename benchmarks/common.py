@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 import sys
-from typing import Dict, List, Optional
+from typing import List
 
 sys.path.insert(0, "src")
 

@@ -2,7 +2,6 @@
 exceed the 30 ms video-fluency threshold, motivating offloading."""
 from __future__ import annotations
 
-import dataclasses
 
 from repro.core.costmodel import DeviceSpec
 from repro.core.energy import PowerModel

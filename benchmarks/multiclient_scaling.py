@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import sys
-from typing import Dict, List, Sequence
+from typing import List, Sequence
 
 sys.path.insert(0, "src")
 

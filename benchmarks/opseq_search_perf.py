@@ -9,7 +9,6 @@ import time
 import numpy as np
 
 from repro.core.opseq import (
-    fast_check,
     naive_max_repeated_subsequence,
     operator_sequence_search,
 )
@@ -19,7 +18,6 @@ from repro.core.records import (
     FUNC_H2D,
     FUNC_SYNC,
     OperatorRecord,
-    category_trace,
 )
 
 

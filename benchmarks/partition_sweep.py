@@ -1,0 +1,125 @@
+"""Partition sweep — modeled latency vs bandwidth for the split planner
+against the two binary-offloading endpoints (full offload, device only).
+
+The workload is the bandwidth-bottleneck sensor encoder
+(``make_sensor_encoder``): raw multi-channel input, a cheap stride-4 stem
+that shrinks the wire volume ~10x, and a heavy residual trunk.  The planner
+should track the device-only endpoint when the link is starved, the
+full-offload endpoint when the link is fat, and *beat both* in the interior
+by cutting after the stem — the partial-offloading regime of Mach & Becvar's
+taxonomy that binary offloading cannot reach.
+
+Output: one row per bandwidth point with the three modeled latencies and the
+chosen plan signature, plus dominance checks:
+``planner <= min(endpoints)`` everywhere and strictly better somewhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+SWEEP_MBPS = (0.5, 2.0, 8.0, 32.0, 128.0)
+MBPS = 1e6 / 8.0
+
+
+@dataclasses.dataclass
+class SweepRow:
+    bandwidth_mbps: float
+    planner_s: float
+    full_offload_s: float
+    device_only_s: float
+    plan_signature: str
+    n_device_ops: int
+    n_ops: int
+
+
+def record_graph(model=None, n_infer: int = 5):
+    """Record the workload's IOS once (analytic server, no real compute) and
+    return its segment graph + the session's device specs."""
+    from repro.core.offload import OffloadSession
+    from repro.models.cnn_zoo import make_sensor_encoder
+    from repro.partition import SegmentGraph
+
+    model = model or make_sensor_encoder(scale=1.0, input_size=96)
+    sess = OffloadSession(model, "rrto", environment="indoor", execute=False)
+    sess.load()
+    for _ in range(n_infer):
+        sess.infer(*model.example_inputs)
+    if sess.client.ios is None:
+        raise RuntimeError("IOS not identified during the recording sweep")
+    graph = SegmentGraph(sess.client._ios_calls)
+    return graph, sess.client_device, sess.server_device, model
+
+
+def run(
+    sweep_mbps: Tuple[float, ...] = SWEEP_MBPS,
+    model=None,
+) -> Tuple[List[SweepRow], Dict[str, bool]]:
+    from repro.partition import SplitPlan, evaluate_plan, plan_partition
+
+    graph, device, server, model = record_graph(model)
+    wire_div = model.input_wire_divisor
+    n = graph.n_ops
+    rows: List[SweepRow] = []
+    for mbps in sweep_mbps:
+        bw = mbps * MBPS
+        best = plan_partition(
+            graph, device, server, bw, input_wire_divisor=wire_div
+        )
+        full = evaluate_plan(
+            graph, SplitPlan.full_server(n), device, server, bw,
+            input_wire_divisor=wire_div,
+        )
+        dev = evaluate_plan(
+            graph, SplitPlan.full_device(n), device, server, bw,
+            input_wire_divisor=wire_div,
+        )
+        rows.append(
+            SweepRow(
+                bandwidth_mbps=mbps,
+                planner_s=best.seconds,
+                full_offload_s=full.seconds,
+                device_only_s=dev.seconds,
+                plan_signature=best.plan.signature(),
+                n_device_ops=best.plan.n_device_ops,
+                n_ops=n,
+            )
+        )
+    eps = 1e-12
+    checks = {
+        "planner_never_worse": all(
+            r.planner_s <= min(r.full_offload_s, r.device_only_s) + eps
+            for r in rows
+        ),
+        "interior_strictly_better": any(
+            r.planner_s < min(r.full_offload_s, r.device_only_s) * (1 - 1e-6)
+            for r in rows[1:-1]
+        ),
+    }
+    return rows, checks
+
+
+def main(sweep_mbps: Optional[Tuple[float, ...]] = None):
+    rows, checks = run(sweep_mbps or SWEEP_MBPS)
+    print(
+        f"{'bw (Mbps)':>10s} {'planner':>12s} {'full-offload':>13s} "
+        f"{'device-only':>12s} {'dev-ops':>8s}  plan"
+    )
+    for r in rows:
+        print(
+            f"{r.bandwidth_mbps:10.1f} {r.planner_s * 1e3:10.2f}ms "
+            f"{r.full_offload_s * 1e3:11.2f}ms {r.device_only_s * 1e3:10.2f}ms "
+            f"{r.n_device_ops:5d}/{r.n_ops:<3d} {r.plan_signature[:40]}"
+        )
+    print()
+    for name, ok in checks.items():
+        print(f"{name}: {'OK' if ok else 'FAILED'}")
+    if not all(checks.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    main()

@@ -6,9 +6,35 @@ per-inference latency of the RRTO system (or the benchmark's primary timing),
 """
 from __future__ import annotations
 
+import os
 import sys
 
-sys.path.insert(0, "src")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+
+def smoke() -> None:
+    """Tiny-config smoke run for CI: exercises session recording, the IOS
+    search, the split planner and the benchmark plumbing in well under a
+    minute, failing loudly if any modeled invariant breaks."""
+    from benchmarks import partition_sweep, tab4_rpc_gpu_util
+
+    print("== partition_sweep (smoke) ==", file=sys.stderr, flush=True)
+    rows, checks = partition_sweep.run()
+    assert all(checks.values()), f"partition sweep checks failed: {checks}"
+
+    print("== tab4_rpc_gpu_util (smoke) ==", file=sys.stderr, flush=True)
+    util = tab4_rpc_gpu_util.run()
+    assert util["rrto"]["rpcs"] == 11, util["rrto"]
+
+    print("name,us_per_call,derived")
+    interior = rows[len(rows) // 2]
+    print(
+        f"smoke_partition_sweep,{interior.planner_s * 1e6:.2f},"
+        f"plan={interior.plan_signature}"
+    )
+    print(f"smoke_tab4_rpcs,{float(util['rrto']['rpcs']):.2f},paper11")
 
 
 def main() -> None:
@@ -21,6 +47,7 @@ def main() -> None:
         fig12_model_zoo,
         multiclient_scaling,
         opseq_search_perf,
+        partition_sweep,
         roofline,
         tab3_rpc_composition,
         tab4_rpc_gpu_util,
@@ -107,6 +134,20 @@ def main() -> None:
         f"compiles={big.compiles};hit={100 * big.cache_hit_rate:.0f}%",
     ))
 
+    print("== partition_sweep ==", file=sys.stderr, flush=True)
+    sweep_rows, sweep_checks = partition_sweep.run()
+    interior = min(
+        sweep_rows[1:-1],
+        key=lambda r: r.planner_s / min(r.full_offload_s, r.device_only_s),
+    )
+    rows.append((
+        "partition_sweep",
+        interior.planner_s * 1e6,
+        f"bw={interior.bandwidth_mbps:g}Mbps;"
+        f"vs_binary={interior.planner_s / min(interior.full_offload_s, interior.device_only_s):.2f}x;"
+        f"dominates={all(sweep_checks.values())}",
+    ))
+
     print("== roofline ==", file=sys.stderr, flush=True)
     roof = roofline.load_rows()
     ok = [r for r in roof if r["status"] == "ok"]
@@ -123,4 +164,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+    else:
+        main()

@@ -10,12 +10,9 @@ it reads XLA's own ``cost_analysis()`` from the compiled dry-run.
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import reduce
 from operator import mul
-from typing import Any, Tuple
 
-import numpy as np
 
 
 def _size(shape) -> int:

@@ -25,10 +25,11 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.costmodel import DeviceSpec
+from repro.core.costmodel import JETSON_XAVIER_NX, DeviceSpec
 from repro.core.energy import (
     STATE_COMM,
     STATE_CONTROL,
+    STATE_INFERENCE,
     STATE_STANDBY,
     EnergyMeter,
 )
@@ -38,12 +39,17 @@ from repro.core.opseq import ios_fingerprint, operator_sequence_search
 from repro.core.records import (
     CAT_D2H,
     CAT_H2D,
-    CAT_KERNEL,
     FUNC_D2H,
     FUNC_H2D,
     InferenceSequence,
     OperatorRecord,
 )
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover — avoids core <-> partition import cycle
+    from repro.partition.adaptive import AdaptiveReplanner
+    from repro.partition.planner import PartitionConfig
+    from repro.partition.segments import SplitPlan
 
 MODE_RECORDING = "recording"
 MODE_REPLAYING = "replaying"
@@ -196,6 +202,144 @@ class BoundReplay:
         return cls.from_plan(program, replay_address_plan(calls))
 
 
+class SegmentedReplayProgram:
+    """Per-segment replay executables for one (IOS, split plan) pair.
+
+    Where :class:`ReplayProgram` compiles the whole kernel stream into one
+    server-side executable, this compiles one executable *per plan segment*
+    so device-resident segments can run on the mobile client and
+    server-resident segments on the GPU, with only the cut-crossing tensors
+    on the wire.  Content-addressed by ``(IOS fingerprint, plan signature)``
+    and shareable across clients: segment functions take
+    ``(params_flat, carried_flat)`` positionally, in the canonical
+    tid/first-read order both endpoints derive from their own recorded calls.
+    """
+
+    def __init__(self, calls: List[InterceptedCall], plan: "SplitPlan", *,
+                 execute: bool = True):
+        from repro.partition.segments import SegmentGraph
+
+        t0 = _time.perf_counter()
+        graph = SegmentGraph(calls)
+        if plan.n_ops != graph.n_ops:
+            raise ValueError(
+                f"plan covers {plan.n_ops} ops, IOS has {graph.n_ops}"
+            )
+        self.plan = plan
+        self.graph = graph            # the compiling client's binding
+        ops = [c for c in calls if c.prim is not None]
+        self.d2h_avals = [
+            c.out_avals[0] for c in calls if c.record.func == FUNC_D2H
+        ]
+        self.segments: List[dict] = []
+        for seg in plan.segments:
+            in_tids = graph.segment_inputs(seg)
+            out_tids = graph.segment_outputs(seg)
+            param_tids = [
+                t.tid
+                for t in graph.tensors
+                if t.is_param
+                and any(seg.start <= c < seg.end for c in t.consumers)
+            ]
+            fn = (
+                self._compile_segment(
+                    ops[seg.start : seg.end], graph, in_tids, out_tids,
+                    param_tids,
+                )
+                if execute
+                else None
+            )
+            self.segments.append(
+                dict(
+                    segment=seg,
+                    in_tids=in_tids,
+                    out_tids=out_tids,
+                    param_tids=param_tids,
+                    fn=fn,
+                )
+            )
+        self.compile_seconds = _time.perf_counter() - t0
+
+    @staticmethod
+    def _compile_segment(kernel_calls, graph, in_tids, out_tids, param_tids):
+        in_addrs = [graph.tensors[t].addr for t in in_tids]
+        out_addrs = [graph.tensors[t].addr for t in out_tids]
+        param_addrs = [graph.tensors[t].addr for t in param_tids]
+
+        def run(params_flat, carried_flat):
+            env: Dict[int, Any] = dict(zip(param_addrs, params_flat))
+            env.update(zip(in_addrs, carried_flat))
+            for c in kernel_calls:
+                invals = [
+                    env[v] if tag == "a" else v for tag, v in c.in_operands
+                ]
+                outs = c.prim.bind(*invals, **c.params)
+                if not c.prim.multiple_results:
+                    outs = [outs]
+                for addr, val in zip(c.out_addrs, outs):
+                    env[addr] = val
+            return [env[a] for a in out_addrs]
+
+        return jax.jit(run)
+
+
+@dataclasses.dataclass
+class BoundSegmentedReplay:
+    """A shared :class:`SegmentedReplayProgram` bound to one client's address
+    space: the client's own :class:`SegmentGraph` supplies the concrete
+    parameter/input addresses; the structural tid order is shared."""
+
+    program: SegmentedReplayProgram
+    graph: SegmentGraph
+
+    @classmethod
+    def from_own(cls, program: SegmentedReplayProgram) -> "BoundSegmentedReplay":
+        return cls(program=program, graph=program.graph)
+
+    @classmethod
+    def bind(
+        cls, program: SegmentedReplayProgram, calls: List[InterceptedCall]
+    ) -> "BoundSegmentedReplay":
+        from repro.partition.segments import SegmentGraph
+
+        return cls(program=program, graph=SegmentGraph(calls))
+
+    @property
+    def plan(self) -> "SplitPlan":
+        return self.program.plan
+
+    def execute(
+        self, inputs: List[np.ndarray], env: Dict[int, Any], *,
+        execute: bool = True,
+    ) -> List[Any]:
+        """Run every segment functionally (no timing), threading the
+        cut-crossing tensors; parameters come from ``env`` (this client's
+        server-side memory namespace, which mirrors its on-device weights)."""
+        if not execute:
+            return [np.zeros(s, d) for s, d in self.program.d2h_avals]
+        val: Dict[int, Any] = {
+            tid: np.asarray(v)
+            for tid, v in zip(self.graph.input_tids, inputs)
+        }
+        for spec in self.program.segments:
+            params = [
+                env[self.graph.tensors[t].addr] for t in spec["param_tids"]
+            ]
+            carried = [val[t] for t in spec["in_tids"]]
+            outs = spec["fn"](params, carried)
+            val.update(zip(spec["out_tids"], outs))
+        results: List[Any] = []
+        for tid in self.graph.output_tids:
+            if tid in val:
+                results.append(np.asarray(val[tid]))
+            else:  # an output aliasing a parameter buffer
+                results.append(np.asarray(env[self.graph.tensors[tid].addr]))
+        # refresh the env so a post-fallback recording phase sees the outputs
+        for tid, v in zip(self.graph.output_tids, results):
+            env[self.graph.tensors[tid].addr] = v
+        return results
+
+
 @dataclasses.dataclass
 class ClientContext:
     """Per-client server-side state: device memory namespace + bound replay.
@@ -205,6 +349,7 @@ class ClientContext:
 
     env: Dict[int, Any] = dataclasses.field(default_factory=dict)
     replay: Optional[BoundReplay] = None
+    split: Optional[BoundSegmentedReplay] = None
 
 
 class OffloadServer:
@@ -316,6 +461,41 @@ class OffloadServer:
         self.context(client_id).replay = bound
         return from_cache
 
+    def prepare_split(
+        self,
+        calls: List[InterceptedCall],
+        plan: "SplitPlan",
+        client_id: str = DEFAULT_CLIENT,
+        fingerprint: Optional[str] = None,
+    ) -> bool:
+        """Install per-segment replay executables for ``client_id``.
+
+        Segmented programs are cached under the composite key
+        ``(fingerprint, plan signature)`` — co-tenants on different networks
+        plan different cuts of the same shared IOS, and each cut is compiled
+        exactly once.  Returns True iff the program came from the cache."""
+        key = (
+            f"{fingerprint}|{plan.signature()}"
+            if fingerprint is not None
+            else None
+        )
+        program: Optional[SegmentedReplayProgram] = None
+        from_cache = False
+        if self.replay_cache is not None and key is not None:
+            program = self.replay_cache.get(key)
+            from_cache = program is not None
+        if program is None:
+            program = SegmentedReplayProgram(calls, plan, execute=self.execute)
+            self.compile_count += 1
+            self.compile_seconds = program.compile_seconds
+            if self.replay_cache is not None and key is not None:
+                self.replay_cache.put(key, program)
+            bound = BoundSegmentedReplay.from_own(program)
+        else:
+            bound = BoundSegmentedReplay.bind(program, calls)
+        self.context(client_id).split = bound
+        return from_cache
+
     @property
     def replay_ready(self) -> bool:
         return self.has_replay()
@@ -339,7 +519,11 @@ class OffloadServer:
                 params_flat, [np.asarray(x) for x in inputs]
             )
             outs = [np.asarray(o) for o in outs]
-            # refresh the env so a post-fallback recording phase sees it
+            # refresh the env (inputs AND outputs) so a post-fallback
+            # recording-phase catch-up replays against this inference's
+            # buffers, not the last recorded one's
+            for addr, val in zip(bound.h2d_addrs, inputs):
+                ctx.env[addr] = np.asarray(val)
             for addr, val in zip(bound.d2h_addrs, outs):
                 ctx.env[addr] = val
         else:
@@ -396,6 +580,9 @@ class RRTOClient:
         min_repeats: int = 3,
         search_on_d2h: bool = True,
         client_id: str = DEFAULT_CLIENT,
+        client_device: DeviceSpec = JETSON_XAVIER_NX,
+        partition: Optional["PartitionConfig"] = None,
+        input_wire_divisor: float = 1.0,
     ):
         if variant not in ("rrto", "semi_rrto", "transparent"):
             raise ValueError(variant)
@@ -407,12 +594,20 @@ class RRTOClient:
         self.min_repeats = min_repeats
         self.search_on_d2h = search_on_d2h
         self.client_id = client_id
+        self.client_device = client_device
+        self.input_wire_divisor = input_wire_divisor
         # multi-tenant hooks: the IOS fingerprint once identified, whether it
         # was adopted from the shared cache (skipping the min_repeats wait),
         # and an optional replay-execution backend (cross-client batching)
         self.ios_fp: Optional[str] = None
         self.cache_adopted = False
         self.replay_submit: Optional[Any] = None
+        # split-replay partitioning (None = classic full-server replay)
+        self.partition = partition
+        self.replanner: Optional["AdaptiveReplanner"] = None
+        self.split_plan: Optional["SplitPlan"] = None
+        self._split_output_local: List[bool] = []
+        self._inputs_uploaded = False
 
         self.mode = MODE_RECORDING
         self.logs: List[OperatorRecord] = []
@@ -433,6 +628,18 @@ class RRTOClient:
         self.stats = InferenceStats()
 
     # -- helpers -------------------------------------------------------------
+    @property
+    def replay_key(self) -> Optional[str]:
+        """Cache/batch identity of this client's replay executable:
+        the IOS fingerprint, extended by the split-plan signature when a
+        partition is active (co-tenants on different networks run different
+        cuts of the same IOS and must not share executables or batches)."""
+        if self.ios_fp is None:
+            return None
+        if self.split_plan is None:
+            return self.ios_fp
+        return f"{self.ios_fp}|{self.split_plan.signature()}"
+
     def _rpc(self, payload: float, response: float) -> None:
         dt = self.network.rpc_time(payload, response, self.clock.t)
         self.clock.advance(dt)
@@ -530,8 +737,37 @@ class RRTOClient:
         self.server.prepare_replay(
             self._ios_calls, client_id=self.client_id, fingerprint=fp
         )
+        if self.partition is not None:
+            from repro.partition.adaptive import AdaptiveReplanner
+            from repro.partition.segments import SegmentGraph
+
+            self.replanner = AdaptiveReplanner(
+                SegmentGraph(self._ios_calls),
+                self.client_device,
+                self.server.device,
+                rtt_s=self.network.base_rtt_s,
+                power=self.meter.power_model,
+                config=self.partition,
+                input_wire_divisor=self.input_wire_divisor,
+            )
+            self._install_plan(
+                self.replanner.initial_plan(
+                    self.network.bandwidth_at(self.clock.t), self.clock.t
+                )
+            )
         self.mode = MODE_REPLAYING
         self._replay_pos = 0
+
+    def _install_plan(self, plan: "SplitPlan") -> None:
+        """Adopt a split plan; a full-server plan reverts to classic replay."""
+        if plan.is_full_server:
+            self.split_plan = None
+            return
+        self.split_plan = plan
+        self.server.prepare_split(
+            self._ios_calls, plan, client_id=self.client_id,
+            fingerprint=self.ios_fp,
+        )
 
     # -- replaying-phase handling ----------------------------------------------
     def _replay_call(self, call: InterceptedCall) -> Any:
@@ -546,13 +782,24 @@ class RRTOClient:
             self._replay_inputs = []
             self._replay_outputs = None
             self._out_cursor = 0
+            self._split_output_local = []
+            self._inputs_uploaded = False
 
         self._replay_pos = (self._replay_pos + 1) % len(self.ios)
         self._replay_prefix.append(call)
 
         if rec.category == CAT_H2D:
+            if self.split_plan is not None:
+                # split replay: inputs stay on the device until a segment
+                # schedule actually needs them on the wire
+                self._local()
+                self._replay_inputs.append(np.asarray(call.h2d_value))
+                if len(self._replay_inputs) == len(self.ios.h2d_positions):
+                    self._run_split_replay()
+                return "cudaSuccess"
             # the only client->server RPC left: ship the raw input
             self._rpc(rec.payload_bytes, 32)
+            self._inputs_uploaded = True
             self._replay_inputs.append(np.asarray(call.h2d_value))
             if len(self._replay_inputs) == len(self.ios.h2d_positions):
                 if self.replay_submit is not None:
@@ -566,11 +813,24 @@ class RRTOClient:
                     )
                 self._replay_outputs = outs
                 self._replay_done_at = done_at
+                # a full-server plan must keep watching the link, or a
+                # bandwidth collapse could never swap it back to a split
+                self._maybe_replan()
             return "cudaSuccess"
 
         if rec.category == CAT_D2H:
-            # wait for the one-shot server execution, then download
+            # wait for the one-shot (or segmented) execution to finish
             self._wait_until(self._replay_done_at)
+            cursor = self._out_cursor
+            self._out_cursor += 1
+            if (
+                cursor < len(self._split_output_local)
+                and self._split_output_local[cursor]
+            ):
+                # this output was produced by a device-resident segment: the
+                # download is a local memcpy, no network round trip
+                self._local()
+                return self._replay_outputs[cursor]
             dt = (
                 self.network._rtt_at(self.clock.t)
                 + self.network.transfer_time(rec.response_bytes, self.clock.t)
@@ -579,23 +839,78 @@ class RRTOClient:
             self.meter.add(STATE_COMM, dt)
             self.stats.rpcs += 1
             self.stats.network_bytes += rec.payload_bytes + rec.response_bytes
-            out = self._replay_outputs[self._out_cursor]
-            self._out_cursor += 1
-            return out
+            return self._replay_outputs[cursor]
 
         # intermediate operator: answered from the recorded result, locally
         self._local()
         return expected.ret
+
+    def _run_split_replay(self) -> None:
+        """Execute the split plan: device segments run locally (device-class
+        cost + inference-power accounting), server segments occupy the shared
+        GPU, and boundary tensors ship with uplink overlapped against the
+        device compute that follows their producers.  Afterwards the adaptive
+        re-planner observes the live bandwidth and may swap plans."""
+        from repro.partition.segments import NetworkLink, compute_schedule
+
+        ctx = self.server.context(self.client_id)
+        bound = ctx.split
+        t0 = self.clock.t
+        sched = compute_schedule(
+            bound.graph,
+            self.split_plan,
+            self.client_device,
+            self.server.device,
+            NetworkLink(self.network, self.input_wire_divisor),
+            t0=t0,
+            # the D2H records pay the real output downlink; modeling it here
+            # would double-charge the shared ingress
+            include_output_downlink=False,
+        )
+        outs = bound.execute(
+            self._replay_inputs, ctx.env, execute=self.server.execute
+        )
+        for start, dur in sched.server_busy:
+            self.server.occupy(dur, start)
+        # phase-integrated billing covers the body exactly once: overlapped
+        # uplink is inside the inference draw (see Schedule.radio_only_seconds)
+        self.meter.add(STATE_INFERENCE, sched.device_seconds)
+        self.meter.add(STATE_COMM, sched.radio_only_seconds)
+        self.meter.add(STATE_STANDBY, sched.wait_seconds)
+        self.clock.advance(sched.body_seconds)
+        if sched.server_busy and self.server.busy_until > self.clock.t:
+            # co-tenant GPU contention extended our server segments
+            self._wait_until(self.server.busy_until)
+        self.stats.rpcs += sched.crossings
+        self.stats.network_bytes += sched.comm_bytes
+        self._split_output_local = list(sched.output_local)
+        self._replay_outputs = outs
+        self._replay_done_at = self.clock.t
+        self._maybe_replan()
+
+    def _maybe_replan(self) -> None:
+        """Feed the live bandwidth to the adaptive re-planner; an adopted
+        swap takes effect from the next inference (this inference's D2H
+        locality is pinned by ``_split_output_local``)."""
+        if self.replanner is None:
+            return
+        new_plan = self.replanner.observe(
+            self.network.bandwidth_at(self.clock.t), self.clock.t
+        )
+        if new_plan is not None:
+            self._install_plan(new_plan)
 
     def _fallback(self, call: InterceptedCall) -> Any:
         """Sequence deviation (DAM): ship the locally-answered prefix to the
         server for catch-up, revert to recording, re-search later."""
         self.fallbacks += 1
         self.mode = MODE_RECORDING
+        # when the inputs never reached the server this inference (split mode
+        # holds them back for the segment schedule), the catch-up batch must
+        # carry the H2D calls too or the server replays against stale buffers
+        skip = (CAT_H2D, CAT_D2H) if self._inputs_uploaded else (CAT_D2H,)
         prefix = [
-            c
-            for c in self._replay_prefix
-            if c.record.category not in (CAT_H2D, CAT_D2H)
+            c for c in self._replay_prefix if c.record.category not in skip
         ]
         if prefix:
             payload = sum(c.record.payload_bytes for c in prefix)

@@ -12,7 +12,6 @@ ratios (see EXPERIMENTS.md §Paper-validation).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import numpy as np
@@ -110,7 +109,10 @@ class NetworkModel:
         if self.ingress is not None:
             bw = min(bw, self.ingress.share())
             self.ingress.bytes_total += nbytes
-        return nbytes / bw
+        # a zero-bandwidth interval (obstructed radio, saturated ingress)
+        # stalls the transfer for a long-but-finite interval instead of
+        # dividing by zero; the trace recovers on later samples
+        return nbytes / max(bw, 1e-6)
 
     def rpc_time(self, payload_bytes: float, response_bytes: float, t: float) -> float:
         """Blocking RPC: request out, response back, plus stack overheads."""

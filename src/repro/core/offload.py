@@ -40,19 +40,14 @@ from repro.core.energy import (
 from repro.core.engine import (
     REPLAY_FUSION_FACTOR,
     REPLAY_KERNELS_PER_FUSION,
-    MODE_RECORDING,
-    MODE_REPLAYING,
     OffloadServer,
     RRTOClient,
     SimClock,
 )
-from repro.core.intercept import (
-    BufferArena,
-    FrameworkNoiseModel,
-    JaxprInterceptor,
-)
+from repro.core.intercept import FrameworkNoiseModel, JaxprInterceptor
 from repro.core.flatten import flatten_closed_jaxpr
 from repro.core.netsim import NetworkModel, get_network
+from repro.partition.planner import PartitionConfig
 
 SYSTEMS = ("device_only", "nnto", "cricket", "semi_rrto", "rrto")
 
@@ -114,6 +109,7 @@ class OffloadSession:
         server: Optional[OffloadServer] = None,
         clock: Optional[SimClock] = None,
         client_id: str = "c0",
+        partition: Optional["PartitionConfig"] = None,
     ):
         if system not in SYSTEMS:
             raise ValueError(f"unknown system {system!r}; pick from {SYSTEMS}")
@@ -188,6 +184,9 @@ class OffloadSession:
                 variant=variant,
                 min_repeats=min_repeats,
                 client_id=client_id,
+                client_device=client_device,
+                partition=partition if system == "rrto" else None,
+                input_wire_divisor=model.input_wire_divisor,
             )
             self.interceptor = JaxprInterceptor(
                 self.client,

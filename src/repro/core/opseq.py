@@ -17,7 +17,7 @@ The search is hint-free: it sees nothing but the raw log.
 from __future__ import annotations
 
 import hashlib
-from typing import List, Optional, Sequence, Set
+from typing import Optional, Sequence, Set
 
 from repro.core.records import (
     CAT_D2H,

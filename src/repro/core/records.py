@@ -12,7 +12,7 @@ memory transfers and syncs that bracket them).  Records must be:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Categories (the "compact string of operator categories" used by FastCheck).

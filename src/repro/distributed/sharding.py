@@ -10,10 +10,51 @@ active (so the same model code runs un-meshed in unit tests).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence
+from typing import Any, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def compat_make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types across jax versions.
+
+    jax >= 0.5 takes ``axis_types`` (and tests there want explicit
+    ``AxisType.Auto`` to silence the implicit-sharding migration); jax < 0.5
+    predates the enum and its ``make_mesh`` accepts no such keyword.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            axis_shapes,
+            axis_names,
+            devices=devices,
+            axis_types=(axis_type.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def use_mesh(mesh):
+    """``jax.set_mesh(mesh)`` across jax versions (context-manager form).
+
+    On jax < 0.5 the equivalent context is the physical mesh itself
+    (``with mesh:``), which installs the thread-local mesh that
+    :func:`current_abstract_mesh` falls back to.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def get_shard_map():
+    """``jax.shard_map`` on jax >= 0.5, the experimental export before it."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map
 
 
 def current_abstract_mesh():

@@ -15,8 +15,7 @@ contributed; gradient contributions are rescaled by the participation count.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 
 @dataclasses.dataclass

@@ -14,7 +14,6 @@ grouping and attention logit soft-capping.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

@@ -2,12 +2,12 @@
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ssm_scan.kernel import gated_scan_pallas, ssm_scan_pallas
+from repro.kernels.ssm_scan.kernel import gated_scan_pallas
 from repro.kernels.ssm_scan.ref import (
     gated_scan_ref,
     gated_step_ref,

@@ -26,13 +26,11 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import CONFIGS, SHAPES
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.distributed.sharding import translate_tree
+from repro.distributed.sharding import translate_tree, use_mesh
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh, mesh_dp_size
 from repro.models.registry import (
@@ -129,7 +127,7 @@ def _sharding_tree(spec_tree, mesh, struct_tree=None):
 def batch_shardings(batch_struct, mesh):
     dp = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
     return jax.tree.map(
-        lambda l: _fit(P(dp, *([None] * (len(l.shape) - 1))), l, mesh),
+        lambda leaf: _fit(P(dp, *([None] * (len(leaf.shape) - 1))), leaf, mesh),
         batch_struct,
     )
 
@@ -151,7 +149,7 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
     p_shard = _sharding_tree(p_specs, mesh, p_struct)
     rep = NamedSharding(mesh, P())
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             train_step = make_train_step(cfg, remat=True)
             opt_struct = jax.eval_shape(init_opt_state, p_struct)

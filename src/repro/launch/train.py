@@ -11,12 +11,9 @@ sequence.  ``--kill-at`` injects a crash for the restart test.
 from __future__ import annotations
 
 import argparse
-import os
-import sys
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import store
 from repro.configs import get_config, get_reduced_config

@@ -112,7 +112,9 @@ def _sp_decode_attention(q, k_cache, v_cache, kv_len, cfg, mesh):
     chips.  This is what GSPMD fails to find for the masked-softmax pattern
     (it replicates the cache instead — 'involuntary full rematerialization').
     """
-    from jax import shard_map
+    from repro.distributed.sharding import get_shard_map
+
+    shard_map = get_shard_map()
 
     b, hq, d = q.shape
     _, s, hkv, _ = k_cache.shape

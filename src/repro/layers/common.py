@@ -1,7 +1,6 @@
 """Shared layer utilities: initializers, dense application, dtype policy."""
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

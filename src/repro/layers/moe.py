@@ -111,7 +111,9 @@ def _local_dispatch_shardmap(p, x, cfg, mesh):
     down-projection.  GSPMD's scatter partitioner replicates the global-token
     dispatch (measured in EXPERIMENTS.md §Perf) — shard_map removes its
     freedom to do so."""
-    from jax import shard_map
+    from repro.distributed.sharding import get_shard_map
+
+    shard_map = get_shard_map()
     from jax.sharding import PartitionSpec as P
 
     b, s, d = x.shape

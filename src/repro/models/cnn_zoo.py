@@ -14,8 +14,7 @@ full width with ``execute=False`` sessions (latency/energy are analytic).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -258,6 +257,52 @@ def make_convnext_tiny(scale: float = 1.0, input_size: int = 224, seed: int = 0)
 
     x = rng.integers(0, 255, (1, input_size, input_size, 3)).astype(np.uint8)
     return OffloadableModel("convnext_tiny", apply, params, (x,), input_wire_divisor=10.0)
+
+
+# ---------------------------------------------------------------------------
+# sensor encoder — bandwidth-constrained partial-offloading workload
+# ---------------------------------------------------------------------------
+
+def make_sensor_encoder(
+    scale: float = 1.0, input_size: int = 96, seed: int = 0,
+    n_blocks: int = 12,
+):
+    """Multi-channel sensor encoder with an early spatial bottleneck.
+
+    Not part of the paper's torchvision zoo: this is the shape of workload
+    where *partial* offloading beats binary offloading (see
+    ``repro.partition``).  The input is an 8-channel raw sensor stack (depth /
+    thermal / radar planes — does not JPEG, ships uncompressed), a cheap
+    stride-4 stem shrinks it ~10x, and a deep residual trunk at the reduced
+    resolution carries almost all of the FLOPs.  Cutting after the stem ships
+    a tenth of the bytes of full offloading while keeping ~99% of the compute
+    on the server; device-only pays the whole trunk."""
+    rng = np.random.default_rng(seed)
+    c_in = 8
+    c_stem = _c(16, scale)
+    c_trunk = _c(256, scale)
+    params: Dict[str, Any] = {}
+    _conv_params(rng, 5, c_in, c_stem, "stem", params)
+    _conv_params(rng, 1, c_stem, c_trunk, "expand", params)
+    for i in range(n_blocks):
+        _conv_params(rng, 3, c_trunk, c_trunk, f"b{i}_1", params)
+        _conv_params(rng, 3, c_trunk, c_trunk, f"b{i}_2", params)
+    params["fc_w"] = rng.normal(0, 0.01, (c_trunk, 64)).astype(np.float32)
+
+    def apply(params, x):
+        h = _conv_bn_act(params, "stem", x, stride=4)
+        h = _conv_bn_act(params, "expand", h)
+        for i in range(n_blocks):
+            y = _conv_bn_act(params, f"b{i}_1", h)
+            y = _conv_bn_act(params, f"b{i}_2", y, act="none")
+            h = jax.nn.relu(h + y)
+        return [jnp.mean(h, axis=(1, 2)) @ params["fc_w"]]
+
+    x = rng.normal(0, 1, (1, input_size, input_size, c_in)).astype(np.float32)
+    # raw sensor planes: no camera-style wire compression
+    return OffloadableModel(
+        "sensor_encoder", apply, params, (x,), input_wire_divisor=1.0
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -561,6 +606,7 @@ def make_kapao_calibrated(scale: float = 1.0, input_size: int = 256,
 ZOO = {
     "vgg16": make_vgg16,
     "resnet50": make_resnet50,
+    "sensor_encoder": make_sensor_encoder,
     "convnext_tiny": make_convnext_tiny,
     "fcn_resnet50": make_fcn_resnet50,
     "deeplabv3_resnet50": make_deeplabv3_resnet50,

@@ -9,7 +9,6 @@ Whisper's LayerNorm; structurally identical cost).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

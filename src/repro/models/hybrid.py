@@ -9,7 +9,7 @@ DESIGN.md as the grouping convention.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

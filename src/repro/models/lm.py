@@ -19,7 +19,7 @@ API (shared by all model families in this repo):
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig, SHAPES, ShapeConfig
+from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import encdec, hybrid, lm, xlstm_lm
 
 

@@ -8,7 +8,7 @@ mLSTM blocks form a tail group.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

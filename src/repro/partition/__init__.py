@@ -1,0 +1,39 @@
+"""Split-replay partition planning: adaptive device/server segmentation of a
+recorded inference operator sequence (partial offloading on top of RRTO's
+record/replay engine)."""
+from repro.partition.adaptive import AdaptiveReplanner, ReplannerStats
+from repro.partition.planner import (
+    EvaluatedPlan,
+    PartitionConfig,
+    evaluate_plan,
+    plan_partition,
+)
+from repro.partition.segments import (
+    PLACE_DEVICE,
+    PLACE_SERVER,
+    ConstantLink,
+    NetworkLink,
+    Schedule,
+    Segment,
+    SegmentGraph,
+    SplitPlan,
+    compute_schedule,
+)
+
+__all__ = [
+    "AdaptiveReplanner",
+    "ReplannerStats",
+    "EvaluatedPlan",
+    "PartitionConfig",
+    "evaluate_plan",
+    "plan_partition",
+    "PLACE_DEVICE",
+    "PLACE_SERVER",
+    "ConstantLink",
+    "NetworkLink",
+    "Schedule",
+    "Segment",
+    "SegmentGraph",
+    "SplitPlan",
+    "compute_schedule",
+]

@@ -1,0 +1,135 @@
+"""Adaptive re-planning: track the live bandwidth and swap split plans when
+the modeled optimum moves.
+
+A mobile client's link is nonstationary (the paper's outdoor trace drops to
+near-zero under obstruction).  A plan chosen at 90 Mbps is wrong at 5 Mbps —
+but re-planning on every sample would thrash between plans whose modeled
+costs differ by noise, and every swap costs a per-segment compile on the
+server.  The re-planner therefore:
+
+* EMA-smooths observed bandwidth samples (``bandwidth_ema``);
+* rate-limits planning itself (``min_replan_interval_s`` of simulated time);
+* applies switching hysteresis: the candidate plan must beat the *current*
+  plan's modeled cost at the smoothed bandwidth by at least ``hysteresis``
+  (relative) before it is adopted.
+
+The re-planner is deliberately engine-agnostic: it sees bandwidth samples
+and returns plans; the replay engine owns plan installation (per-segment
+executable compilation and cache interaction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.costmodel import DeviceSpec
+from repro.core.energy import PowerModel
+from repro.partition.planner import (
+    EvaluatedPlan,
+    PartitionConfig,
+    evaluate_plan,
+    plan_partition,
+)
+from repro.partition.segments import SegmentGraph, SplitPlan
+
+
+@dataclasses.dataclass
+class ReplannerStats:
+    observations: int = 0
+    plans_considered: int = 0
+    replans: int = 0              # adopted swaps
+    rejected_by_hysteresis: int = 0
+
+
+class AdaptiveReplanner:
+    """Owns the current :class:`SplitPlan` for one client session."""
+
+    def __init__(
+        self,
+        graph: SegmentGraph,
+        device: DeviceSpec,
+        server: DeviceSpec,
+        *,
+        rtt_s: float = 1.0e-4,
+        power: Optional[PowerModel] = None,
+        config: Optional[PartitionConfig] = None,
+        input_wire_divisor: float = 1.0,
+    ):
+        self.graph = graph
+        self.device = device
+        self.server = server
+        self.rtt_s = rtt_s
+        self.power = power or PowerModel()
+        self.config = config or PartitionConfig()
+        self.input_wire_divisor = input_wire_divisor
+        self.stats = ReplannerStats()
+        self.ema_bandwidth: Optional[float] = None
+        self._last_plan_t: Optional[float] = None
+        self.current: Optional[EvaluatedPlan] = None
+
+    # ------------------------------------------------------------------
+    def _plan_at(self, bandwidth: float) -> EvaluatedPlan:
+        self.stats.plans_considered += 1
+        return plan_partition(
+            self.graph,
+            self.device,
+            self.server,
+            bandwidth,
+            rtt_s=self.rtt_s,
+            power=self.power,
+            config=self.config,
+            input_wire_divisor=self.input_wire_divisor,
+        )
+
+    def initial_plan(self, bandwidth: float, now: float = 0.0) -> SplitPlan:
+        self.ema_bandwidth = bandwidth
+        self._last_plan_t = now
+        self.current = self._plan_at(bandwidth)
+        return self.current.plan
+
+    def observe(self, bandwidth: float, now: float) -> Optional[SplitPlan]:
+        """Feed one bandwidth sample; returns a new plan iff the session
+        should swap (hysteresis and rate limit already applied)."""
+        if self.current is None:
+            return self.initial_plan(bandwidth, now)
+        self.stats.observations += 1
+        alpha = self.config.bandwidth_ema
+        self.ema_bandwidth = (
+            bandwidth
+            if self.ema_bandwidth is None
+            else alpha * bandwidth + (1 - alpha) * self.ema_bandwidth
+        )
+        if not self.config.adaptive:
+            return None
+        if (
+            self._last_plan_t is not None
+            and now - self._last_plan_t < self.config.min_replan_interval_s
+        ):
+            return None
+        self._last_plan_t = now
+
+        candidate = self._plan_at(self.ema_bandwidth)
+        if candidate.plan.signature() == self.current.plan.signature():
+            self.current = candidate     # refresh modeled cost at current bw
+            return None
+        # hysteresis compares both plans at the *same* operating point
+        incumbent = evaluate_plan(
+            self.graph,
+            self.current.plan,
+            self.device,
+            self.server,
+            self.ema_bandwidth,
+            rtt_s=self.rtt_s,
+            power=self.power,
+            input_wire_divisor=self.input_wire_divisor,
+        )
+        objective = self.config.objective
+        cand_cost = candidate.seconds if objective == "latency" else candidate.joules
+        inc_cost = incumbent.seconds if objective == "latency" else incumbent.joules
+        if cand_cost < inc_cost * (1.0 - self.config.hysteresis):
+            self.current = candidate
+            self.stats.replans += 1
+            return candidate.plan
+        self.stats.rejected_by_hysteresis += 1
+        self.current = incumbent
+        return None

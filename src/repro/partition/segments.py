@@ -1,0 +1,541 @@
+"""Segment model of a recorded IOS — the substrate of the split planner.
+
+A recorded inference operator sequence is a straight-line program: H2D input
+uploads, a kernel stream, D2H output downloads.  For partial offloading we
+need to know, for every possible cut, *what would cross the wire*: the
+versioned tensors produced on one side of the cut and consumed on the other.
+:class:`SegmentGraph` extracts that structure from the recorded
+:class:`~repro.core.intercept.InterceptedCall` list using the same
+data-dependency closure that validated the IOS (observation ③, see
+:func:`repro.core.opseq.check_data_dependency` / :func:`tensor_versions`):
+
+* every operator becomes an :class:`OpInfo` with its analytic cost
+  (FLOPs / HBM bytes from the record, per ``core/costmodel.py``);
+* every buffer *version* becomes a :class:`TensorInfo` with its producer op,
+  consumer ops and wire size — device addresses are reused by the caching
+  allocator, so liveness must be per-version, not per-address;
+* parameters (buffers read but never written inside the sequence) are
+  resident on both endpoints — the model lives on the device (transparent
+  offloading intercepts *below* an unmodified app) and its parameters were
+  uploaded to the server during the model-load phase — so they never cross a
+  cut.
+
+:class:`SplitPlan` is the planner's output: a contiguous segmentation of the
+op stream with a device/server placement per segment.
+:func:`compute_schedule` is the *shared* timing model — the planner evaluates
+candidate plans with it and the replay engine executes the chosen plan by it,
+so the modeled optimum and the simulated execution can never disagree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import DeviceSpec
+from repro.core.records import FUNC_D2H, FUNC_H2D
+
+PLACE_DEVICE = "device"
+PLACE_SERVER = "server"
+
+# producer sentinels for TensorInfo
+PRODUCER_INPUT = -1   # replay input (H2D upload of the app's inference input)
+PRODUCER_PARAM = -2   # parameter-like: resident on both endpoints
+
+# server-side replay executables are fused (replay-as-compilation); device
+# segments dispatch eagerly like the device-only baseline (mobile frameworks
+# run op-by-op).  Mirrors core/engine.py REPLAY_* constants.
+SERVER_FUSION_FACTOR = 0.6
+SERVER_KERNELS_PER_FUSION = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class OpInfo:
+    """One kernel (or DtoD copy) of the IOS kernel stream."""
+
+    index: int
+    flops: float
+    mem_bytes: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorInfo:
+    """One buffer *version* flowing through the IOS."""
+
+    tid: int
+    addr: int
+    nbytes: int
+    producer: int                  # op index, PRODUCER_INPUT or PRODUCER_PARAM
+    consumers: Tuple[int, ...]     # op indices; len(ops) marks D2H consumption
+
+    @property
+    def is_param(self) -> bool:
+        return self.producer == PRODUCER_PARAM
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous run of ops [start, end) with one placement."""
+
+    start: int
+    end: int
+    placement: str
+
+    def __post_init__(self):
+        if self.placement not in (PLACE_DEVICE, PLACE_SERVER):
+            raise ValueError(f"bad placement {self.placement!r}")
+        if not 0 <= self.start < self.end:
+            raise ValueError(f"bad segment bounds [{self.start}, {self.end})")
+
+    @property
+    def n_ops(self) -> int:
+        return self.end - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitPlan:
+    """A device/server segmentation of the IOS kernel stream.
+
+    ``signature()`` is the plan's identity for cache keying: two plans with
+    the same cuts and placements are the same executable regardless of the
+    bandwidth they were planned at."""
+
+    segments: Tuple[Segment, ...]
+    objective: str = "latency"
+    planned_bandwidth: float = 0.0     # bytes/s the planner assumed
+    modeled_seconds: float = 0.0
+    modeled_joules: float = 0.0
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("a plan needs at least one segment")
+        pos = 0
+        for i, seg in enumerate(self.segments):
+            if seg.start != pos:
+                raise ValueError(f"segment {i} starts at {seg.start}, not {pos}")
+            if i > 0 and seg.placement == self.segments[i - 1].placement:
+                raise ValueError("adjacent segments share a placement")
+            pos = seg.end
+
+    @property
+    def n_ops(self) -> int:
+        return self.segments[-1].end
+
+    @property
+    def n_device_ops(self) -> int:
+        return sum(
+            s.n_ops for s in self.segments if s.placement == PLACE_DEVICE
+        )
+
+    @property
+    def is_full_server(self) -> bool:
+        return self.n_device_ops == 0
+
+    @property
+    def is_full_device(self) -> bool:
+        return self.n_device_ops == self.n_ops
+
+    def placement_of(self, op_index: int) -> str:
+        for seg in self.segments:
+            if seg.start <= op_index < seg.end:
+                return seg.placement
+        raise IndexError(op_index)
+
+    def signature(self) -> str:
+        return "|".join(
+            f"{'D' if s.placement == PLACE_DEVICE else 'S'}{s.start}:{s.end}"
+            for s in self.segments
+        )
+
+    @staticmethod
+    def full_server(n_ops: int) -> "SplitPlan":
+        return SplitPlan(segments=(Segment(0, n_ops, PLACE_SERVER),))
+
+    @staticmethod
+    def full_device(n_ops: int) -> "SplitPlan":
+        return SplitPlan(segments=(Segment(0, n_ops, PLACE_DEVICE),))
+
+    @staticmethod
+    def from_placements(placements: Sequence[str]) -> "SplitPlan":
+        """Collapse a per-op placement list into contiguous segments."""
+        if not placements:
+            raise ValueError("empty placement list")
+        segs: List[Segment] = []
+        start = 0
+        for i in range(1, len(placements) + 1):
+            if i == len(placements) or placements[i] != placements[start]:
+                segs.append(Segment(start, i, placements[start]))
+                start = i
+        return SplitPlan(segments=tuple(segs))
+
+
+def tensor_versions(calls) -> Tuple[List[OpInfo], List[TensorInfo], List[int], List[int]]:
+    """Walk the recorded calls and build the versioned dataflow.
+
+    Returns ``(ops, tensors, input_tids, output_tids)`` where ``input_tids``
+    are the replay inputs in H2D order and ``output_tids`` the replay outputs
+    in D2H order.  The walk mirrors
+    :func:`repro.core.engine.replay_address_plan` — it is a pure function of
+    the calls, so the same walk over an isomorphic sequence recorded by
+    another client yields structurally identical ops/tensors in the identical
+    canonical order (what lets one plan's compiled segments be rebound)."""
+    ops: List[OpInfo] = []
+    tensors: List[TensorInfo] = []
+    consumers: Dict[int, List[int]] = {}
+    current: Dict[int, int] = {}       # addr -> live tid
+    input_tids: List[int] = []
+    output_tids: List[int] = []
+
+    def new_tensor(addr: int, nbytes: int, producer: int) -> int:
+        tid = len(tensors)
+        tensors.append(TensorInfo(tid, addr, int(nbytes), producer, ()))
+        consumers[tid] = []
+        current[addr] = tid
+        return tid
+
+    for c in calls:
+        rec = c.record
+        if rec.func == FUNC_H2D:
+            addr, nbytes = c.out_addrs[0], rec.args_sig[1]
+            input_tids.append(new_tensor(addr, nbytes, PRODUCER_INPUT))
+        elif rec.func == FUNC_D2H:
+            addr = c.in_operands[0][1]
+            tid = current.get(addr)
+            if tid is None:  # an output read straight from a parameter buffer
+                tid = new_tensor(addr, rec.args_sig[1], PRODUCER_PARAM)
+            output_tids.append(tid)
+        elif c.prim is not None:
+            k = len(ops)
+            ops.append(OpInfo(k, rec.flops, rec.mem_bytes))
+            for tag, v in c.in_operands:
+                if tag != "a":
+                    continue
+                tid = current.get(v)
+                if tid is None:
+                    tid = new_tensor(v, 0, PRODUCER_PARAM)
+                consumers[tid].append(k)
+            for addr, (shape, dtype) in zip(c.out_addrs, c.out_avals):
+                nbytes = int(np.dtype(dtype).itemsize)
+                for s in shape:
+                    nbytes *= int(s)
+                new_tensor(addr, nbytes, k)
+
+    n = len(ops)
+    out_set = set(output_tids)
+    fixed = [
+        dataclasses.replace(
+            t,
+            consumers=tuple(consumers[t.tid]) + ((n,) if t.tid in out_set else ()),
+        )
+        for t in tensors
+    ]
+    return ops, fixed, input_tids, output_tids
+
+
+class SegmentGraph:
+    """The planner's view of one recorded IOS."""
+
+    def __init__(self, calls):
+        self.ops, self.tensors, self.input_tids, self.output_tids = (
+            tensor_versions(calls)
+        )
+        self.n_ops = len(self.ops)
+        if self.n_ops == 0:
+            raise ValueError("IOS contains no kernel operators")
+        # per-op read sets (tids), params excluded — params cross no cut
+        self.reads: List[Tuple[int, ...]] = [() for _ in range(self.n_ops)]
+        per_op: Dict[int, List[int]] = {k: [] for k in range(self.n_ops)}
+        for t in self.tensors:
+            if t.is_param:
+                continue
+            for k in t.consumers:
+                if k < self.n_ops and t.producer != k:
+                    per_op[k].append(t.tid)
+        for k, tids in per_op.items():
+            # preserve first-read order, drop duplicates
+            seen: Dict[int, None] = {}
+            for tid in tids:
+                seen.setdefault(tid)
+            self.reads[k] = tuple(seen)
+        self.writes: List[Tuple[int, ...]] = [() for _ in range(self.n_ops)]
+        for t in self.tensors:
+            if t.producer >= 0:
+                self.writes[t.producer] += (t.tid,)
+
+    # ------------------------------------------------------------------
+    def live_bytes(self) -> List[float]:
+        """``live[b]`` = bytes of non-param tensors crossing boundary ``b``
+        (between op ``b-1`` and op ``b``), for ``b`` in ``0..n_ops``.  This is
+        the uncut transfer volume a placement switch at ``b`` would ship."""
+        n = self.n_ops
+        diff = [0.0] * (n + 2)
+        for t in self.tensors:
+            if t.is_param or not t.consumers:
+                continue
+            lo = t.producer + 1          # first boundary the tensor is live at
+            hi = max(t.consumers)        # last boundary (inclusive)
+            if hi < lo:
+                continue
+            diff[lo] += t.nbytes
+            diff[hi + 1] -= t.nbytes
+        out, acc = [], 0.0
+        for b in range(n + 1):
+            acc += diff[b]
+            out.append(acc)
+        return out
+
+    def segment_cost(self, start: int, end: int) -> Tuple[float, float]:
+        flops = sum(self.ops[k].flops for k in range(start, end))
+        mem = sum(self.ops[k].mem_bytes for k in range(start, end))
+        return flops, mem
+
+    def segment_inputs(self, seg: Segment) -> List[int]:
+        """Non-param tids read by ``seg`` but produced outside it."""
+        seen: Dict[int, None] = {}
+        for k in range(seg.start, seg.end):
+            for tid in self.reads[k]:
+                if not seg.start <= self.tensors[tid].producer < seg.end:
+                    seen.setdefault(tid)
+        return list(seen)
+
+    def segment_outputs(self, seg: Segment) -> List[int]:
+        """Tids produced by ``seg`` and consumed after it (or downloaded)."""
+        out: List[int] = []
+        for k in range(seg.start, seg.end):
+            for tid in self.writes[k]:
+                if any(c >= seg.end for c in self.tensors[tid].consumers):
+                    out.append(tid)
+        return out
+
+    def device_seconds(self, device: DeviceSpec, start: int, end: int) -> float:
+        """Eager per-op dispatch on the mobile device (device-only model)."""
+        flops, mem = self.segment_cost(start, end)
+        return device.sequence_time(
+            flops, mem, num_kernels=end - start, fusion_factor=1.0
+        )
+
+    def server_seconds(self, server: DeviceSpec, start: int, end: int) -> float:
+        """Fused one-shot execution on the GPU server (replay model)."""
+        flops, mem = self.segment_cost(start, end)
+        n_k = max(1, (end - start) // SERVER_KERNELS_PER_FUSION)
+        return server.sequence_time(
+            flops, mem, num_kernels=n_k, fusion_factor=SERVER_FUSION_FACTOR
+        )
+
+
+# ---------------------------------------------------------------------------
+# the shared timing model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConstantLink:
+    """Planning-time link model: a single bandwidth/RTT operating point."""
+
+    bandwidth_bytes_per_s: float
+    rtt_s: float = 1.0e-4
+    input_wire_divisor: float = 1.0
+
+    def transfer_seconds(self, nbytes: float, t: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return nbytes / max(self.bandwidth_bytes_per_s, 1e-9)
+
+    def rtt(self, t: float) -> float:
+        return self.rtt_s
+
+
+class NetworkLink:
+    """Adapter putting a live :class:`~repro.core.netsim.NetworkModel` behind
+    the planner's link protocol (used by the engine to execute a plan against
+    the traced bandwidth; transfers accumulate real ingress bytes)."""
+
+    def __init__(self, network, input_wire_divisor: float = 1.0):
+        self.network = network
+        self.input_wire_divisor = input_wire_divisor
+
+    def transfer_seconds(self, nbytes: float, t: float) -> float:
+        return self.network.transfer_time(nbytes, t)
+
+    def rtt(self, t: float) -> float:
+        return self.network._rtt_at(t)
+
+
+@dataclasses.dataclass
+class Schedule:
+    """Modeled timeline of one split-replay inference (relative to its start).
+
+    ``body_seconds`` ends when every segment (and every mid-plan boundary
+    transfer) has completed; downloading server-resident outputs to the app
+    happens at the D2H records and is accounted separately so the engine can
+    charge it where the RPC actually occurs."""
+
+    body_seconds: float = 0.0
+    device_seconds: float = 0.0      # device busy computing (STATE_INFERENCE)
+    server_seconds: float = 0.0      # server busy computing (occupies the GPU)
+    comm_seconds: float = 0.0        # boundary transfers inside the body
+    comm_bytes: float = 0.0
+    crossings: int = 0               # boundary transfer bursts
+    output_local: List[bool] = dataclasses.field(default_factory=list)
+    output_downlink_bytes: float = 0.0
+    output_downlink_seconds: float = 0.0
+    server_busy: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list
+    )                                 # (start, duration) per server segment
+
+    # transfer time hidden under device compute (pipelined uplink), measured
+    # per-transfer by compute_schedule while it walks the timeline
+    overlap_seconds: float = 0.0
+
+    @property
+    def radio_only_seconds(self) -> float:
+        """Transfer time the device spends *only* transmitting.  Overlapped
+        transmission is billed at inference draw (the radio's marginal power
+        during concurrent compute sits inside the inference envelope), which
+        keeps the phase integral exactly equal to the wall time."""
+        return max(0.0, self.comm_seconds - self.overlap_seconds)
+
+    @property
+    def wait_seconds(self) -> float:
+        """Device idle time inside the body (waiting on server segments)."""
+        return max(
+            0.0,
+            self.body_seconds - self.device_seconds - self.radio_only_seconds,
+        )
+
+    @property
+    def total_seconds(self) -> float:
+        return self.body_seconds + self.output_downlink_seconds
+
+    def joules(self, power) -> float:
+        from repro.core.energy import (
+            STATE_COMM,
+            STATE_INFERENCE,
+            STATE_STANDBY,
+        )
+
+        return (
+            power.power(STATE_INFERENCE) * self.device_seconds
+            + power.power(STATE_COMM)
+            * (self.radio_only_seconds + self.output_downlink_seconds)
+            + power.power(STATE_STANDBY) * self.wait_seconds
+        )
+
+
+def compute_schedule(
+    graph: SegmentGraph,
+    plan: SplitPlan,
+    device: DeviceSpec,
+    server: DeviceSpec,
+    link,
+    *,
+    t0: float = 0.0,
+    include_output_downlink: bool = True,
+) -> Schedule:
+    """Walk a plan over the segment graph and produce its modeled timeline.
+
+    Transfer semantics: a tensor crosses the wire the first time the *other*
+    endpoint needs it, and both endpoints keep their copy afterwards.  Uplink
+    is pipelined — a boundary tensor starts transmitting the moment its
+    producing op completes, overlapping the device's compute of the rest of
+    its segment — while a server→device boundary blocks on the download
+    (the device cannot start an op whose operand is still in flight).
+    ``link`` times are queried at absolute time ``t0 + elapsed`` so traced
+    bandwidth models see the right trace position."""
+    if plan.n_ops != graph.n_ops:
+        raise ValueError(
+            f"plan covers {plan.n_ops} ops, graph has {graph.n_ops}"
+        )
+    sched = Schedule(output_local=[])
+    tensors = graph.tensors
+    wire_div = getattr(link, "input_wire_divisor", 1.0)
+    input_set = set(graph.input_tids)
+
+    def wire_bytes(tid: int) -> float:
+        # inference inputs travel compressed (e.g. JPEG camera frames);
+        # intermediates are raw activations
+        nb = float(tensors[tid].nbytes)
+        return nb / wire_div if tid in input_set else nb
+
+    # parameters live on both endpoints; inputs start on the device
+    at_device = {t.tid for t in tensors if t.is_param} | input_set
+    at_server = {t.tid for t in tensors if t.is_param}
+    ready = {tid: 0.0 for tid in at_device}
+
+    t = 0.0            # frontier of the executing side
+    link_free = 0.0    # the (half-duplex) radio link's busy frontier
+
+    def ship(tids: List[int], dest: set, start_floor: float) -> float:
+        """Serialize ``tids`` on the link; returns the last arrival time.
+
+        ``start_floor`` is the executing side's frontier when the boundary is
+        reached: any transfer time spent before it ran concurrently with the
+        producing side's compute (pipelined uplink) and is recorded as
+        ``overlap_seconds``."""
+        nonlocal link_free
+        if not tids:
+            return start_floor
+        sched.crossings += 1
+        done = start_floor
+        for tid in sorted(tids, key=lambda i: ready.get(i, 0.0)):
+            begin = max(link_free, ready.get(tid, 0.0))
+            dt = link.transfer_seconds(wire_bytes(tid), t0 + begin)
+            link_free = begin + dt
+            sched.comm_seconds += dt
+            sched.comm_bytes += wire_bytes(tid)
+            sched.overlap_seconds += max(
+                0.0, min(link_free, start_floor) - begin
+            )
+            dest.add(tid)
+            done = link_free
+        return done + link.rtt(t0 + done)
+
+    for seg in plan.segments:
+        needed = graph.segment_inputs(seg)
+        if seg.placement == PLACE_SERVER:
+            missing = [tid for tid in needed if tid not in at_server]
+            arrive = ship(missing, at_server, t)
+            start = max(t, arrive)
+            exec_s = graph.server_seconds(server, seg.start, seg.end)
+            sched.server_seconds += exec_s
+            sched.server_busy.append((t0 + start, exec_s))
+            t = start + exec_s
+            for tid in graph.segment_outputs(seg):
+                at_server.add(tid)
+                ready[tid] = t
+        else:
+            missing = [tid for tid in needed if tid not in at_device]
+            if missing:
+                # the device blocks until its operands land
+                t = max(t, ship(missing, at_device, t))
+            # eager per-op dispatch; record per-tensor completion so a later
+            # uplink can overlap the rest of this segment's compute
+            for k in range(seg.start, seg.end):
+                op = graph.ops[k]
+                dt = device.op_time(op.flops, op.mem_bytes) + device.kernel_launch_s
+                t += dt
+                sched.device_seconds += dt
+                for tid in graph.writes[k]:
+                    at_device.add(tid)
+                    ready[tid] = t
+
+    sched.body_seconds = max(t, link_free)
+
+    # the app's D2H downloads: outputs still server-only must come down.
+    # The replay engine pays these at the actual D2H records (and its live
+    # link accumulates the real ingress bytes there), so it asks us to model
+    # the locality flags only — double-charging the shared ingress otherwise.
+    down = 0.0
+    for tid in graph.output_tids:
+        local = tid in at_device
+        sched.output_local.append(local)
+        if not local and include_output_downlink:
+            nb = float(tensors[tid].nbytes)
+            sched.output_downlink_bytes += nb
+            down += link.transfer_seconds(
+                nb, t0 + sched.body_seconds + down
+            )
+    if sched.output_downlink_bytes > 0:
+        down += link.rtt(t0 + sched.body_seconds)
+    sched.output_downlink_seconds = down
+    return sched

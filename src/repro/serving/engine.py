@@ -29,7 +29,7 @@ Two deployment modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -116,6 +116,7 @@ class RRTOServedLM:
         params=None,
         edge: Optional[RRTOEdgeServer] = None,
         client_id: Optional[str] = None,
+        partition=None,
     ):
         if edge is not None and (environment is not None or execute is not None):
             # these are edge-server properties; a per-client override would be
@@ -154,7 +155,8 @@ class RRTOServedLM:
             if system != "rrto":
                 raise ValueError("multi-tenant mode serves the rrto system only")
             self.session = edge.connect(
-                offloadable, client_id=client_id, min_repeats=min_repeats
+                offloadable, client_id=client_id, min_repeats=min_repeats,
+                partition=partition,
             )
         else:
             self.session = OffloadSession(
@@ -163,6 +165,7 @@ class RRTOServedLM:
                 environment=environment if environment is not None else "indoor",
                 min_repeats=min_repeats,
                 execute=execute if execute is not None else True,
+                partition=partition,
             )
 
     def generate(self, prompt: np.ndarray, max_new_tokens: int) -> GenerationResult:

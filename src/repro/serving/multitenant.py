@@ -104,7 +104,7 @@ class ReplayBatcher:
     def submit(
         self, client: RRTOClient, inputs: List[np.ndarray], t: float
     ) -> Tuple[List[Any], float]:
-        fp = client.ios_fp
+        fp = client.replay_key
         group = self._groups.get(fp) if fp is not None else None
         if group is None:
             group = self._execute_group(fp, t)
@@ -179,18 +179,23 @@ class RRTOEdgeServer:
         client_id: Optional[str] = None,
         seed: Optional[int] = None,
         min_repeats: int = 3,
+        environment: Optional[str] = None,
         **session_kwargs: Any,
     ) -> OffloadSession:
         """Attach one mobile client running ``model`` to this edge server.
 
         Each client gets its own wireless link (seeded per client) tied to the
         shared server ingress, its own energy meter, and a server-side
-        device-memory namespace keyed by ``client_id``."""
+        device-memory namespace keyed by ``client_id``.  ``environment``
+        overrides the server default per client — an indoor and an outdoor
+        client can share the edge box (and, with a ``partition`` config, plan
+        different cuts of the same IOS)."""
         cid = client_id if client_id is not None else f"c{len(self.sessions)}"
         if cid in self.sessions:
             raise ValueError(f"client id {cid!r} already connected")
         network = get_network(
-            self.environment, seed if seed is not None else len(self.sessions)
+            environment if environment is not None else self.environment,
+            seed if seed is not None else len(self.sessions),
         )
         network.ingress = self.ingress
         sess = OffloadSession(
@@ -223,8 +228,15 @@ class RRTOEdgeServer:
         for cid, inputs in inputs_by_client.items():
             sess = self.sessions[cid]
             cl = sess.client
-            if cl.mode == MODE_REPLAYING and cl.ios_fp is not None:
-                entries.setdefault(cl.ios_fp, []).append(
+            # split-plan clients run their own segmented schedule (device
+            # compute interleaves with server segments), so only full-server
+            # replays batch; the batch key is the full replay identity
+            if (
+                cl.mode == MODE_REPLAYING
+                and cl.replay_key is not None
+                and cl.split_plan is None
+            ):
+                entries.setdefault(cl.replay_key, []).append(
                     (cl, sess.replay_wire_inputs(inputs))
                 )
         self.batcher.begin_round(entries)
@@ -232,6 +244,16 @@ class RRTOEdgeServer:
             cid: self.sessions[cid].infer(*inputs)
             for cid, inputs in inputs_by_client.items()
         }
+
+    # ------------------------------------------------------------------
+    def save_cache(self, path: str) -> int:
+        """Persist validated IOS fingerprints across server restarts."""
+        return self.cache.save(path)
+
+    def load_cache(self, path: str) -> int:
+        """Adopt a previous incarnation's validated fingerprints: joining
+        clients skip the ``min_repeats`` recording wait immediately."""
+        return self.cache.load(path)
 
     # ------------------------------------------------------------------
     @property

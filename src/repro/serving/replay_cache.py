@@ -18,15 +18,29 @@ and shares them:
 The cache stores only *programs* (pure functions of the recorded payloads);
 per-client address bindings live in each client's
 :class:`~repro.core.engine.ClientContext`.
+
+Persistence: :meth:`ReplayCache.save` / :meth:`ReplayCache.load` serialize
+the *fingerprint metadata* — not the compiled executables, which are live JAX
+objects rebuilt cheaply from a client's recorded calls.  A restarted edge
+server that loads a cache file knows every previously-validated IOS: a client
+whose single recorded inference matches a persisted fingerprint adopts it
+immediately (no ``min_repeats`` re-validation), and the server recompiles the
+executable once on the first replay.  Since the replay engine also caches
+segmented programs under composite ``fingerprint|plan`` keys, those keys
+persist the same way.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from collections import OrderedDict
-from typing import Optional, TYPE_CHECKING
+from typing import Any, Dict, Optional, TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.engine import ReplayProgram
+
+PERSIST_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -50,15 +64,22 @@ class ReplayCache:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._entries: "OrderedDict[str, ReplayProgram]" = OrderedDict()
+        # fingerprints known from a persisted cache file but whose programs
+        # have not been recompiled since the restart: metadata only
+        self._known: Dict[str, Dict[str, Any]] = {}
         self.stats = CacheStats()
 
     def __contains__(self, fingerprint: str) -> bool:
         # membership probes (the client-side cache-adoption check) do not
-        # count as hits/misses; only get() does
-        return fingerprint in self._entries
+        # count as hits/misses; only get() does.  Persisted-but-uncompiled
+        # fingerprints count as members: the IOS is already validated, the
+        # executable is rebuilt on first use.
+        return fingerprint in self._entries or fingerprint in self._known
 
     def __len__(self) -> int:
-        return len(self._entries)
+        return len(self._entries) + sum(
+            1 for fp in self._known if fp not in self._entries
+        )
 
     def get(self, fingerprint: str) -> Optional["ReplayProgram"]:
         program = self._entries.get(fingerprint)
@@ -82,3 +103,62 @@ class ReplayCache:
     def fingerprints(self):
         """Fingerprints in LRU order (oldest first)."""
         return list(self._entries.keys())
+
+    @property
+    def persisted_fingerprints(self):
+        """Fingerprints known from a loaded cache file (metadata only)."""
+        return list(self._known.keys())
+
+    def known_metadata(self, fingerprint: str) -> Optional[Dict[str, Any]]:
+        return self._known.get(fingerprint)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _describe(program: "ReplayProgram") -> Dict[str, Any]:
+        """JSON-safe metadata of a compiled program (full or segmented)."""
+        meta: Dict[str, Any] = {}
+        for attr in ("n_kernels", "total_flops", "total_bytes"):
+            v = getattr(program, attr, None)
+            if v is not None:
+                meta[attr] = v
+        avals = getattr(program, "d2h_avals", None)
+        if avals is not None:
+            meta["d2h_avals"] = [
+                [list(shape), str(dtype)] for shape, dtype in avals
+            ]
+        plan = getattr(program, "plan", None)
+        sig = getattr(plan, "signature", None)
+        if callable(sig):
+            meta["plan"] = sig()
+        return meta
+
+    def save(self, path: str) -> int:
+        """Write fingerprint -> IOS metadata for every entry (compiled or
+        still-persisted); returns the number of fingerprints written."""
+        entries = {fp: self._describe(p) for fp, p in self._entries.items()}
+        for fp, meta in self._known.items():
+            entries.setdefault(fp, meta)
+        payload = {"version": PERSIST_VERSION, "fingerprints": entries}
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic publish, like the checkpoint store
+        return len(entries)
+
+    def load(self, path: str) -> int:
+        """Merge a persisted cache file; returns the fingerprint count.
+
+        Loaded fingerprints are *validated IOS identities*, not executables:
+        membership tests succeed (so clients skip the ``min_repeats``
+        re-validation wait) while ``get()`` still misses until the first
+        client's calls rebuild the program."""
+        with open(path) as f:
+            payload = json.load(f)
+        version = payload.get("version")
+        if version != PERSIST_VERSION:
+            raise ValueError(
+                f"unsupported replay-cache file version {version!r}"
+            )
+        fps = payload["fingerprints"]
+        self._known.update(fps)
+        return len(fps)

@@ -9,7 +9,7 @@ regenerates its shard without coordination).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 

@@ -6,7 +6,7 @@ axis — required to fit the 400B-class archs on 16 GB v5e chips (DESIGN.md §5)
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

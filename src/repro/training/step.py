@@ -3,11 +3,9 @@ with remat over the layer scan and chunked cross-entropy.  This is the
 function the multi-pod dry-run lowers for every train-shape cell."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models.registry import get_model

@@ -4,6 +4,8 @@ import sys
 # tests run on the single real CPU device (the 512-device override is applied
 # ONLY inside launch/dryrun.py, never globally)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can drive the benchmarks (e.g. the partition sweep)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 import pytest

@@ -2,7 +2,6 @@
 int8 gradient compression with error feedback, straggler mitigation."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -11,10 +10,14 @@ from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import (
     compressed_psum,
     dequantize_int8,
-    init_error_state,
     quantize_int8,
 )
-from repro.distributed.sharding import translate_spec, zero1_spec
+from repro.distributed.sharding import (
+    compat_make_mesh,
+    get_shard_map,
+    translate_spec,
+    zero1_spec,
+)
 from repro.distributed.straggler import (
     HedgedRouter,
     ReplicaModel,
@@ -50,11 +53,10 @@ class TestCompression:
         assert float(err) <= float(scale) * 0.5 + 1e-6
 
     def test_compressed_psum_shard_map(self, rng):
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_make_mesh((1,), ("data",))
         x = jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))
 
-        from jax import shard_map
+        shard_map = get_shard_map()
 
         f = shard_map(
             lambda v: compressed_psum(v, "data")[0],
@@ -75,9 +77,8 @@ class TestCompression:
         x = jnp.asarray(rng.normal(0, 1, (256,)).astype(np.float32))
         err = jnp.zeros_like(x)
         applied = jnp.zeros_like(x)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
-        from jax import shard_map
+        mesh = compat_make_mesh((1,), ("data",))
+        shard_map = get_shard_map()
 
         step = shard_map(
             lambda v, e: compressed_psum(v, "data", e),

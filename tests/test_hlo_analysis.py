@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo, parse_module
@@ -47,9 +46,12 @@ class TestWeightedAnalysis:
         assert a["dot_flops"] == pytest.approx(b["dot_flops"], rel=0.05)
 
     def test_collectives_detected(self):
-        mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
-        from jax import shard_map
         from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import compat_make_mesh, get_shard_map
+
+        mesh = compat_make_mesh((1,), ("d",))
+        shard_map = get_shard_map()
 
         f = shard_map(
             lambda v: jax.lax.psum(v, "d"), mesh=mesh,

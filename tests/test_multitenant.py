@@ -193,6 +193,59 @@ class TestLRUEviction:
         assert edge.compile_count == 3
 
 
+class TestCachePersistence:
+    def test_save_load_roundtrip_metadata(self, tmp_path):
+        model, x = make_mlp()
+        edge = RRTOEdgeServer(execute=True)
+        edge.connect(model)
+        for _ in range(3):
+            edge.run_round({"c0": (x,)})
+        path = str(tmp_path / "replay_cache.json")
+        assert edge.save_cache(path) == 1
+        fp = edge.cache.fingerprints[0]
+
+        fresh = ReplayCache()
+        assert fresh.load(path) == 1
+        assert fp in fresh                      # membership: IOS validated
+        assert fresh.get(fp) is None            # but no compiled program yet
+        meta = fresh.known_metadata(fp)
+        assert meta["n_kernels"] > 0 and meta["total_flops"] > 0
+
+    def test_restarted_server_skips_revalidation(self, tmp_path):
+        """A client joining the restarted server adopts the persisted IOS
+        after ONE recorded inference; the executable recompiles once."""
+        model, x = make_mlp()
+        warm = RRTOEdgeServer(execute=True)
+        warm.connect(model)
+        for _ in range(3):
+            warm.run_round({"c0": (x,)})
+        path = str(tmp_path / "cache.json")
+        warm.save_cache(path)
+
+        cold = RRTOEdgeServer(execute=True)      # simulated restart
+        cold.load_cache(path)
+        sess = cold.connect(model)
+        cold.run_round({"c0": (x,)})
+        assert sess.client.mode == "replaying"
+        assert sess.client.cache_adopted
+        rec = [r for r in sess.history if r.mode == "recording"]
+        assert len(rec) == 1
+        res = cold.run_round({"c0": (x,)})["c0"]
+        ref = np.asarray(jax.jit(model.apply)(model.params, x)[0])
+        np.testing.assert_allclose(
+            np.asarray(res.outputs[0]), ref, rtol=1e-5, atol=1e-5
+        )
+        assert cold.compile_count == 1
+
+    def test_version_mismatch_rejected(self, tmp_path):
+        import json
+
+        path = tmp_path / "bad.json"
+        path.write_text(json.dumps({"version": 99, "fingerprints": {}}))
+        with pytest.raises(ValueError, match="version"):
+            ReplayCache().load(str(path))
+
+
 class TestSingleClientEquivalence:
     def test_edge_single_client_matches_plain_session(self):
         """One client through the multi-tenant stack behaves like the plain

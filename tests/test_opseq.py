@@ -41,7 +41,6 @@ from repro.core.records import (
     FUNC_MALLOC,
     FUNC_SYNC,
     OperatorRecord,
-    category_trace,
 )
 
 

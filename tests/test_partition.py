@@ -1,0 +1,446 @@
+"""Split-replay partition planner: segment-graph extraction, split-execution
+equivalence (bitwise vs full-server replay, property-tested over random plans
+across registry models), planner dominance over the binary-offloading
+endpoints, adaptive re-planning hysteresis, plan-keyed caching, and the
+partitioned end-to-end session."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.engine import BoundSegmentedReplay, SegmentedReplayProgram
+from repro.core.offload import OffloadSession
+from repro.models.cnn_zoo import ZOO
+from repro.partition import (
+    PLACE_DEVICE,
+    PLACE_SERVER,
+    AdaptiveReplanner,
+    PartitionConfig,
+    SegmentGraph,
+    SplitPlan,
+    evaluate_plan,
+    plan_partition,
+)
+
+REGISTRY_CASES = {
+    "vgg16": dict(scale=0.1, input_size=32),
+    "resnet50": dict(scale=0.1, input_size=32),
+    "sensor_encoder": dict(scale=0.25, input_size=32, n_blocks=2),
+}
+
+MBPS = 1e6 / 8.0
+
+
+def random_plans(n_ops: int, rng: np.random.Generator, k: int = 6):
+    """Sample k random contiguous segmentations with alternating placements."""
+    plans = []
+    for _ in range(k):
+        n_cuts = int(rng.integers(1, min(6, n_ops)))
+        cuts = sorted(
+            rng.choice(np.arange(1, n_ops), size=n_cuts, replace=False)
+        )
+        bounds = [0] + [int(c) for c in cuts] + [n_ops]
+        place = PLACE_DEVICE if rng.random() < 0.5 else PLACE_SERVER
+        placements: list = []
+        for lo, hi in zip(bounds, bounds[1:]):
+            placements += [place] * (hi - lo)
+            place = PLACE_SERVER if place == PLACE_DEVICE else PLACE_DEVICE
+        plans.append(SplitPlan.from_placements(placements))
+    return plans
+
+
+@pytest.fixture(scope="module")
+def recorded():
+    """One replay-locked RRTO session per registry model (real execution)."""
+    out = {}
+    for name, kwargs in REGISTRY_CASES.items():
+        model = ZOO[name](**kwargs)
+        sess = OffloadSession(model, "rrto", min_repeats=2)
+        sess.load()
+        res = None
+        for _ in range(5):
+            res = sess.infer(*model.example_inputs)
+        assert res.mode == "replaying", f"{name} never locked its IOS"
+        out[name] = (sess, [np.asarray(o) for o in res.outputs])
+    return out
+
+
+class TestSplitEquivalence:
+    @pytest.mark.parametrize("name", sorted(REGISTRY_CASES))
+    def test_random_plans_bitwise_identical(self, recorded, name):
+        """Acceptance property: for ANY plan, segmented device/server
+        execution is bitwise-identical to the full-server replay."""
+        sess, ref_outputs = recorded[name]
+        calls = sess.client._ios_calls
+        env = sess.server.context(sess.client_id).env
+        import zlib
+
+        rng = np.random.default_rng(zlib.crc32(name.encode()))
+        n_ops = SegmentGraph(calls).n_ops
+        plans = random_plans(n_ops, rng) + [
+            SplitPlan.full_device(n_ops),
+            SplitPlan.from_placements(
+                [PLACE_DEVICE] + [PLACE_SERVER] * (n_ops - 1)
+            ),
+            SplitPlan.from_placements(
+                [PLACE_SERVER] * (n_ops - 1) + [PLACE_DEVICE]
+            ),
+        ]
+        inputs = sess.replay_wire_inputs(sess.model.example_inputs)
+        for plan in plans:
+            prog = SegmentedReplayProgram(calls, plan)
+            outs = BoundSegmentedReplay.from_own(prog).execute(inputs, env)
+            assert len(outs) == len(ref_outputs)
+            for got, want in zip(outs, ref_outputs):
+                assert np.array_equal(np.asarray(got), want), (
+                    f"{name}: plan {plan.signature()} diverged"
+                )
+
+    def test_rebinding_across_clients(self, recorded):
+        """A segmented program compiled from one client's calls executes
+        correctly when bound to a second client's address space."""
+        name = "sensor_encoder"
+        model = ZOO[name](**REGISTRY_CASES[name])
+        sess_b = OffloadSession(model, "rrto", min_repeats=2, seed=3)
+        sess_b.load()
+        res = None
+        for _ in range(5):
+            res = sess_b.infer(*model.example_inputs)
+        assert res.mode == "replaying"
+
+        sess_a, _ = recorded[name]
+        n_ops = SegmentGraph(sess_a.client._ios_calls).n_ops
+        plan = SplitPlan.from_placements(
+            [PLACE_DEVICE] * 3 + [PLACE_SERVER] * (n_ops - 3)
+        )
+        prog = SegmentedReplayProgram(sess_a.client._ios_calls, plan)
+        bound = BoundSegmentedReplay.bind(prog, sess_b.client._ios_calls)
+        outs = bound.execute(
+            sess_b.replay_wire_inputs(model.example_inputs),
+            sess_b.server.context(sess_b.client_id).env,
+        )
+        for got, want in zip(outs, res.outputs):
+            assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestSegmentGraph:
+    def test_cut_tensor_flow(self, recorded):
+        """Whatever a suffix needs that isn't an input must be exported by
+        the prefix — the dependency closure seals every cut."""
+        sess, _ = recorded["resnet50"]
+        graph = SegmentGraph(sess.client._ios_calls)
+        n = graph.n_ops
+        from repro.partition.segments import Segment
+
+        for b in (1, n // 3, n // 2, n - 1):
+            prefix, suffix = (
+                Segment(0, b, PLACE_DEVICE),
+                Segment(b, n, PLACE_SERVER),
+            )
+            exported = set(graph.segment_outputs(prefix))
+            inputs = set(graph.input_tids)
+            for tid in graph.segment_inputs(suffix):
+                assert tid in exported or tid in inputs
+
+    def test_live_bytes_boundaries(self, recorded):
+        sess, _ = recorded["vgg16"]
+        graph = SegmentGraph(sess.client._ios_calls)
+        live = graph.live_bytes()
+        assert len(live) == graph.n_ops + 1
+        in_bytes = sum(graph.tensors[t].nbytes for t in graph.input_tids)
+        out_bytes = sum(graph.tensors[t].nbytes for t in graph.output_tids)
+        assert live[0] == pytest.approx(in_bytes)
+        assert live[-1] >= out_bytes
+        assert all(b >= 0 for b in live)
+
+    def test_params_never_cross(self, recorded):
+        sess, _ = recorded["vgg16"]
+        graph = SegmentGraph(sess.client._ios_calls)
+        for reads in graph.reads:
+            for tid in reads:
+                assert not graph.tensors[tid].is_param
+
+
+class TestPlanner:
+    def test_never_worse_than_binary_offloading(self, recorded):
+        for name, (sess, _) in recorded.items():
+            graph = SegmentGraph(sess.client._ios_calls)
+            n = graph.n_ops
+            div = sess.model.input_wire_divisor
+            for mbps in (0.5, 4.0, 16.0, 64.0, 256.0):
+                best = plan_partition(
+                    graph, sess.client_device, sess.server_device,
+                    mbps * MBPS, input_wire_divisor=div,
+                )
+                for endpoint in (
+                    SplitPlan.full_server(n), SplitPlan.full_device(n)
+                ):
+                    ev = evaluate_plan(
+                        graph, endpoint, sess.client_device,
+                        sess.server_device, mbps * MBPS,
+                        input_wire_divisor=div,
+                    )
+                    assert best.seconds <= ev.seconds + 1e-12, (
+                        f"{name}@{mbps}Mbps: planner worse than "
+                        f"{endpoint.signature()}"
+                    )
+
+    def test_interior_split_beats_both_endpoints(self):
+        """The bandwidth-bottleneck workload has a regime where a true split
+        strictly beats full offload AND device only (partial > binary)."""
+        from benchmarks.partition_sweep import run
+
+        rows, checks = run()
+        assert checks["planner_never_worse"]
+        assert checks["interior_strictly_better"]
+        assert any(0 < r.n_device_ops < r.n_ops for r in rows)
+
+    def test_energy_objective(self, recorded):
+        sess, _ = recorded["sensor_encoder"]
+        graph = SegmentGraph(sess.client._ios_calls)
+        cfg = PartitionConfig(objective="energy")
+        best = plan_partition(
+            graph, sess.client_device, sess.server_device, 16 * MBPS,
+            config=cfg,
+        )
+        assert best.plan.objective == "energy"
+        for endpoint in (
+            SplitPlan.full_server(graph.n_ops),
+            SplitPlan.full_device(graph.n_ops),
+        ):
+            ev = evaluate_plan(
+                graph, endpoint, sess.client_device, sess.server_device,
+                16 * MBPS,
+            )
+            assert best.joules <= ev.joules + 1e-12
+
+    def test_plan_validation(self):
+        with pytest.raises(ValueError):
+            SplitPlan.from_placements([])
+        with pytest.raises(ValueError):
+            PartitionConfig(objective="carbon")
+        plan = SplitPlan.from_placements(
+            [PLACE_DEVICE, PLACE_DEVICE, PLACE_SERVER]
+        )
+        assert plan.signature() == "D0:2|S2:3"
+        assert plan.n_device_ops == 2 and not plan.is_full_server
+        assert SplitPlan.full_server(4).is_full_server
+
+
+@pytest.fixture(scope="module")
+def sweep_graph():
+    """Full-scale bandwidth-bottleneck workload, recorded analytically."""
+    from benchmarks.partition_sweep import record_graph
+
+    return record_graph()
+
+
+class TestAdaptive:
+    def _replanner(self, sweep_graph, **cfg_kwargs):
+        graph, device, server, model = sweep_graph
+        cfg = PartitionConfig(min_replan_interval_s=0.0, **cfg_kwargs)
+        return AdaptiveReplanner(
+            graph, device, server, config=cfg,
+            input_wire_divisor=model.input_wire_divisor,
+        )
+
+    def test_bandwidth_collapse_triggers_replan(self, sweep_graph):
+        rp = self._replanner(sweep_graph, bandwidth_ema=1.0)
+        rich = rp.initial_plan(128 * MBPS)
+        assert not rich.is_full_device  # a fat link offloads the trunk
+        swapped = rp.observe(0.2 * MBPS, now=1.0)
+        assert swapped is not None and swapped.n_device_ops > rich.n_device_ops
+        assert rp.stats.replans == 1
+
+    def test_hysteresis_prevents_thrash(self, sweep_graph):
+        # hysteresis=1.0 demands an infinite relative gain: any candidate —
+        # even at a collapsed link — must be rejected, never thrashing
+        rp = self._replanner(sweep_graph, bandwidth_ema=1.0, hysteresis=1.0)
+        rp.initial_plan(128 * MBPS)
+        assert rp.observe(0.2 * MBPS, now=1.0) is None
+        assert rp.stats.replans == 0
+        assert rp.stats.rejected_by_hysteresis >= 1
+
+    def test_mild_wobble_does_not_swap(self, sweep_graph):
+        """Near-noise bandwidth variation re-plans to the same cut (signature
+        equality short-circuits before any hysteresis comparison)."""
+        rp = self._replanner(sweep_graph, bandwidth_ema=1.0)
+        first = rp.initial_plan(64 * MBPS)
+        for i, mbps in enumerate((60.0, 68.0, 63.0, 66.0)):
+            assert rp.observe(mbps * MBPS, now=1.0 + i) is None
+        assert rp.stats.replans == 0
+        assert rp.current.plan.signature() == first.signature()
+
+    def test_replan_rate_limit(self, sweep_graph):
+        graph, device, server, model = sweep_graph
+        rp = AdaptiveReplanner(
+            graph, device, server,
+            config=PartitionConfig(min_replan_interval_s=10.0),
+        )
+        rp.initial_plan(128 * MBPS, now=0.0)
+        considered = rp.stats.plans_considered
+        assert rp.observe(0.2 * MBPS, now=0.5) is None   # inside the window
+        assert rp.stats.plans_considered == considered
+        rp.observe(0.2 * MBPS, now=11.0)                 # window elapsed
+        assert rp.stats.plans_considered > considered
+
+
+class TestPlanKeyedCache:
+    def test_cache_keys_on_fingerprint_and_plan(self, recorded):
+        from repro.serving.replay_cache import ReplayCache
+
+        sess, _ = recorded["sensor_encoder"]
+        calls = sess.client._ios_calls
+        server = sess.server
+        server.replay_cache = cache = ReplayCache(capacity=8)
+        fp = "f" * 8
+        n = SegmentGraph(calls).n_ops
+        plan_a = SplitPlan.from_placements(
+            [PLACE_DEVICE] * 2 + [PLACE_SERVER] * (n - 2)
+        )
+        plan_b = SplitPlan.from_placements(
+            [PLACE_DEVICE] * 4 + [PLACE_SERVER] * (n - 4)
+        )
+        compiles0 = server.compile_count
+        server.prepare_split(calls, plan_a, "c0", fp)
+        server.prepare_split(calls, plan_b, "c0", fp)
+        assert server.compile_count == compiles0 + 2
+        assert f"{fp}|{plan_a.signature()}" in cache
+        assert f"{fp}|{plan_b.signature()}" in cache
+        # a co-tenant adopting plan_a binds the cached program, no recompile
+        assert server.prepare_split(calls, plan_a, "c1", fp) is True
+        assert server.compile_count == compiles0 + 2
+        server.replay_cache = None
+
+
+class TestPartitionedSession:
+    def test_outputs_match_plain_rrto(self):
+        name = "sensor_encoder"
+        model = ZOO[name](**REGISTRY_CASES[name])
+        plain = OffloadSession(model, "rrto", min_repeats=2, seed=0)
+        plain.load()
+        split = OffloadSession(
+            model, "rrto", min_repeats=2, seed=0,
+            partition=PartitionConfig(),
+        )
+        split.load()
+        for _ in range(6):
+            want = plain.infer(*model.example_inputs)
+            got = split.infer(*model.example_inputs)
+            for a, b in zip(got.outputs, want.outputs):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert split.client.mode == "replaying"
+        assert split.client.replanner is not None
+
+    def test_full_device_plan_needs_no_network(self, recorded):
+        """When the planner keeps everything on the device (tiny model), the
+        replay phase issues zero RPCs and zero network bytes."""
+        import jax.numpy as jnp
+
+        from repro.core.offload import OffloadableModel
+
+        rng = np.random.default_rng(0)
+        params = {"w": rng.normal(0, 0.1, (16, 4)).astype(np.float32)}
+        model = OffloadableModel(
+            "tiny", lambda p, x: [jnp.tanh(x @ p["w"])], params,
+            (rng.normal(0, 1, (2, 16)).astype(np.float32),),
+        )
+        sess = OffloadSession(
+            model, "rrto", min_repeats=2, partition=PartitionConfig()
+        )
+        sess.load()
+        res = None
+        for _ in range(6):
+            res = sess.infer(*model.example_inputs)
+        assert res.mode == "replaying"
+        assert sess.client.split_plan is not None
+        assert sess.client.split_plan.is_full_device
+        assert res.rpcs == 0 and res.network_bytes == 0
+        from repro.core.energy import STATE_INFERENCE
+
+        assert sess.meter.seconds_by_state.get(STATE_INFERENCE, 0.0) > 0
+
+    def test_split_session_fallback_recovers(self):
+        """A DAM-style op-stream change mid-replay must fall back cleanly even
+        though split mode never uploaded the inputs, then re-lock."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.costmodel import GTX_2080TI
+        from repro.core.energy import EnergyMeter
+        from repro.core.engine import OffloadServer, RRTOClient, SimClock
+        from repro.core.flatten import flatten_closed_jaxpr
+        from repro.core.intercept import NO_NOISE, JaxprInterceptor
+        from repro.core.netsim import indoor_network
+
+        rng = np.random.default_rng(0)
+        w = rng.normal(0, 0.1, (8, 8)).astype(np.float32)
+
+        def graph_a(w, x):
+            return [jnp.tanh(x @ w) @ w]
+
+        def graph_b(w, x):
+            return [jax.nn.relu(x @ w) + x.sum(axis=-1, keepdims=True)]
+
+        x = rng.normal(0, 1, (2, 8)).astype(np.float32)
+        ja = flatten_closed_jaxpr(jax.make_jaxpr(lambda xx: graph_a(w, xx))(x))
+        jb = flatten_closed_jaxpr(jax.make_jaxpr(lambda xx: graph_b(w, xx))(x))
+
+        clock, meter = SimClock(), EnergyMeter()
+        server = OffloadServer(GTX_2080TI, execute=True)
+        client = RRTOClient(
+            server, indoor_network(), clock, meter, variant="rrto",
+            min_repeats=2, partition=PartitionConfig(),
+        )
+        icp = JaxprInterceptor(client, NO_NOISE)
+        addrs_a = icp.upload_params([np.asarray(c) for c in ja.consts])
+        addrs_b = icp.upload_params([np.asarray(c) for c in jb.consts])
+
+        for _ in range(4):
+            outs_a = icp.run(ja, addrs_a, [x])
+        assert client.mode == "replaying"
+        assert client.split_plan is not None  # tiny graph -> device plan
+        ref_a = np.asarray(jax.jit(lambda xx: graph_a(w, xx))(x)[0])
+        np.testing.assert_allclose(np.asarray(outs_a[0]), ref_a, rtol=1e-5)
+
+        icp.run(jb, addrs_b, [x])  # deviate
+        assert client.fallbacks >= 1 and client.mode == "recording"
+        outs_b = None
+        for _ in range(4):
+            outs_b = icp.run(jb, addrs_b, [x])
+        assert client.mode == "replaying"
+        ref_b = np.asarray(jax.jit(lambda xx: graph_b(w, xx))(x)[0])
+        np.testing.assert_allclose(np.asarray(outs_b[0]), ref_b, rtol=1e-5)
+
+
+class TestMultiTenantPlans:
+    def test_cotenants_on_different_networks_get_different_cuts(self):
+        """Two clients share one IOS but plan at different bandwidths: the
+        edge cache keys replay executables on (fingerprint, plan), and each
+        client's replay identity includes its own cut."""
+        from repro.models.cnn_zoo import make_sensor_encoder
+        from repro.serving.multitenant import RRTOEdgeServer
+
+        model = make_sensor_encoder(scale=1.0, input_size=96)
+        edge = RRTOEdgeServer(execute=False)
+        rich = edge.connect(model, partition=PartitionConfig())
+        poor = edge.connect(model, partition=PartitionConfig())
+        # starve the second client's radio: ~0.4 Mbps flat
+        poor.network.trace_bytes_per_s = np.full(16, 0.4 * MBPS)
+        x = model.example_inputs
+        for _ in range(6):
+            edge.run_round({"c0": x, "c1": x})
+        assert all(
+            s.client.mode == "replaying" for s in edge.sessions.values()
+        )
+        k0, k1 = rich.client.replay_key, poor.client.replay_key
+        assert k0 is not None and k1 is not None and k0 != k1
+        # the poor client keeps the trunk on the device, the rich one cuts
+        # after the stem and offloads it
+        assert poor.client.split_plan.n_device_ops > (
+            rich.client.split_plan.n_device_ops
+            if rich.client.split_plan is not None
+            else 0
+        )
+        # the shared cache holds the full program and the per-plan programs
+        assert len(edge.cache) >= 2

@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.core.offload import OffloadSession, OffloadableModel
-from repro.core.records import CAT_D2H, CAT_H2D
 
 
 def make_tiny_cnn(seed=0, with_setup=True):
