@@ -1,0 +1,220 @@
+"""Decode-scaling benchmark — stateful replay vs seed prefix-recompute replay.
+
+The seed formulation of ``RRTOServedLM`` offloads
+``next_token(padded_tokens, cur_len)``: every replayed token re-executes the
+full forward over the padded bucket, so per-token replay compute grows with
+the sequence capacity the bucket must cover — O(seq) per token.  The stateful
+formulation offloads the KV-cached ``decode_step`` and replays it as a
+donation-aware stateful executable (the cache stays server-resident), so
+per-token replay compute is the model's intrinsic step cost — flat in
+sequence position.
+
+Two measurements:
+
+* **Per-token replay scaling** — for a sweep of sequence capacities L, the
+  modeled per-token replay compute (and per-token wire bytes) of both
+  formulations.  The guard fails if the stateful per-token compute grows
+  with L like the seed one does (i.e. if donation regressed to prefix
+  recompute).
+
+* **vmap batch equivalence** — lockstep multi-client generation over one
+  edge server, once with the true ``jax.vmap``-batched group execution and
+  once with the per-client execution loop (``enable_vmap=False``), across
+  >= 2 registry model families: tokens must be bitwise identical, and the
+  vmap run must actually execute batched groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+MODELS = ("qwen3-0.6b", "minicpm3-4b")
+SEQ_CAPACITIES = (16, 32, 64)
+# a 4x capacity range: seed per-token compute should scale roughly with L,
+# the stateful step must stay nearly flat (only the attention read over the
+# cache grows)
+STATEFUL_MAX_GROWTH = 1.6
+SEED_MIN_GROWTH = 2.0
+
+
+@dataclasses.dataclass
+class ScalingRow:
+    seq_capacity: int
+    seed_token_flops: float
+    stateful_token_flops: float
+    seed_token_compute_s: float      # modeled server compute per replayed token
+    stateful_token_compute_s: float
+    seed_token_wire_bytes: float     # steady-state network bytes per token
+    stateful_token_wire_bytes: float
+    carried_pairs: int
+
+
+def _served_replay_stats(served, prompt, new_tokens: int):
+    """Generate and return (program, steady per-token wire bytes)."""
+    served.generate(prompt, new_tokens)
+    client = served.session.client
+    assert client.mode == "replaying", "IOS never locked"
+    program = served.session.server.context(client.client_id).replay.program
+    replay_rounds = [r for r in served.session.history if r.mode == "replaying"]
+    # steady state: skip the first replay round (one-time state upload)
+    steady = replay_rounds[1:] or replay_rounds
+    wire = float(np.mean([r.network_bytes for r in steady]))
+    return program, wire
+
+
+def run_scaling(
+    model: str = MODELS[0],
+    seq_capacities: Sequence[int] = SEQ_CAPACITIES,
+    *,
+    prompt_len: int = 4,
+    new_tokens: int = 8,
+    seed: int = 1,
+) -> List[ScalingRow]:
+    from repro.configs.registry import get_reduced_config
+    from repro.serving.engine import RRTOServedLM
+
+    cfg = get_reduced_config(model)
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab, (1, prompt_len)).astype(np.int32)
+    rows: List[ScalingRow] = []
+    for cap in seq_capacities:
+        assert prompt_len + new_tokens <= cap
+        stateful = RRTOServedLM(
+            cfg, bucket_len=cap, seed=seed, min_repeats=3, stateful=True
+        )
+        p_state, wire_state = _served_replay_stats(stateful, prompt, new_tokens)
+        assert p_state.is_stateful, "carried tensors not detected"
+        legacy = RRTOServedLM(
+            cfg, bucket_len=cap, seed=seed, min_repeats=3, stateful=False
+        )
+        p_seed, wire_seed = _served_replay_stats(legacy, prompt, new_tokens)
+        device = stateful.session.server.device
+        rows.append(
+            ScalingRow(
+                seq_capacity=cap,
+                seed_token_flops=p_seed.total_flops,
+                stateful_token_flops=p_state.total_flops,
+                seed_token_compute_s=p_seed.compute_seconds(device),
+                stateful_token_compute_s=p_state.compute_seconds(device),
+                seed_token_wire_bytes=wire_seed,
+                stateful_token_wire_bytes=wire_state,
+                carried_pairs=len(p_state.carried_pairs),
+            )
+        )
+    return rows
+
+
+def scaling_checks(rows: Sequence[ScalingRow]) -> Dict[str, bool]:
+    lo, hi = rows[0], rows[-1]
+    seed_growth = hi.seed_token_flops / lo.seed_token_flops
+    stateful_growth = hi.stateful_token_flops / lo.stateful_token_flops
+    return {
+        # the O(1) guard: stateful per-token replay compute must stay flat in
+        # sequence capacity while the seed formulation keeps growing
+        "stateful_flat": stateful_growth < STATEFUL_MAX_GROWTH,
+        "seed_grows": seed_growth > SEED_MIN_GROWTH,
+        "stateful_cheaper_everywhere": all(
+            r.stateful_token_flops < r.seed_token_flops for r in rows
+        ),
+        "carried_detected": all(r.carried_pairs > 0 for r in rows),
+        "state_off_the_wire": all(
+            r.stateful_token_wire_bytes < r.seed_token_wire_bytes
+            for r in rows
+        ),
+    }
+
+
+def run_vmap_equivalence(
+    models: Sequence[str] = MODELS,
+    *,
+    num_clients: int = 3,
+    bucket_len: int = 16,
+    new_tokens: int = 5,
+    seed: int = 1,
+) -> Dict[str, Dict[str, float]]:
+    """Lockstep co-tenant generation, vmap-batched vs per-client loop: the
+    tokens must be bitwise identical and the vmap run must batch for real."""
+    from repro.configs.registry import get_reduced_config
+    from repro.serving.engine import MultiClientServedLM
+
+    out: Dict[str, Dict[str, float]] = {}
+    for model in models:
+        cfg = get_reduced_config(model)
+        rng = np.random.default_rng(seed)
+        prompts = [
+            rng.integers(0, cfg.vocab, (1, 3 + i % 3)).astype(np.int32)
+            for i in range(num_clients)
+        ]
+        results: Dict[bool, List[np.ndarray]] = {}
+        summaries = {}
+        for enable_vmap in (True, False):
+            served = MultiClientServedLM(
+                cfg, num_clients, bucket_len=bucket_len, seed=seed,
+                min_repeats=3,
+            )
+            served.edge.batcher.enable_vmap = enable_vmap
+            gens = served.generate(prompts, new_tokens)
+            results[enable_vmap] = [g.tokens for g in gens]
+            summaries[enable_vmap] = served.edge.summary()
+        bitwise = all(
+            np.array_equal(a, b)
+            for a, b in zip(results[True], results[False])
+        )
+        out[model] = dict(
+            bitwise_equal=float(bitwise),
+            vmap_batches=float(summaries[True]["vmap_batches"]),
+            loop_vmap_batches=float(summaries[False]["vmap_batches"]),
+            mean_batch=float(summaries[True]["mean_batch"]),
+        )
+    return out
+
+
+def run(
+    *,
+    smoke: bool = False,
+) -> Tuple[List[ScalingRow], Dict[str, bool], Dict[str, Dict[str, float]]]:
+    # smoke keeps just the endpoints: a 4x range so the growth guard bites
+    caps = (SEQ_CAPACITIES[0], SEQ_CAPACITIES[-1]) if smoke else SEQ_CAPACITIES
+    rows = run_scaling(seq_capacities=caps)
+    checks = scaling_checks(rows)
+    vmap = run_vmap_equivalence(MODELS[:2])
+    for model, m in vmap.items():
+        checks[f"vmap_bitwise_{model}"] = bool(m["bitwise_equal"])
+        checks[f"vmap_batched_{model}"] = m["vmap_batches"] >= 1
+        checks[f"loop_really_loop_{model}"] = m["loop_vmap_batches"] == 0
+    return rows, checks, vmap
+
+
+def main() -> None:
+    rows, checks, vmap = run()
+    print(
+        f"{'seq_cap':>7s} {'seed_tok_MFLOP':>14s} {'state_tok_MFLOP':>15s} "
+        f"{'seed_us':>8s} {'state_us':>9s} {'seed_wireB':>10s} "
+        f"{'state_wireB':>11s} {'carried':>7s}"
+    )
+    for r in rows:
+        print(
+            f"{r.seq_capacity:7d} {r.seed_token_flops / 1e6:14.2f} "
+            f"{r.stateful_token_flops / 1e6:15.2f} "
+            f"{r.seed_token_compute_s * 1e6:8.2f} "
+            f"{r.stateful_token_compute_s * 1e6:9.2f} "
+            f"{r.seed_token_wire_bytes:10.0f} "
+            f"{r.stateful_token_wire_bytes:11.0f} {r.carried_pairs:7d}"
+        )
+    for model, m in vmap.items():
+        print(
+            f"vmap[{model}]: bitwise={bool(m['bitwise_equal'])} "
+            f"batches={m['vmap_batches']:.0f} mean_batch={m['mean_batch']:.2f}"
+        )
+    print(" ".join(f"{k}={v}" for k, v in checks.items()))
+    if not all(checks.values()):
+        raise SystemExit(f"decode scaling guard failed: {checks}")
+
+
+if __name__ == "__main__":
+    main()

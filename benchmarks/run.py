@@ -16,9 +16,9 @@ sys.path.insert(0, _ROOT)
 
 def smoke() -> None:
     """Tiny-config smoke run for CI: exercises session recording, the IOS
-    search, the split planner and the benchmark plumbing in well under a
-    minute, failing loudly if any modeled invariant breaks."""
-    from benchmarks import partition_sweep, tab4_rpc_gpu_util
+    search, the split planner, stateful replay and the benchmark plumbing in
+    a couple of minutes, failing loudly if any modeled invariant breaks."""
+    from benchmarks import decode_scaling, partition_sweep, tab4_rpc_gpu_util
 
     print("== partition_sweep (smoke) ==", file=sys.stderr, flush=True)
     rows, checks = partition_sweep.run()
@@ -28,6 +28,12 @@ def smoke() -> None:
     util = tab4_rpc_gpu_util.run()
     assert util["rrto"]["rpcs"] == 11, util["rrto"]
 
+    print("== decode_scaling (smoke) ==", file=sys.stderr, flush=True)
+    dec_rows, dec_checks, _ = decode_scaling.run(smoke=True)
+    # the perf guard: per-token replay compute must NOT grow with sequence
+    # position once replay is stateful (O(1) step vs the seed's O(seq))
+    assert all(dec_checks.values()), f"decode scaling guard failed: {dec_checks}"
+
     print("name,us_per_call,derived")
     interior = rows[len(rows) // 2]
     print(
@@ -35,12 +41,19 @@ def smoke() -> None:
         f"plan={interior.plan_signature}"
     )
     print(f"smoke_tab4_rpcs,{float(util['rrto']['rpcs']):.2f},paper11")
+    lo, hi = dec_rows[0], dec_rows[-1]
+    print(
+        f"smoke_decode_scaling,{hi.stateful_token_compute_s * 1e6:.2f},"
+        f"state_growth={hi.stateful_token_flops / lo.stateful_token_flops:.2f}x;"
+        f"seed_growth={hi.seed_token_flops / lo.seed_token_flops:.2f}x"
+    )
 
 
 def main() -> None:
     rows = []
 
     from benchmarks import (
+        decode_scaling,
         fig1_deviceonly,
         fig10_kapao,
         fig11_semi_rrto,
@@ -132,6 +145,18 @@ def main() -> None:
         big.p50_replay_ms * 1e3,
         f"recRPCs_vs_linear={big.recording_rpcs / (big.solo_recording_rpcs * big.clients):.2f};"
         f"compiles={big.compiles};hit={100 * big.cache_hit_rate:.0f}%",
+    ))
+
+    print("== decode_scaling ==", file=sys.stderr, flush=True)
+    dec_rows, dec_checks, dec_vmap = decode_scaling.run()
+    lo, hi = dec_rows[0], dec_rows[-1]
+    rows.append((
+        "decode_scaling",
+        hi.stateful_token_compute_s * 1e6,
+        f"state_growth={hi.stateful_token_flops / lo.stateful_token_flops:.2f}x;"
+        f"seed_growth={hi.seed_token_flops / lo.seed_token_flops:.2f}x;"
+        f"vmap_bitwise={all(m['bitwise_equal'] for m in dec_vmap.values())};"
+        f"guards={all(dec_checks.values())}",
     ))
 
     print("== partition_sweep ==", file=sys.stderr, flush=True)

@@ -20,9 +20,13 @@ from __future__ import annotations
 
 import dataclasses
 import time as _time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
+import contextlib
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import JETSON_XAVIER_NX, DeviceSpec
@@ -35,7 +39,12 @@ from repro.core.energy import (
 )
 from repro.core.intercept import InterceptedCall
 from repro.core.netsim import NetworkModel
-from repro.core.opseq import ios_fingerprint, operator_sequence_search
+from repro.core.opseq import (
+    candidate_sequences,
+    detect_loop_carried,
+    ios_fingerprint,
+    operator_sequence_search,
+)
 from repro.core.records import (
     CAT_D2H,
     CAT_H2D,
@@ -63,6 +72,38 @@ REPLAY_KERNELS_PER_FUSION = 6
 # fraction of the solo sequence time (sub-linear batching on the shared GPU)
 BATCH_MARGINAL_COST = 0.25
 PER_LOCAL_OP_S = 2e-7  # answering an intercepted call from the local cache
+# crude compiled-executable footprint: per-fused-kernel machine code + the
+# output staging buffers (used by the size-aware replay-cache eviction)
+EXEC_BYTES_PER_KERNEL = 2048
+# live H2D/D2H payloads are kept on this many trailing recorded calls (the
+# loop-carried detection needs ~3 repeats of the IOS); older payloads are
+# dropped so a client whose search never succeeds (dynamic-sequence apps,
+# cricket mode) does not pin every tensor it ever transferred
+PAYLOAD_RETENTION_CALLS = 4096
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Scope-suppress JAX's per-execution 'donated buffers were not usable'
+    UserWarning around a stateful step: on backends without donation (CPU)
+    the executable falls back to copying, which is semantically fine here —
+    the warning would fire every decode step.  Scoped, not module-level, so
+    applications keep the signal for their own jits."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        yield
+
+
+def _avals_nbytes(avals) -> int:
+    total = 0
+    for shape, dtype in avals:
+        n = int(np.dtype(dtype).itemsize)
+        for s in shape:
+            n *= int(s)
+        total += n
+    return total
 
 
 class SimClock:
@@ -126,9 +167,23 @@ class ReplayProgram:
     which is what makes this a *replayer*.  A program is content-addressed by
     its IOS fingerprint and shareable across clients: the executable takes
     ``(params_flat, inputs_flat)`` positionally, and each client supplies its
-    own parameter buffers through a :class:`BoundReplay`."""
+    own parameter buffers through a :class:`BoundReplay`.
 
-    def __init__(self, calls: List[InterceptedCall], *, execute: bool = True):
+    With ``carried_pairs`` (loop-carried tensors detected across IOS repeats,
+    see :func:`repro.core.opseq.detect_loop_carried`) the program is
+    *stateful*: a second executable ``step_fn(params_flat, wire_inputs,
+    carried_inputs)`` is compiled with the carried buffers **donated**
+    (``jax.jit(..., donate_argnums=...)``), so recurrent state (a KV cache)
+    stays server-resident, is updated in place, and never crosses the
+    network — the per-round replay is the model's intrinsic step cost."""
+
+    def __init__(
+        self,
+        calls: List[InterceptedCall],
+        *,
+        execute: bool = True,
+        carried_pairs: Tuple[Tuple[int, int], ...] = (),
+    ):
         t0 = _time.perf_counter()
         plan = replay_address_plan(calls)
         param_addrs = plan["param_addrs"]
@@ -136,10 +191,20 @@ class ReplayProgram:
         d2h_addrs = plan["d2h_addrs"]
         kernel_calls = plan["kernel_calls"]
 
-        def replay(params_flat, inputs_flat):
-            env: Dict[int, Any] = dict(zip(param_addrs, params_flat))
-            for addr, v in zip(h2d_addrs, inputs_flat):
-                env[addr] = v
+        self.carried_pairs = tuple(
+            (int(i), int(j)) for i, j in carried_pairs
+        )
+        carried_in = {i for i, _ in self.carried_pairs}
+        carried_out = {j for _, j in self.carried_pairs}
+        # h2d/d2h ordinals that still travel over the wire, in wire order
+        self.wire_in = [
+            i for i in range(len(h2d_addrs)) if i not in carried_in
+        ]
+        self.wire_out = [
+            j for j in range(len(d2h_addrs)) if j not in carried_out
+        ]
+
+        def run_kernels(env: Dict[int, Any]) -> None:
             for c in kernel_calls:
                 invals = [
                     env[v] if tag == "a" else v for tag, v in c.in_operands
@@ -149,9 +214,36 @@ class ReplayProgram:
                     outs = [outs]
                 for addr, val in zip(c.out_addrs, outs):
                     env[addr] = val
+
+        def replay(params_flat, inputs_flat):
+            env: Dict[int, Any] = dict(zip(param_addrs, params_flat))
+            for addr, v in zip(h2d_addrs, inputs_flat):
+                env[addr] = v
+            run_kernels(env)
             return [env[a] for a in d2h_addrs]
 
+        def replay_step(params_flat, wire_inputs, carried_inputs):
+            env: Dict[int, Any] = dict(zip(param_addrs, params_flat))
+            for ordinal, v in zip(self.wire_in, wire_inputs):
+                env[h2d_addrs[ordinal]] = v
+            for (ordinal, _), v in zip(self.carried_pairs, carried_inputs):
+                env[h2d_addrs[ordinal]] = v
+            run_kernels(env)
+            return (
+                [env[d2h_addrs[j]] for j in self.wire_out],
+                [env[d2h_addrs[j]] for _, j in self.carried_pairs],
+            )
+
+        # the un-jitted impls stay around so a cross-client batched
+        # executable can be built from them with jax.vmap
+        self._replay_impl = replay
+        self._step_impl = replay_step
         self.fn = jax.jit(replay) if execute else None
+        self.step_fn = (
+            jax.jit(replay_step, donate_argnums=(2,))
+            if execute and self.carried_pairs
+            else None
+        )
         self.d2h_avals = [
             c.out_avals[0] for c in calls if c.record.func == FUNC_D2H
         ]
@@ -162,6 +254,21 @@ class ReplayProgram:
         # re-walk the calls it was just built from
         self.plan = plan
         self.compile_seconds = _time.perf_counter() - t0
+        # size estimate for byte-aware cache eviction: machine code plus the
+        # output staging buffers (carried state is donated, not staged twice)
+        self.nbytes_estimate = (
+            EXEC_BYTES_PER_KERNEL * max(1, self.n_kernels)
+            + _avals_nbytes(self.d2h_avals)
+        )
+
+    @property
+    def is_stateful(self) -> bool:
+        return bool(self.carried_pairs)
+
+    def build_batched(self, width: int) -> "BatchedReplayProgram":
+        """Compile a true ``jax.vmap``-batched executable over ``width``
+        co-tenant replays of this program (shared parameter values)."""
+        return BatchedReplayProgram(self, width)
 
     def compute_seconds(self, device: DeviceSpec) -> float:
         """Modeled one-shot execution time of the fused sequence."""
@@ -179,14 +286,49 @@ class ReplayProgram:
         return solo * (1.0 + BATCH_MARGINAL_COST * (max(1, batch) - 1))
 
 
+class BatchedReplayProgram:
+    """A ``jax.vmap``-compiled cross-client batched replay executable.
+
+    One per (fingerprint, batch width), derived from the solo
+    :class:`ReplayProgram` and cached in the :class:`ReplayCache` under
+    ``<fingerprint>#vmap<width>`` so co-tenant rounds of the same width reuse
+    it.  Parameters are shared (``in_axes=None``); wire inputs — and, for a
+    stateful program, the per-client carried states — are stacked on a new
+    leading batch axis.  Executing the batched function is bitwise identical
+    to running the solo executable once per client (asserted by tests)."""
+
+    def __init__(self, program: ReplayProgram, width: int):
+        if width < 2:
+            raise ValueError(f"batched replay needs width >= 2, got {width}")
+        t0 = _time.perf_counter()
+        self.base = program
+        self.width = int(width)
+        self.stateful = program.is_stateful
+        if self.stateful:
+            self.fn = jax.jit(
+                jax.vmap(program._step_impl, in_axes=(None, 0, 0)),
+                donate_argnums=(2,),
+            )
+        else:
+            self.fn = jax.jit(jax.vmap(program._replay_impl, in_axes=(None, 0)))
+        self.compile_seconds = _time.perf_counter() - t0
+        self.n_kernels = program.n_kernels
+        self.nbytes_estimate = program.nbytes_estimate * self.width
+
+
 @dataclasses.dataclass
 class BoundReplay:
-    """A shared :class:`ReplayProgram` bound to one client's address space."""
+    """A shared :class:`ReplayProgram` bound to one client's address space.
+
+    For a stateful program the binding also owns this client's
+    server-resident ``carried_state`` (live device arrays, updated in place
+    by the donated step executable — they never revisit the host)."""
 
     program: ReplayProgram
     param_addrs: List[int]
     h2d_addrs: List[int]
     d2h_addrs: List[int]
+    carried_state: Optional[List[Any]] = None
 
     @classmethod
     def from_plan(cls, program: ReplayProgram, plan: dict) -> "BoundReplay":
@@ -200,6 +342,19 @@ class BoundReplay:
     @classmethod
     def bind(cls, program: ReplayProgram, calls: List[InterceptedCall]) -> "BoundReplay":
         return cls.from_plan(program, replay_address_plan(calls))
+
+    def seed_carried(self, env: Dict[int, Any]) -> None:
+        """Adopt the carried state left in this client's device memory by its
+        last recorded inference: the replay phase starts exactly where the
+        recording phase stopped, with the state already server-resident."""
+        if not self.program.carried_pairs:
+            return
+        vals = [
+            env.get(self.d2h_addrs[j]) for _, j in self.program.carried_pairs
+        ]
+        if any(v is None for v in vals):
+            return
+        self.carried_state = [jnp.asarray(v) for v in vals]
 
 
 class SegmentedReplayProgram:
@@ -259,6 +414,11 @@ class SegmentedReplayProgram:
                 )
             )
         self.compile_seconds = _time.perf_counter() - t0
+        self.n_kernels = len(ops)
+        self.nbytes_estimate = (
+            EXEC_BYTES_PER_KERNEL * max(1, len(ops))
+            + _avals_nbytes(self.d2h_avals)
+        )
 
     @staticmethod
     def _compile_segment(kernel_calls, graph, in_tids, out_tids, param_tids):
@@ -435,20 +595,39 @@ class OffloadServer:
         calls: List[InterceptedCall],
         client_id: str = DEFAULT_CLIENT,
         fingerprint: Optional[str] = None,
+        carried_pairs: Tuple[Tuple[int, int], ...] = (),
     ) -> bool:
         """Install a replay executable for ``client_id``.
 
         With a ``replay_cache`` attached and a fingerprint given, the compiled
         program is looked up first — a hit binds the cached executable to this
-        client's address space without recompiling.  Returns True iff the
-        program came from the cache."""
+        client's address space without recompiling.  ``carried_pairs`` is the
+        recording client's loop-carried-tensor detection; a cache hit uses the
+        cached program's pairs instead (the adopting client recorded a single
+        round and could not detect them itself), and a restart-persisted
+        fingerprint recovers the pairs from the cache metadata so the rebuilt
+        executable is stateful again.  Returns True iff the program came from
+        the cache."""
         program: Optional[ReplayProgram] = None
         from_cache = False
         if self.replay_cache is not None and fingerprint is not None:
             program = self.replay_cache.get(fingerprint)
             from_cache = program is not None
         if program is None:
-            program = ReplayProgram(calls, execute=self.execute)
+            pairs = tuple(carried_pairs)
+            if (
+                not pairs
+                and self.replay_cache is not None
+                and fingerprint is not None
+            ):
+                meta = self.replay_cache.known_metadata(fingerprint)
+                if meta and meta.get("carried_pairs"):
+                    pairs = tuple(
+                        (int(i), int(j)) for i, j in meta["carried_pairs"]
+                    )
+            program = ReplayProgram(
+                calls, execute=self.execute, carried_pairs=pairs
+            )
             self.compile_count += 1
             self.compile_seconds = program.compile_seconds
             if self.replay_cache is not None and fingerprint is not None:
@@ -458,6 +637,8 @@ class OffloadServer:
             bound = BoundReplay.from_plan(program, program.plan)
         else:
             bound = BoundReplay.bind(program, calls)
+        if self.execute:
+            bound.seed_carried(self.context(client_id).env)
         self.context(client_id).replay = bound
         return from_cache
 
@@ -508,27 +689,105 @@ class OffloadServer:
         return self.context(client_id).replay.program.compute_seconds(self.device)
 
     def replay_values(
-        self, inputs: List[np.ndarray], client_id: str = DEFAULT_CLIENT
+        self,
+        inputs: List[np.ndarray],
+        client_id: str = DEFAULT_CLIENT,
+        *,
+        fresh_carried: Optional[Dict[int, np.ndarray]] = None,
     ) -> List[Any]:
-        """Functionally execute the bound replay for one client (no timing)."""
+        """Functionally execute the bound replay for one client (no timing).
+
+        For a stateless program ``inputs`` are all H2D uploads and the full
+        D2H output list is returned.  For a stateful program ``inputs`` are
+        the *wire* inputs only; the carried state lives server-side in the
+        binding, is advanced in place by the donated step executable, and
+        only the wire outputs are returned.  ``fresh_carried`` (pair index ->
+        value) overwrites the resident state first — the path a client takes
+        when its application supplies genuinely new state (e.g. a new
+        prompt's prefill) instead of threading the resident handle."""
         ctx = self.context(client_id)
         bound = ctx.replay
-        if self.execute:
-            params_flat = [ctx.env[a] for a in bound.param_addrs]
-            outs = bound.program.fn(
-                params_flat, [np.asarray(x) for x in inputs]
-            )
-            outs = [np.asarray(o) for o in outs]
-            # refresh the env (inputs AND outputs) so a post-fallback
-            # recording-phase catch-up replays against this inference's
-            # buffers, not the last recorded one's
-            for addr, val in zip(bound.h2d_addrs, inputs):
-                ctx.env[addr] = np.asarray(val)
-            for addr, val in zip(bound.d2h_addrs, outs):
-                ctx.env[addr] = val
-        else:
-            outs = [np.zeros(s, d) for s, d in bound.program.d2h_avals]
+        program = bound.program
+        if not self.execute:
+            avals = program.d2h_avals
+            if program.is_stateful:
+                return [np.zeros(*avals[j]) for j in program.wire_out]
+            return [np.zeros(s, d) for s, d in avals]
+        params_flat = [ctx.env[a] for a in bound.param_addrs]
+        if program.is_stateful:
+            if bound.carried_state is None:
+                raise RuntimeError(
+                    f"stateful replay for {client_id!r} has no seeded "
+                    "carried state"
+                )
+            if fresh_carried:
+                for idx, v in fresh_carried.items():
+                    bound.carried_state[idx] = jnp.asarray(v)
+            wire = [np.asarray(x) for x in inputs]
+            with _quiet_donation():
+                wire_outs, new_carried = program.step_fn(
+                    params_flat, wire, bound.carried_state
+                )
+            bound.carried_state = list(new_carried)
+            wire_outs = [np.asarray(o) for o in wire_outs]
+            self._refresh_env(ctx, bound, wire, wire_outs)
+            return wire_outs
+        outs = program.fn(params_flat, [np.asarray(x) for x in inputs])
+        outs = [np.asarray(o) for o in outs]
+        # refresh the env (inputs AND outputs) so a post-fallback
+        # recording-phase catch-up replays against this inference's
+        # buffers, not the last recorded one's
+        for addr, val in zip(bound.h2d_addrs, inputs):
+            ctx.env[addr] = np.asarray(val)
+        for addr, val in zip(bound.d2h_addrs, outs):
+            ctx.env[addr] = val
         return outs
+
+    @staticmethod
+    def _refresh_env(
+        ctx: ClientContext,
+        bound: BoundReplay,
+        wire_inputs: List[Any],
+        wire_outs: List[Any],
+    ) -> None:
+        """Post-stateful-step env refresh: wire buffers get this round's
+        values, carried buffers alias the live resident state — so a
+        post-fallback recording-phase catch-up executes against the true
+        current state, not the last recorded round's."""
+        program = bound.program
+        for ordinal, val in zip(program.wire_in, wire_inputs):
+            ctx.env[bound.h2d_addrs[ordinal]] = np.asarray(val)
+        for ordinal, val in zip(program.wire_out, wire_outs):
+            ctx.env[bound.d2h_addrs[ordinal]] = val
+        for (i, j), state in zip(program.carried_pairs, bound.carried_state):
+            ctx.env[bound.h2d_addrs[i]] = state
+            ctx.env[bound.d2h_addrs[j]] = state
+
+    def adopt_replay_results(
+        self,
+        client_id: str,
+        inputs: List[np.ndarray],
+        outs: List[Any],
+        new_carried: Optional[List[Any]] = None,
+    ) -> None:
+        """Install the results of a cross-client *batched* execution for one
+        member as if it had executed solo: refresh the device-memory env and,
+        for a stateful program, advance the resident carried state to the
+        batch-computed value.  Called at claim time only, so a member that
+        never submits (a DAM fallback mid-walk) keeps its state untouched."""
+        if not self.execute:
+            return
+        ctx = self.context(client_id)
+        bound = ctx.replay
+        if bound.program.is_stateful:
+            if new_carried is not None:
+                bound.carried_state = list(new_carried)
+            self._refresh_env(ctx, bound, list(inputs), list(outs))
+            return
+        for addr, val in zip(bound.h2d_addrs, inputs):
+            ctx.env[addr] = np.asarray(val)
+        for addr, val in zip(bound.d2h_addrs, outs):
+            ctx.env[addr] = val
 
     def occupy(self, compute_seconds: float, start_t: float) -> float:
         """Reserve the shared GPU queue; returns the completion time."""
@@ -541,9 +800,12 @@ class OffloadServer:
         inputs: List[np.ndarray],
         start_t: float,
         client_id: str = DEFAULT_CLIENT,
+        fresh_carried: Optional[Dict[int, np.ndarray]] = None,
     ) -> Tuple[List[Any], float]:
         """Execute the compiled IOS solo; returns (outputs, completion time)."""
-        outs = self.replay_values(inputs, client_id)
+        outs = self.replay_values(
+            inputs, client_id, fresh_carried=fresh_carried
+        )
         done_at = self.occupy(self.replay_compute_seconds(client_id), start_t)
         return outs, done_at
 
@@ -612,6 +874,7 @@ class RRTOClient:
         self.mode = MODE_RECORDING
         self.logs: List[OperatorRecord] = []
         self.calls: List[InterceptedCall] = []
+        self._payload_trimmed = 0   # calls below this index hold no payloads
         self.ios: Optional[InferenceSequence] = None
         self._ios_calls: List[InterceptedCall] = []
         self._replay_pos = 0
@@ -620,6 +883,18 @@ class RRTOClient:
         self._replay_outputs: Optional[List[Any]] = None
         self._replay_done_at = 0.0
         self._out_cursor = 0
+        self._h2d_seen = 0
+        # stateful replay: loop-carried tensors stay server-resident.  The
+        # maps go from h2d/d2h ordinal to carried-pair index; the client hands
+        # the application a stable placeholder (the state value at replay
+        # entry) for each carried download and recognizes it by identity on
+        # the way back in — a non-placeholder upload is genuinely new state
+        # and is shipped to the server as an override.
+        self._carried_in_map: Dict[int, int] = {}
+        self._carried_out_map: Dict[int, int] = {}
+        self._wire_out_index: Dict[int, int] = {}
+        self._carried_placeholders: Dict[int, np.ndarray] = {}
+        self._fresh_carried: Dict[int, np.ndarray] = {}
         self.search_seconds = 0.0
         self.searches_run = 0
         self.fallbacks = 0
@@ -639,6 +914,16 @@ class RRTOClient:
         if self.split_plan is None:
             return self.ios_fp
         return f"{self.ios_fp}|{self.split_plan.signature()}"
+
+    @property
+    def carried_input_ordinals(self) -> frozenset:
+        """H2D ordinals (position among one round's uploads) answered locally
+        because the tensor is loop-carried server-resident state."""
+        return frozenset(self._carried_in_map)
+
+    @property
+    def stateful_replay(self) -> bool:
+        return bool(self._carried_in_map)
 
     def _rpc(self, payload: float, response: float) -> None:
         dt = self.network.rpc_time(payload, response, self.clock.t)
@@ -674,9 +959,22 @@ class RRTOClient:
                 # drain the server kernel queue before download completes
                 self._wait_until(self.server.busy_until)
             ret = self.server.exec_call(call, self.clock.t, self.client_id)
+            if rec.category == CAT_D2H and isinstance(ret, np.ndarray):
+                # Alg. 3 logs the full (func, args, ret) triple; the download
+                # payload feeds the loop-carried-tensor detection.  A copy,
+                # not the array handed to the app: an app that mutates the
+                # download in place before re-uploading it would otherwise
+                # self-alias into a guaranteed (false) bitwise match.
+                call.d2h_value = np.array(ret, copy=True)
 
         self.logs.append(rec)
         self.calls.append(call)
+        n = len(self.calls)
+        if n - self._payload_trimmed > PAYLOAD_RETENTION_CALLS:
+            for c in self.calls[self._payload_trimmed : n - PAYLOAD_RETENTION_CALLS]:
+                c.h2d_value = None
+                c.d2h_value = None
+            self._payload_trimmed = n - PAYLOAD_RETENTION_CALLS
 
         if self.variant == "rrto" and self.search_on_d2h:
             # run the search whenever a DtoH sync group closes: after the DtoH
@@ -714,15 +1012,17 @@ class RRTOClient:
             # closed window (min_repeats=1) is not yet *proof* of the IOS, but
             # if its fingerprint matches a sequence another client already
             # validated and the server already compiled, adopting it skips the
-            # remaining recording iterations.  A wrong adoption is caught by
-            # the record-level comparison in the replay phase and falls back
-            # (same safety net as a DAM deviation).
-            candidate = operator_sequence_search(self.logs, 1)
-            if candidate is not None:
+            # remaining recording iterations.  A one-repetition log of a
+            # multi-input app admits several shifted windows, so every
+            # alignment is probed — cache membership disambiguates.  A wrong
+            # adoption is caught by the record-level comparison in the replay
+            # phase and falls back (same safety net as a DAM deviation).
+            for candidate in candidate_sequences(self.logs):
                 cand_fp = ios_fingerprint(candidate.records)
                 if cand_fp in cache:
                     ios, fp = candidate, cand_fp
                     self.cache_adopted = True
+                    break
         self.search_seconds += _time.perf_counter() - t0
         self.searches_run += 1
         if ios is None:
@@ -734,9 +1034,32 @@ class RRTOClient:
         if cache is not None and fp is None:
             fp = ios_fingerprint(ios.records)
         self.ios_fp = fp
+        # loop-carried tensors across the recorded repeats (KV-cache pytrees
+        # and the like); a cache-adopting client recorded a single round, so
+        # detection yields () and the cached program's pairs apply instead
+        pairs = detect_loop_carried(self.calls, ios)
+        ios.carried_pairs = pairs
+        # recorded live payloads are only needed inside the detection horizon
+        # (the last few repeats); for a stateful app every retained round
+        # pins a full state pytree on the host, so drop the older ones
+        horizon = ios.start_index - 2 * len(ios)
+        for c in self.calls[: max(0, horizon)]:
+            c.h2d_value = None
+            c.d2h_value = None
         self.server.prepare_replay(
-            self._ios_calls, client_id=self.client_id, fingerprint=fp
+            self._ios_calls,
+            client_id=self.client_id,
+            fingerprint=fp,
+            carried_pairs=pairs,
         )
+        self._configure_carried(
+            self.server.context(self.client_id).replay.program
+        )
+        if self.stateful_replay and self.partition is not None:
+            # split-replay would have to ship the server-pinned carried state
+            # to device-resident segments every round, forfeiting the O(1)
+            # win — stateful IOSes replay full-server
+            self.partition = None
         if self.partition is not None:
             from repro.partition.adaptive import AdaptiveReplanner
             from repro.partition.segments import SegmentGraph
@@ -757,6 +1080,34 @@ class RRTOClient:
             )
         self.mode = MODE_REPLAYING
         self._replay_pos = 0
+
+    def _configure_carried(self, program: ReplayProgram) -> None:
+        """Adopt a (possibly cached) program's loop-carried spec: build the
+        ordinal maps and seed the app-facing placeholders from the state the
+        recording phase left behind."""
+        self._carried_in_map = {
+            i: idx for idx, (i, _) in enumerate(program.carried_pairs)
+        }
+        self._carried_out_map = {
+            j: idx for idx, (_, j) in enumerate(program.carried_pairs)
+        }
+        self._wire_out_index = {
+            j: w for w, j in enumerate(program.wire_out)
+        }
+        self._carried_placeholders = {}
+        self._fresh_carried = {}
+        if not program.carried_pairs:
+            return
+        if self.ios is not None and not self.ios.carried_pairs:
+            self.ios.carried_pairs = program.carried_pairs
+        bound = self.server.context(self.client_id).replay
+        env = self.server.context(self.client_id).env
+        for idx, (_, j) in enumerate(program.carried_pairs):
+            v = env.get(bound.d2h_addrs[j])
+            if v is not None:
+                # a writable copy: after a DAM fallback the materializer
+                # refreshes the app-held handle in place
+                self._carried_placeholders[idx] = np.array(v, copy=True)
 
     def _install_plan(self, plan: "SplitPlan") -> None:
         """Adopt a split plan; a full-server plan reverts to classic replay."""
@@ -782,6 +1133,7 @@ class RRTOClient:
             self._replay_inputs = []
             self._replay_outputs = None
             self._out_cursor = 0
+            self._h2d_seen = 0
             self._split_output_local = []
             self._inputs_uploaded = False
 
@@ -789,27 +1141,54 @@ class RRTOClient:
         self._replay_prefix.append(call)
 
         if rec.category == CAT_H2D:
+            ordinal = self._h2d_seen
+            self._h2d_seen += 1
             if self.split_plan is not None:
                 # split replay: inputs stay on the device until a segment
                 # schedule actually needs them on the wire
                 self._local()
                 self._replay_inputs.append(np.asarray(call.h2d_value))
-                if len(self._replay_inputs) == len(self.ios.h2d_positions):
+                if self._h2d_seen == len(self.ios.h2d_positions):
                     self._run_split_replay()
                 return "cudaSuccess"
-            # the only client->server RPC left: ship the raw input
-            self._rpc(rec.payload_bytes, 32)
-            self._inputs_uploaded = True
-            self._replay_inputs.append(np.asarray(call.h2d_value))
-            if len(self._replay_inputs) == len(self.ios.h2d_positions):
+            if ordinal in self._carried_in_map:
+                # loop-carried state: the server already holds it.  The app
+                # threading back the handle we gave it costs nothing; any
+                # other value is genuinely new state and ships as override.
+                idx = self._carried_in_map[ordinal]
+                ph = self._carried_placeholders.get(idx)
+                v = call.h2d_value
+                if ph is not None and (
+                    v is ph or getattr(v, "base", None) is ph
+                ):
+                    self._local()
+                else:
+                    self._rpc(rec.payload_bytes, 32)
+                    arr = np.asarray(v)
+                    self._fresh_carried[idx] = arr
+                    # the handle handed back at the paired D2H (and threaded
+                    # by the app from then on) is a writable copy, so a DAM
+                    # fallback can refresh it in place
+                    self._carried_placeholders[idx] = np.array(
+                        arr, copy=True
+                    )
+            else:
+                # the only client->server RPC left: ship the raw input
+                self._rpc(rec.payload_bytes, 32)
+                self._inputs_uploaded = True
+                self._replay_inputs.append(np.asarray(call.h2d_value))
+            if self._h2d_seen == len(self.ios.h2d_positions):
+                fresh = self._fresh_carried or None
+                self._fresh_carried = {}
                 if self.replay_submit is not None:
                     # cross-client batched backend (multi-tenant serving)
                     outs, done_at = self.replay_submit(
-                        self._replay_inputs, self.clock.t
+                        self._replay_inputs, self.clock.t, fresh_carried=fresh
                     )
                 else:
                     outs, done_at = self.server.run_replay(
-                        self._replay_inputs, self.clock.t, self.client_id
+                        self._replay_inputs, self.clock.t, self.client_id,
+                        fresh_carried=fresh,
                     )
                 self._replay_outputs = outs
                 self._replay_done_at = done_at
@@ -819,10 +1198,22 @@ class RRTOClient:
             return "cudaSuccess"
 
         if rec.category == CAT_D2H:
-            # wait for the one-shot (or segmented) execution to finish
-            self._wait_until(self._replay_done_at)
             cursor = self._out_cursor
             self._out_cursor += 1
+            if cursor in self._carried_out_map:
+                # carried state is answered locally with a stable handle —
+                # the live buffers stay on the server, nothing crosses the
+                # network and nothing is copied back to the host
+                self._local()
+                idx = self._carried_out_map[cursor]
+                ph = self._carried_placeholders.get(idx)
+                if ph is None:
+                    shape, dtype = call.out_avals[0]
+                    ph = np.zeros(shape, dtype)
+                    self._carried_placeholders[idx] = ph
+                return ph
+            # wait for the one-shot (or segmented) execution to finish
+            self._wait_until(self._replay_done_at)
             if (
                 cursor < len(self._split_output_local)
                 and self._split_output_local[cursor]
@@ -839,7 +1230,7 @@ class RRTOClient:
             self.meter.add(STATE_COMM, dt)
             self.stats.rpcs += 1
             self.stats.network_bytes += rec.payload_bytes + rec.response_bytes
-            return self._replay_outputs[cursor]
+            return self._replay_outputs[self._wire_out_index.get(cursor, cursor)]
 
         # intermediate operator: answered from the recorded result, locally
         self._local()
@@ -905,6 +1296,8 @@ class RRTOClient:
         server for catch-up, revert to recording, re-search later."""
         self.fallbacks += 1
         self.mode = MODE_RECORDING
+        if self._carried_in_map:
+            self._materialize_carried_prefix()
         # when the inputs never reached the server this inference (split mode
         # holds them back for the segment schedule), the catch-up batch must
         # carry the H2D calls too or the server replays against stale buffers
@@ -921,7 +1314,42 @@ class RRTOClient:
             self.calls.extend(prefix)
         self._replay_prefix = []
         self._replay_pos = 0
+        self._h2d_seen = 0
         return self._record_call(call)
+
+    def _materialize_carried_prefix(self) -> None:
+        """Before a catch-up after a mid-round deviation, turn the carried
+        placeholder uploads in the prefix into the real server-resident
+        values (the app only ever held handles).  The download is a real RPC
+        — this is the price of deviating from a stateful IOS."""
+        bound = self.server.context(self.client_id).replay
+        if bound is None:
+            return
+        ordinal = 0
+        for c in self._replay_prefix:
+            if c.record.category != CAT_H2D:
+                continue
+            idx = self._carried_in_map.get(ordinal)
+            ordinal += 1
+            if idx is None:
+                continue
+            ph = self._carried_placeholders.get(idx)
+            if not (
+                c.h2d_value is ph or getattr(c.h2d_value, "base", None) is ph
+            ):
+                continue  # the app supplied real state itself
+            if bound.carried_state is not None:
+                arr = np.asarray(bound.carried_state[idx])
+                self._rpc(64, arr.nbytes + 64)  # state download for catch-up
+                c.h2d_value = arr
+                if ph is not None and ph.shape == arr.shape:
+                    try:
+                        # the app keeps threading its handle through the
+                        # post-fallback recording rounds — give it the truth
+                        ph[...] = arr
+                    except ValueError:  # read-only handle
+                        pass
+                self._carried_placeholders[idx] = arr
 
     # -- the sink ------------------------------------------------------------
     def __call__(self, call: InterceptedCall) -> Any:

@@ -139,6 +139,11 @@ class InterceptedCall:
     out_addrs: Tuple[int, ...] = ()
     out_avals: Tuple[Tuple[Tuple[int, ...], str], ...] = ()  # (shape, dtype)
     h2d_value: Any = None            # live payload for HtoD transfers
+    # live payload of a DtoH transfer, filled in by the recording client (the
+    # paper's Alg. 3 logs the full (func, args, ret) triple) — this is what
+    # lets the loop-carried-tensor detection compare round k's downloads
+    # against round k+1's uploads
+    d2h_value: Any = None
 
 
 CallSink = Callable[[InterceptedCall], Any]

@@ -277,12 +277,21 @@ class OffloadSession:
     def replay_wire_inputs(self, inputs: Sequence[Any]) -> List[np.ndarray]:
         """The HtoD payloads one replay-phase inference of ``inputs`` ships,
         in wire order (non-resident invars only, mirroring the interceptor's
-        upload loop).  Used by the multi-tenant batcher to preload a round's
-        inputs before clients submit."""
+        upload loop; loop-carried inputs are server-resident state and never
+        ship).  Used by the multi-tenant batcher to preload a round's inputs
+        before clients submit."""
         values, resident = self._steady_invars(inputs)
-        return [
+        uploads = [
             np.asarray(v) for i, v in enumerate(values) if i not in resident
         ]
+        carried = (
+            self.client.carried_input_ordinals
+            if self.client is not None
+            else frozenset()
+        )
+        if not carried:
+            return uploads
+        return [v for i, v in enumerate(uploads) if i not in carried]
 
     def infer(self, *inputs) -> InferenceResult:
         if not self._loaded:

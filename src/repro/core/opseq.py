@@ -17,12 +17,16 @@ The search is hint-free: it sees nothing but the raw log.
 from __future__ import annotations
 
 import hashlib
-from typing import Optional, Sequence, Set
+from typing import List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from repro.core.records import (
     CAT_D2H,
     CAT_H2D,
     CAT_SYNC,
+    FUNC_D2H,
+    FUNC_H2D,
     InferenceSequence,
     OperatorRecord,
     canonical_address_map,
@@ -48,6 +52,89 @@ def ios_fingerprint(records: Sequence[OperatorRecord]) -> str:
         tuple(r.structural_identity(canon) for r in records),
     )
     return hashlib.sha256(repr(payload).encode()).hexdigest()
+
+
+def detect_loop_carried(
+    calls: Sequence,              # InterceptedCall list the IOS was found in
+    ios: InferenceSequence,
+    *,
+    max_transitions: int = 2,
+) -> Tuple[Tuple[int, int], ...]:
+    """Detect loop-carried tensors across consecutive repeats of the IOS.
+
+    A pair ``(h2d_ordinal, d2h_ordinal)`` means: the value the application
+    uploads as its ``h2d_ordinal``-th input of round *k+1* is bitwise the
+    value it downloaded as the ``d2h_ordinal``-th output of round *k* — the
+    application is threading recurrent state (a KV cache, an RNN hidden
+    state) through the offloading boundary.  Such state can stay resident on
+    the server once the replay executable is compiled stateful (with the
+    carried buffers donated), so it never crosses the network again and the
+    per-round replay compute is the model's intrinsic step cost.
+
+    Detection compares the recorded live payloads (``h2d_value`` uploads vs
+    ``d2h_value`` downloads, both logged by the recording client per Alg. 3's
+    ``(func, args, ret)`` triples) over up to ``max_transitions`` consecutive
+    round boundaries ending at the identified sequence: a pair must hold at
+    *every* available transition, which rejects coincidental one-off matches.
+    Returns () when the log holds fewer than two full rounds (e.g. a
+    cache-adopting client that recorded a single inference — it inherits the
+    pairs from the cached program instead).
+    """
+    length = len(ios)
+    start = ios.start_index
+    transitions = min(max_transitions, start // length)
+
+    def window(round_offset: int):
+        lo = start - round_offset * length
+        return calls[lo : lo + length]
+
+    # only record-identical earlier windows are repeats of the IOS (a
+    # cache-adopting client may have init noise right before its single
+    # recorded round) — shrink the transition horizon to the verified repeats
+    verified = 0
+    for t in range(1, transitions + 1):
+        if any(c.record != r for c, r in zip(window(t), ios.records)):
+            break
+        verified = t
+    transitions = verified
+    if transitions < 1:
+        return ()
+
+    def h2d_calls(win) -> List:
+        return [c for c in win if c.record.func == FUNC_H2D]
+
+    def d2h_calls(win) -> List:
+        return [c for c in win if c.record.func == FUNC_D2H]
+
+    pairs: List[Tuple[int, int]] = []
+    claimed: Set[int] = set()
+    cur_h2d = h2d_calls(window(0))
+    for i, up in enumerate(cur_h2d):
+        if up.h2d_value is None:
+            continue
+        for j, down in enumerate(d2h_calls(window(1))):
+            if j in claimed or down.d2h_value is None:
+                continue
+            uv, dv = np.asarray(up.h2d_value), np.asarray(down.d2h_value)
+            if uv.shape != dv.shape or uv.dtype != dv.dtype:
+                continue
+            if not np.array_equal(uv, dv):
+                continue
+            # confirm the pairing holds at every earlier transition too
+            ok = True
+            for t in range(1, transitions):
+                u2 = h2d_calls(window(t))[i].h2d_value
+                d2 = d2h_calls(window(t + 1))[j].d2h_value
+                if u2 is None or d2 is None or not np.array_equal(
+                    np.asarray(u2), np.asarray(d2)
+                ):
+                    ok = False
+                    break
+            if ok:
+                pairs.append((i, j))
+                claimed.add(j)
+                break
+    return tuple(pairs)
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +304,61 @@ def operator_sequence_search(
                     start_index=k,
                 )
     return None
+
+
+def candidate_sequences(
+    logs: Sequence[OperatorRecord], max_candidates: int = 8
+):
+    """Yield boundary-aligned, dependency-closed candidate windows
+    (shortest/latest first) *without* requiring repetition — the shared-cache
+    adoption probe fingerprints each against the already-validated IOSes.
+
+    A single-repetition log of a multi-input app admits several shifted
+    windows that all pass the dependency closure (an input uploaded before
+    the window start looks parameter-like), so the probe must consider every
+    alignment, not just the first survivor — the cache membership test picks
+    the right one, and a wrong adoption is still caught record-by-record in
+    the replay phase."""
+    if not logs:
+        return
+    tags = category_trace(logs)
+    h2d_starts = [i for i, t in enumerate(tags) if t == CAT_H2D]
+    d2h_marks = [i for i, t in enumerate(tags) if t == CAT_D2H]
+    if not h2d_starts or not d2h_marks:
+        return
+    d2h_set = set(d2h_marks)
+    seq_end = _sync_group_end(tags, d2h_marks[-1])
+    sync_group_ends = {_sync_group_end(tags, i) for i in d2h_marks}
+    starts = sorted(
+        set(h2d_starts)
+        | {
+            _sync_group_end(tags, i) + 1
+            for i in d2h_marks
+            if _sync_group_end(tags, i) + 1 < len(tags)
+        }
+    )
+    h2d_set = set(h2d_starts)
+    yielded = 0
+    for j in reversed(starts):
+        length = seq_end - j + 1
+        if length <= 0 or j > seq_end or length > len(logs):
+            continue
+        if not fast_check(tags, j, length, 1):
+            continue
+        for k in sorted(
+            (k for k in h2d_set if j - length <= k <= j), reverse=True
+        ):
+            if full_check(
+                logs, k, length, 1, d2h_set,
+                sync_group_ends=sync_group_ends,
+            ):
+                yield InferenceSequence(
+                    records=tuple(logs[k : k + length]), start_index=k
+                )
+                yielded += 1
+                if yielded >= max_candidates:
+                    return
+                break  # next start: one alignment per candidate length
 
 
 # ---------------------------------------------------------------------------

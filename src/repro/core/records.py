@@ -152,6 +152,12 @@ class InferenceSequence:
     # indices *within the sequence* of the boundary markers:
     h2d_positions: Tuple[int, ...] = ()
     d2h_positions: Tuple[int, ...] = ()
+    # loop-carried tensor pairs across consecutive repeats of the sequence:
+    # (h2d_ordinal, d2h_ordinal) means the h2d_ordinal-th upload of round k+1
+    # carries the same buffer the d2h_ordinal-th download of round k produced
+    # (e.g. a KV-cache pytree threaded through an autoregressive decode app).
+    # Detected post-search by :func:`repro.core.opseq.detect_loop_carried`.
+    carried_pairs: Tuple[Tuple[int, int], ...] = ()
 
     def __post_init__(self):
         if not self.h2d_positions:
@@ -171,5 +177,11 @@ class InferenceSequence:
         """RPCs still required per inference in the replay phase.
 
         Only the memory transfers between host and device survive (paper
-        Tab. IV: 11 = HtoD + DtoH + syncs grouped with them)."""
-        return len(self.h2d_positions) + len(self.d2h_positions)
+        Tab. IV: 11 = HtoD + DtoH + syncs grouped with them).  Loop-carried
+        tensors stay server-resident once the replay executable is stateful,
+        so their uploads/downloads are answered locally and drop out."""
+        return (
+            len(self.h2d_positions)
+            + len(self.d2h_positions)
+            - 2 * len(self.carried_pairs)
+        )

@@ -42,6 +42,10 @@ PLACE_SERVER = "server"
 # producer sentinels for TensorInfo
 PRODUCER_INPUT = -1   # replay input (H2D upload of the app's inference input)
 PRODUCER_PARAM = -2   # parameter-like: resident on both endpoints
+PRODUCER_CARRIED = -3  # loop-carried state: pinned server-resident (stateful
+#                        replay keeps it in the donated step executable, so it
+#                        never crosses a cut — see core/opseq.py
+#                        detect_loop_carried)
 
 # server-side replay executables are fused (replay-as-compilation); device
 # segments dispatch eagerly like the device-only baseline (mobile frameworks
@@ -72,6 +76,10 @@ class TensorInfo:
     @property
     def is_param(self) -> bool:
         return self.producer == PRODUCER_PARAM
+
+    @property
+    def is_carried(self) -> bool:
+        return self.producer == PRODUCER_CARRIED
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,7 +178,9 @@ class SplitPlan:
         return SplitPlan(segments=tuple(segs))
 
 
-def tensor_versions(calls) -> Tuple[List[OpInfo], List[TensorInfo], List[int], List[int]]:
+def tensor_versions(
+    calls, carried_input_ordinals: Sequence[int] = ()
+) -> Tuple[List[OpInfo], List[TensorInfo], List[int], List[int]]:
     """Walk the recorded calls and build the versioned dataflow.
 
     Returns ``(ops, tensors, input_tids, output_tids)`` where ``input_tids``
@@ -179,13 +189,19 @@ def tensor_versions(calls) -> Tuple[List[OpInfo], List[TensorInfo], List[int], L
     :func:`repro.core.engine.replay_address_plan` — it is a pure function of
     the calls, so the same walk over an isomorphic sequence recorded by
     another client yields structurally identical ops/tensors in the identical
-    canonical order (what lets one plan's compiled segments be rebound)."""
+    canonical order (what lets one plan's compiled segments be rebound).
+
+    ``carried_input_ordinals`` marks H2D ordinals that are loop-carried
+    server-resident state (stateful replay): their tensors are tagged
+    ``PRODUCER_CARRIED`` so the cut-crossing accounting never bills them on
+    the wire."""
     ops: List[OpInfo] = []
     tensors: List[TensorInfo] = []
     consumers: Dict[int, List[int]] = {}
     current: Dict[int, int] = {}       # addr -> live tid
     input_tids: List[int] = []
     output_tids: List[int] = []
+    carried_set = set(carried_input_ordinals)
 
     def new_tensor(addr: int, nbytes: int, producer: int) -> int:
         tid = len(tensors)
@@ -198,7 +214,12 @@ def tensor_versions(calls) -> Tuple[List[OpInfo], List[TensorInfo], List[int], L
         rec = c.record
         if rec.func == FUNC_H2D:
             addr, nbytes = c.out_addrs[0], rec.args_sig[1]
-            input_tids.append(new_tensor(addr, nbytes, PRODUCER_INPUT))
+            producer = (
+                PRODUCER_CARRIED
+                if len(input_tids) in carried_set
+                else PRODUCER_INPUT
+            )
+            input_tids.append(new_tensor(addr, nbytes, producer))
         elif rec.func == FUNC_D2H:
             addr = c.in_operands[0][1]
             tid = current.get(addr)
@@ -236,9 +257,12 @@ def tensor_versions(calls) -> Tuple[List[OpInfo], List[TensorInfo], List[int], L
 class SegmentGraph:
     """The planner's view of one recorded IOS."""
 
-    def __init__(self, calls):
+    def __init__(self, calls, carried_input_ordinals: Sequence[int] = ()):
         self.ops, self.tensors, self.input_tids, self.output_tids = (
-            tensor_versions(calls)
+            tensor_versions(calls, carried_input_ordinals)
+        )
+        self.carried_tids = frozenset(
+            t.tid for t in self.tensors if t.is_carried
         )
         self.n_ops = len(self.ops)
         if self.n_ops == 0:
@@ -267,11 +291,13 @@ class SegmentGraph:
     def live_bytes(self) -> List[float]:
         """``live[b]`` = bytes of non-param tensors crossing boundary ``b``
         (between op ``b-1`` and op ``b``), for ``b`` in ``0..n_ops``.  This is
-        the uncut transfer volume a placement switch at ``b`` would ship."""
+        the uncut transfer volume a placement switch at ``b`` would ship.
+        Loop-carried tensors are excluded like parameters: stateful replay
+        pins them server-resident, so they never cross a cut."""
         n = self.n_ops
         diff = [0.0] * (n + 2)
         for t in self.tensors:
-            if t.is_param or not t.consumers:
+            if t.is_param or t.is_carried or not t.consumers:
                 continue
             lo = t.producer + 1          # first boundary the tensor is live at
             hi = max(t.consumers)        # last boundary (inclusive)
@@ -449,7 +475,8 @@ def compute_schedule(
     sched = Schedule(output_local=[])
     tensors = graph.tensors
     wire_div = getattr(link, "input_wire_divisor", 1.0)
-    input_set = set(graph.input_tids)
+    carried = getattr(graph, "carried_tids", frozenset())
+    input_set = set(graph.input_tids) - carried
 
     def wire_bytes(tid: int) -> float:
         # inference inputs travel compressed (e.g. JPEG camera frames);
@@ -457,9 +484,11 @@ def compute_schedule(
         nb = float(tensors[tid].nbytes)
         return nb / wire_div if tid in input_set else nb
 
-    # parameters live on both endpoints; inputs start on the device
+    # parameters live on both endpoints; inputs start on the device;
+    # loop-carried state is pinned on the server (a device segment consuming
+    # it would have to download it — the schedule bills that honestly)
     at_device = {t.tid for t in tensors if t.is_param} | input_set
-    at_server = {t.tid for t in tensors if t.is_param}
+    at_server = {t.tid for t in tensors if t.is_param} | set(carried)
     ready = {tid: 0.0 for tid in at_device}
 
     t = 0.0            # frontier of the executing side

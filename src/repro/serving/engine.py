@@ -8,15 +8,19 @@ Two deployment modes:
 
 * ``RRTOServedLM`` — the paper's scenario mapped to LLM generation: a mobile
   client drives next-token computation through the *transparent offloading*
-  stack.  The offloaded application is ``next_token(padded_tokens, cur_len)``
-  over a static padded bucket, so every call executes the identical operator
-  sequence (a Static Activation Model — DESIGN.md §Arch-applicability): after
-  a few recorded calls the Operator Sequence Search locks the sequence and
-  every subsequent token costs 2 RPCs instead of thousands.  (A production
-  server would pair this with KV-cache donation on the replay executable; the
-  recompute formulation keeps the demo functionally exact — outputs match
-  ``LocalServing`` token-for-token — without donation plumbing, and the RPC
-  accounting, which is what the paper measures, is identical.)
+  stack.  The default (stateful) formulation offloads the KV-cached
+  ``decode_step(token, pos, cache)`` app: every call executes the identical
+  operator sequence (a Static Activation Model), the Operator Sequence
+  Search locks it after a few recorded calls, and the loop-carried KV-cache
+  pytree is detected across repeats and **donated** into a stateful replay
+  executable — the cache stays server-resident, never crosses the network,
+  and each replayed token costs the model's intrinsic O(1) step compute plus
+  3 RPCs.  Outputs match ``LocalServing`` token-for-token (asserted by the
+  fast-path test in tests/test_serving.py).  ``stateful=False`` keeps the
+  seed formulation — ``next_token(padded_tokens, cur_len)`` over a static
+  padded bucket, which recomputes the whole prefix every step (O(seq)
+  per-token replay compute; see benchmarks/decode_scaling.py for the
+  head-to-head).
 
 * ``MultiClientServedLM`` — the multi-tenant edge deployment: N mobile
   clients run the same LM app against one shared
@@ -100,7 +104,14 @@ class RRTOServedLM:
     :class:`~repro.serving.multitenant.RRTOEdgeServer`) plus a unique
     ``client_id`` to attach this client to a multi-tenant edge server instead
     of a private one — the session then shares that server's replay cache,
-    GPU queue, ingress link and clock with its co-tenants."""
+    GPU queue, ingress link and clock with its co-tenants.
+
+    ``stateful=True`` (default) offloads the KV-cached decode step and
+    threads the cache pytree through the offloading boundary; once the IOS
+    locks, the engine detects the cache as loop-carried, compiles a
+    donation-aware stateful replay executable, and each token replays as an
+    O(1) step with the cache server-resident.  ``stateful=False`` keeps the
+    seed prefix-recompute formulation for comparison."""
 
     def __init__(
         self,
@@ -117,6 +128,7 @@ class RRTOServedLM:
         edge: Optional[RRTOEdgeServer] = None,
         client_id: Optional[str] = None,
         partition=None,
+        stateful: bool = True,
     ):
         if edge is not None and (environment is not None or execute is not None):
             # these are edge-server properties; a per-client override would be
@@ -127,6 +139,7 @@ class RRTOServedLM:
             )
         self.cfg = cfg
         self.bucket_len = bucket_len
+        self.stateful = stateful
         model = get_model(cfg)
         params = (
             params
@@ -134,23 +147,47 @@ class RRTOServedLM:
             else model.init_params(jax.random.PRNGKey(seed), cfg)
         )
 
-        def next_token(p, padded_tokens, cur_len):
-            logits = model.forward(p, {"tokens": padded_tokens}, cfg)
-            idx = jnp.clip(cur_len - 1, 0, padded_tokens.shape[1] - 1)
-            last = jax.lax.dynamic_slice_in_dim(logits, idx, 1, axis=1)
-            return [
-                jnp.argmax(last[:, 0, : cfg.vocab], axis=-1).astype(jnp.int32)
-            ]
+        if stateful:
+            cache0 = model.init_cache(cfg, batch, bucket_len)
+            self._cache_leaves, self._cache_treedef = jax.tree.flatten(cache0)
+            treedef = self._cache_treedef
 
-        offloadable = OffloadableModel(
-            name=f"{cfg.name}-nexttoken",
-            apply=next_token,
-            params=params,
-            example_inputs=(
-                np.zeros((batch, bucket_len), np.int32),
-                np.zeros((), np.int32),
-            ),
-        )
+            def decode_step(p, token, pos, *cache_leaves):
+                cache = jax.tree.unflatten(treedef, list(cache_leaves))
+                logits, new_cache = model.decode_step(p, token, cache, pos, cfg)
+                nxt = jnp.argmax(
+                    logits[:, 0, : cfg.vocab], axis=-1
+                ).astype(jnp.int32)
+                return [nxt, *jax.tree.leaves(new_cache)]
+
+            offloadable = OffloadableModel(
+                name=f"{cfg.name}-decodestep",
+                apply=decode_step,
+                params=params,
+                example_inputs=(
+                    np.zeros((batch, 1), np.int32),
+                    np.zeros((), np.int32),
+                    *(np.asarray(leaf) for leaf in self._cache_leaves),
+                ),
+            )
+        else:
+            def next_token(p, padded_tokens, cur_len):
+                logits = model.forward(p, {"tokens": padded_tokens}, cfg)
+                idx = jnp.clip(cur_len - 1, 0, padded_tokens.shape[1] - 1)
+                last = jax.lax.dynamic_slice_in_dim(logits, idx, 1, axis=1)
+                return [
+                    jnp.argmax(last[:, 0, : cfg.vocab], axis=-1).astype(jnp.int32)
+                ]
+
+            offloadable = OffloadableModel(
+                name=f"{cfg.name}-nexttoken",
+                apply=next_token,
+                params=params,
+                example_inputs=(
+                    np.zeros((batch, bucket_len), np.int32),
+                    np.zeros((), np.int32),
+                ),
+            )
         if edge is not None:
             if system != "rrto":
                 raise ValueError("multi-tenant mode serves the rrto system only")
@@ -168,10 +205,60 @@ class RRTOServedLM:
                 partition=partition,
             )
 
+    # -- generation drivers -------------------------------------------------
+    def start_generation(self, prompt: np.ndarray, max_new_tokens: int):
+        """Initialize per-generation state; returns the driving cursor.
+
+        Stateful mode feeds the prompt token-by-token through the offloaded
+        decode step (prefill-via-decode: the cache warms up through the same
+        IOS every subsequent token replays), then feeds each sampled token
+        back.  The cache leaves the app threads are opaque handles once the
+        replay turns stateful — the server advances the real state."""
+        b, s = prompt.shape
+        assert s + max_new_tokens <= self.bucket_len, "bucket overflow"
+        return {
+            "prompt": prompt,
+            "b": b,
+            "s": s,
+            "state": [np.asarray(leaf) for leaf in self._cache_leaves],
+            "tok": prompt[:, 0:1].astype(np.int32),
+            "pos": 0,
+            "out": [],
+            "max_new": max_new_tokens,
+        }
+
+    def step_inputs(self, g) -> tuple:
+        """The offload-session inputs for the next decode call."""
+        return (g["tok"], np.int32(g["pos"]), *g["state"])
+
+    def absorb_step(self, g, outputs: List[Any]) -> None:
+        """Consume one decode call's outputs and advance the cursor."""
+        nxt = np.asarray(outputs[0]).astype(np.int32)
+        g["state"] = list(outputs[1:])
+        pos = g["pos"]
+        if pos + 1 < g["s"]:
+            g["tok"] = g["prompt"][:, pos + 1 : pos + 2].astype(np.int32)
+        else:
+            g["out"].append(nxt[:, None])
+            g["tok"] = nxt[:, None]
+        g["pos"] = pos + 1
+
+    def steps_total(self, g) -> int:
+        return g["s"] + g["max_new"] - 1
+
     def generate(self, prompt: np.ndarray, max_new_tokens: int) -> GenerationResult:
-        """Greedy generation; every next-token call goes through the
-        offloading stack (recording first, replaying once the sequence is
-        identified)."""
+        """Greedy generation; every decode call goes through the offloading
+        stack (recording first, replaying once the sequence is identified —
+        statefully, with the KV cache donated server-side, in the default
+        formulation)."""
+        if self.stateful:
+            g = self.start_generation(prompt, max_new_tokens)
+            for _ in range(self.steps_total(g)):
+                res = self.session.infer(*self.step_inputs(g))
+                self.absorb_step(g, res.outputs)
+            return GenerationResult(
+                tokens=np.concatenate(g["out"], axis=1), steps=max_new_tokens
+            )
         b, s = prompt.shape
         assert s + max_new_tokens <= self.bucket_len, "bucket overflow"
         buf = np.zeros((b, self.bucket_len), np.int32)
@@ -213,14 +300,18 @@ class MultiClientServedLM:
         cache_capacity: int = 8,
         batch_window_s: float = 2e-3,
         edge: Optional[RRTOEdgeServer] = None,
+        stateful: bool = True,
     ):
         if num_clients < 1:
             raise ValueError(f"need at least one client, got {num_clients}")
         self.cfg = cfg
         self.bucket_len = bucket_len
+        self.stateful = stateful
         model = get_model(cfg)
         # one app binary on every device: identical parameters, so the replay
-        # executable (not just the IOS) is shareable verbatim
+        # executable (not just the IOS) is shareable verbatim — and in the
+        # stateful formulation, same-round decode submissions run as one true
+        # vmap-batched stateful step over the stacked per-client KV caches
         params = model.init_params(jax.random.PRNGKey(seed), cfg)
         self.edge = edge or RRTOEdgeServer(
             execute=execute,
@@ -237,6 +328,7 @@ class MultiClientServedLM:
                 params=params,
                 edge=self.edge,
                 client_id=f"c{i}",
+                stateful=stateful,
             )
             for i in range(num_clients)
         ]
@@ -250,6 +342,8 @@ class MultiClientServedLM:
             raise ValueError(
                 f"{len(prompts)} prompts for {len(self.clients)} clients"
             )
+        if self.stateful:
+            return self._generate_stateful(prompts, max_new_tokens)
         bufs: List[np.ndarray] = []
         curs: List[int] = []
         for prompt in prompts:
@@ -277,4 +371,40 @@ class MultiClientServedLM:
                 tokens=np.concatenate(o, axis=1), steps=max_new_tokens
             )
             for o in outs
+        ]
+
+    def _generate_stateful(
+        self, prompts: Sequence[np.ndarray], max_new_tokens: int
+    ) -> List[GenerationResult]:
+        """Stateful lockstep: every client advances its decode step once per
+        round (prompts may differ in length, so positions diverge — the
+        vmap-batched stateful executable maps over per-client ``pos`` and
+        cache slices); clients whose generation completed drop out of the
+        round."""
+        gens = [
+            client.start_generation(np.asarray(prompts[i]), max_new_tokens)
+            for i, client in enumerate(self.clients)
+        ]
+        remaining = {
+            client.session.client_id: (client, g)
+            for client, g in zip(self.clients, gens)
+        }
+        while remaining:
+            round_inputs = {
+                cid: client.step_inputs(g)
+                for cid, (client, g) in remaining.items()
+            }
+            results = self.edge.run_round(round_inputs)
+            done: List[str] = []
+            for cid, (client, g) in remaining.items():
+                client.absorb_step(g, results[cid].outputs)
+                if g["pos"] >= client.steps_total(g):
+                    done.append(cid)
+            for cid in done:
+                del remaining[cid]
+        return [
+            GenerationResult(
+                tokens=np.concatenate(g["out"], axis=1), steps=max_new_tokens
+            )
+            for g in gens
         ]

@@ -21,7 +21,14 @@ shared pieces:
   one batched call on the shared GPU: the first submission flushes the
   round's preloaded group, pays the window wait plus one sub-linear batched
   execution (``ReplayProgram.batched_compute_seconds``), and every member
-  completes at the group's finish time.
+  completes at the group's finish time.  When the group's members share
+  parameter *values* (the common edge deployment: one app binary on every
+  device), the group executes as **one true ``jax.vmap``-compiled batched
+  call** — a :class:`~repro.core.engine.BatchedReplayProgram` cached per
+  (replay key, batch width) in the shared :class:`ReplayCache` — whose
+  outputs are bitwise identical to the per-client execution loop; members
+  with distinct parameters fall back to per-client functional execution
+  under the same modeled batch timing.
 
 Simulation contract: sessions share one clock, so ``run_round`` drives them
 cooperatively — recording-phase clients serialize their RPC storms through
@@ -38,6 +45,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import GTX_2080TI, DeviceSpec
@@ -52,10 +60,21 @@ from repro.core.offload import InferenceResult, OffloadableModel, OffloadSession
 from repro.serving.replay_cache import ReplayCache
 
 
+def _inputs_digest(arrs: Sequence[np.ndarray]) -> Tuple:
+    """Cheap structural signature (shape/dtype per tensor) — the batching
+    window compares every submission against its preload, so the full-array
+    compare must be short-circuited for mixed-shape co-tenants."""
+    return tuple((a.shape, str(a.dtype)) for a in arrs)
+
+
 def _inputs_equal(a: Sequence[np.ndarray], b: Sequence[np.ndarray]) -> bool:
-    return len(a) == len(b) and all(
-        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, b)
-    )
+    if len(a) != len(b):
+        return False
+    a = [np.asarray(x) for x in a]
+    b = [np.asarray(y) for y in b]
+    if _inputs_digest(a) != _inputs_digest(b):
+        return False
+    return all(np.array_equal(x, y) for x, y in zip(a, b))
 
 
 @dataclasses.dataclass
@@ -65,6 +84,11 @@ class _BatchGroup:
     # a member that never submits — e.g. a DAM fallback mid-walk — leaves no
     # speculative writes in its device-memory namespace)
     pending: Dict[str, List[np.ndarray]]
+    # true-vmap results per member (None: per-client functional execution);
+    # outputs/state are installed into a member's namespace only at claim
+    # time, so an unclaimed member's env and carried state stay untouched
+    outs: Optional[Dict[str, List[np.ndarray]]] = None
+    carried: Optional[Dict[str, List[Any]]] = None
 
     def claim(self, client_id: str, inputs: Sequence[np.ndarray]) -> bool:
         preloaded = self.pending.pop(client_id, None)
@@ -77,12 +101,18 @@ class ReplayBatcher:
     def __init__(self, server: OffloadServer, *, window_s: float = 2e-3):
         self.server = server
         self.window_s = window_s
+        # escape hatch (benchmarks/tests): False forces the per-client
+        # functional execution loop even for shared-param groups, so the
+        # vmap-batched path can be diffed bitwise against it
+        self.enable_vmap = True
         # fingerprint -> list of (client, wire inputs) preloaded for the round
         self._pending: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]] = {}
         self._groups: Dict[str, _BatchGroup] = {}
         self.batches_executed = 0
         self.batched_replays = 0     # submissions served from a batch
         self.solo_replays = 0        # submissions that fell back to solo
+        self.vmap_batches = 0        # groups executed as one true vmap call
+        self.vmap_compiles = 0       # batched executables built (not cached)
         self.batch_sizes: List[int] = []
 
     def begin_round(
@@ -96,15 +126,30 @@ class ReplayBatcher:
     def make_submit(self, client: RRTOClient):
         """A bound submit hook for ``RRTOClient.replay_submit``."""
 
-        def submit(inputs: List[np.ndarray], t: float):
-            return self.submit(client, inputs, t)
+        def submit(inputs: List[np.ndarray], t: float, fresh_carried=None):
+            return self.submit(
+                client, inputs, t, fresh_carried=fresh_carried
+            )
 
         return submit
 
     def submit(
-        self, client: RRTOClient, inputs: List[np.ndarray], t: float
+        self,
+        client: RRTOClient,
+        inputs: List[np.ndarray],
+        t: float,
+        *,
+        fresh_carried: Optional[Dict[int, np.ndarray]] = None,
     ) -> Tuple[List[Any], float]:
         fp = client.replay_key
+        if fresh_carried:
+            # the member is overriding its server-resident carried state
+            # (fresh prefill); the preloaded batch ran without the override,
+            # so this round must execute solo
+            self.solo_replays += 1
+            return self.server.run_replay(
+                inputs, t, client.client_id, fresh_carried=fresh_carried
+            )
         group = self._groups.get(fp) if fp is not None else None
         if group is None:
             group = self._execute_group(fp, t)
@@ -119,11 +164,107 @@ class ReplayBatcher:
         # declared them one round); the serialized shared-clock driving means
         # a later member's submit time can already exceed the group's finish,
         # in which case its wait is simply zero.
-        outs = self.server.replay_values(inputs, client.client_id)
+        if group.outs is not None:
+            # true vmap batch: this member's slice was computed in the one
+            # batched call — install it as if it had executed solo
+            outs = group.outs[client.client_id]
+            self.server.adopt_replay_results(
+                client.client_id,
+                inputs,
+                outs,
+                group.carried.get(client.client_id)
+                if group.carried is not None
+                else None,
+            )
+        else:
+            outs = self.server.replay_values(inputs, client.client_id)
         self.batched_replays += 1
         return outs, max(group.done_at, t)
 
     # ------------------------------------------------------------------
+    def _shared_params(
+        self, members: List[Tuple[RRTOClient, List[np.ndarray]]]
+    ) -> Optional[List[Any]]:
+        """The members' shared parameter buffers, or None when any differ.
+
+        Identity comparison first (co-tenants running the one app binary
+        literally share the leaves), bitwise equality as the slow path."""
+        first_ctx = self.server.context(members[0][0].client_id)
+        first_bound = first_ctx.replay
+        params = [first_ctx.env[a] for a in first_bound.param_addrs]
+        for cl, _ in members[1:]:
+            ctx = self.server.context(cl.client_id)
+            bound = ctx.replay
+            if bound is None or bound.program is not first_bound.program:
+                return None
+            theirs = [ctx.env[a] for a in bound.param_addrs]
+            for mine, other in zip(params, theirs):
+                if mine is other:
+                    continue
+                a, b = np.asarray(mine), np.asarray(other)
+                if a.shape != b.shape or a.dtype != b.dtype or not np.array_equal(a, b):
+                    return None
+        return params
+
+    def _run_vmap_batch(
+        self,
+        fp: str,
+        members: List[Tuple[RRTOClient, List[np.ndarray]]],
+        params_flat: List[Any],
+    ) -> Optional[_BatchGroup]:
+        """Execute the whole group as one ``jax.vmap``-compiled batched call;
+        returns per-member outputs (and carried states) keyed by client id."""
+        from repro.core.engine import BatchedReplayProgram, _quiet_donation
+
+        program = self.server.context(members[0][0].client_id).replay.program
+        if not members[0][1] and not program.is_stateful:
+            return None  # no mapped axis to batch over
+        width = len(members)
+        key = f"{fp}#vmap{width}"
+        cache = self.server.replay_cache
+        batched: Optional[BatchedReplayProgram] = (
+            cache.get(key) if cache is not None else None
+        )
+        if batched is None or batched.base is not program:
+            batched = program.build_batched(width)
+            self.vmap_compiles += 1
+            if cache is not None:
+                cache.put(key, batched)
+        stacked_inputs = [
+            np.stack([np.asarray(m[1][k]) for m in members])
+            for k in range(len(members[0][1]))
+        ]
+        if program.is_stateful:
+            states = []
+            for cl, _ in members:
+                st = self.server.context(cl.client_id).replay.carried_state
+                if st is None:
+                    return None
+                states.append(st)
+            stacked_state = [
+                jnp.stack([st[k] for st in states])
+                for k in range(len(states[0]))
+            ]
+            with _quiet_donation():
+                wire_outs, new_carried = batched.fn(
+                    params_flat, stacked_inputs, stacked_state
+                )
+            outs = {
+                cl.client_id: [np.asarray(o[b]) for o in wire_outs]
+                for b, (cl, _) in enumerate(members)
+            }
+            carried = {
+                cl.client_id: [c[b] for c in new_carried]
+                for b, (cl, _) in enumerate(members)
+            }
+            return _BatchGroup(0.0, {}, outs=outs, carried=carried)
+        raw = batched.fn(params_flat, stacked_inputs)
+        outs = {
+            cl.client_id: [np.asarray(o[b]) for o in raw]
+            for b, (cl, _) in enumerate(members)
+        }
+        return _BatchGroup(0.0, {}, outs=outs)
+
     def _execute_group(self, fp: Optional[str], t: float) -> Optional[_BatchGroup]:
         members = self._pending.pop(fp, None) if fp is not None else None
         if not members:
@@ -133,15 +274,21 @@ class ReplayBatcher:
         # the batch slot count is the admitted membership; a member that ends
         # up falling back mid-walk still occupied its scheduled slot
         batch = len(members)
+        group: Optional[_BatchGroup] = None
+        if batch > 1 and self.server.execute and self.enable_vmap:
+            params_flat = self._shared_params(members)
+            if params_flat is not None:
+                group = self._run_vmap_batch(fp, members, params_flat)
+                if group is not None:
+                    self.vmap_batches += 1
+        if group is None:
+            group = _BatchGroup(done_at=0.0, pending={})
         compute = program.batched_compute_seconds(self.server.device, batch)
         # a lone submitter flushes immediately; a real group waits out the
         # batching window for its co-tenants before the one-shot execution
         start = t + (self.window_s if batch > 1 else 0.0)
-        done_at = self.server.occupy(compute, start)
-        group = _BatchGroup(
-            done_at=done_at,
-            pending={cl.client_id: wire for cl, wire in members},
-        )
+        group.done_at = self.server.occupy(compute, start)
+        group.pending = {cl.client_id: wire for cl, wire in members}
         self._groups[fp] = group
         self.batches_executed += 1
         self.batch_sizes.append(batch)
@@ -157,13 +304,14 @@ class RRTOEdgeServer:
         server_device: DeviceSpec = GTX_2080TI,
         execute: bool = True,
         cache_capacity: int = 8,
+        cache_capacity_bytes: Optional[float] = None,
         batch_window_s: float = 2e-3,
         environment: str = "indoor",
         ingress: Optional[ServerIngress] = None,
         clock: Optional[SimClock] = None,
     ):
         self.clock = clock or SimClock()
-        self.cache = ReplayCache(cache_capacity)
+        self.cache = ReplayCache(cache_capacity, cache_capacity_bytes)
         self.server = OffloadServer(
             server_device, execute=execute, replay_cache=self.cache
         )
@@ -279,6 +427,8 @@ class RRTOEdgeServer:
             batches=self.batcher.batches_executed,
             batched_replays=self.batcher.batched_replays,
             solo_replays=self.batcher.solo_replays,
+            vmap_batches=self.batcher.vmap_batches,
+            vmap_compiles=self.batcher.vmap_compiles,
             mean_batch=(
                 float(np.mean(self.batcher.batch_sizes))
                 if self.batcher.batch_sizes

@@ -12,8 +12,13 @@ and shares them:
   after a *single* recorded inference (no ``min_repeats`` wait) — total
   recording-phase RPCs grow sublinearly in client count;
 * the one-shot XLA executable is compiled exactly once per fingerprint;
-* eviction is LRU with a bounded capacity (an edge box serves a rotating
-  population of model versions, not an unbounded zoo).
+* eviction is LRU, bounded by entry count *and* by the compiled-executable
+  byte estimate (``capacity_bytes``) — an edge box holds a few GB of
+  executable/staging memory, and a handful of large-model programs can
+  exhaust it long before the entry count does.  Fingerprints can be
+  **pinned** (per-model residency guarantees for paying tenants); pinning a
+  fingerprint also protects its derived entries (``fp|plan`` segmented
+  programs, ``fp#vmap<n>`` batched executables).
 
 The cache stores only *programs* (pure functions of the recorded payloads);
 per-client address bindings live in each client's
@@ -49,6 +54,7 @@ class CacheStats:
     misses: int = 0
     insertions: int = 0
     evictions: int = 0
+    bytes_evicted: float = 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -56,14 +62,44 @@ class CacheStats:
         return self.hits / total if total else 0.0
 
 
-class ReplayCache:
-    """LRU map: IOS fingerprint -> compiled :class:`ReplayProgram`."""
+# executables whose size the program cannot report are assumed mid-sized so
+# they still participate in byte-aware eviction
+DEFAULT_PROGRAM_NBYTES = 1 << 20
 
-    def __init__(self, capacity: int = 8):
+
+def program_nbytes(program: Any) -> int:
+    """Byte-footprint estimate of a cached executable (compiled machine code
+    + output staging buffers); programs expose ``nbytes_estimate``."""
+    return int(getattr(program, "nbytes_estimate", DEFAULT_PROGRAM_NBYTES))
+
+
+def base_fingerprint(key: str) -> str:
+    """Collapse a derived cache key (``fp|plan`` segmented program,
+    ``fp#vmap<n>`` batched executable) to the IOS fingerprint that owns it."""
+    return key.split("|", 1)[0].split("#", 1)[0]
+
+
+class ReplayCache:
+    """LRU map: IOS fingerprint -> compiled :class:`ReplayProgram`.
+
+    Eviction is size-aware: each entry carries a compiled-executable byte
+    estimate, and inserts evict least-recently-used *unpinned* entries while
+    either the entry count exceeds ``capacity`` or the byte total exceeds
+    ``capacity_bytes`` (when set).  ``pin()`` grants a fingerprint — and
+    every entry derived from it — residency."""
+
+    def __init__(self, capacity: int = 8, capacity_bytes: Optional[float] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise ValueError(
+                f"capacity_bytes must be positive, got {capacity_bytes}"
+            )
         self.capacity = capacity
+        self.capacity_bytes = capacity_bytes
         self._entries: "OrderedDict[str, ReplayProgram]" = OrderedDict()
+        self._nbytes: Dict[str, int] = {}
+        self._pinned: set = set()
         # fingerprints known from a persisted cache file but whose programs
         # have not been recompiled since the restart: metadata only
         self._known: Dict[str, Dict[str, Any]] = {}
@@ -94,10 +130,81 @@ class ReplayCache:
         if fingerprint in self._entries:
             self._entries.move_to_end(fingerprint)
         self._entries[fingerprint] = program
+        self._nbytes[fingerprint] = program_nbytes(program)
         self.stats.insertions += 1
-        while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+        self._evict(keep=fingerprint)
+
+    def _over_budget(self) -> bool:
+        if len(self._entries) > self.capacity:
+            return True
+        return (
+            self.capacity_bytes is not None
+            and self.bytes_total > self.capacity_bytes
+        )
+
+    def _evict(self, keep: str) -> None:
+        """Evict LRU-first until within the entry *and* byte budgets.  Pinned
+        entries are never evicted.  Derived ``#vmap`` batched executables are
+        evicted *before* any base program (they are cheap rebuilds; losing a
+        base forces a recompile AND breaks program-identity sharing for
+        in-flight bindings), and evicting a base purges its derived entries.
+        The just-inserted entry goes last — but when every other resident
+        entry is pinned, admission control evicts it too (unless it is the
+        only entry: a single program larger than the whole byte budget stays
+        resident rather than thrashing)."""
+
+        def pop(victim: str) -> None:
+            self._entries.pop(victim)
             self.stats.evictions += 1
+            self.stats.bytes_evicted += self._nbytes.pop(victim, 0)
+
+        while self._over_budget():
+            candidates = [
+                fp
+                for fp in self._entries
+                if fp != keep and not self.is_pinned(fp)
+            ]
+            victim = next(
+                (fp for fp in candidates if "#" in fp),
+                None,
+            ) or next(iter(candidates), None)
+            if victim is None:
+                if (
+                    keep in self._entries
+                    and len(self._entries) > 1
+                    and not self.is_pinned(keep)
+                ):
+                    pop(keep)
+                return
+            pop(victim)
+            if "#" not in victim:
+                # the base program is gone: its batched derivatives hold a
+                # reference to a dead executable — purge them
+                for fp in [
+                    k for k in self._entries if k.startswith(victim + "#")
+                ]:
+                    pop(fp)
+
+    # -- pinning & sizes ------------------------------------------------
+    def pin(self, fingerprint: str) -> None:
+        """Grant ``fingerprint`` (and its derived plan/vmap entries)
+        residency: size-aware eviction skips them."""
+        self._pinned.add(fingerprint)
+
+    def unpin(self, fingerprint: str) -> None:
+        self._pinned.discard(fingerprint)
+        self._evict(keep="")
+
+    def is_pinned(self, key: str) -> bool:
+        return base_fingerprint(key) in self._pinned
+
+    @property
+    def bytes_total(self) -> int:
+        """Byte estimate of every resident compiled executable."""
+        return sum(self._nbytes.get(fp, 0) for fp in self._entries)
+
+    def entry_nbytes(self, key: str) -> Optional[int]:
+        return self._nbytes.get(key) if key in self._entries else None
 
     @property
     def fingerprints(self):
@@ -130,12 +237,24 @@ class ReplayCache:
         sig = getattr(plan, "signature", None)
         if callable(sig):
             meta["plan"] = sig()
+        carried = getattr(program, "carried_pairs", None)
+        if carried:
+            # donation binding: a restarted server rebuilds the executable
+            # *stateful*, not as a prefix-recomputing stateless replay
+            meta["carried_pairs"] = [[int(i), int(j)] for i, j in carried]
         return meta
 
     def save(self, path: str) -> int:
         """Write fingerprint -> IOS metadata for every entry (compiled or
-        still-persisted); returns the number of fingerprints written."""
-        entries = {fp: self._describe(p) for fp, p in self._entries.items()}
+        still-persisted); returns the number of fingerprints written.
+
+        Derived ``#vmap`` batched executables are skipped: they are rebuilt
+        from the base program on demand and carry no validation state."""
+        entries = {
+            fp: self._describe(p)
+            for fp, p in self._entries.items()
+            if "#" not in fp
+        }
         for fp, meta in self._known.items():
             entries.setdefault(fp, meta)
         payload = {"version": PERSIST_VERSION, "fingerprints": entries}

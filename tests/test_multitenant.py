@@ -139,6 +139,52 @@ class TestCacheAdoption:
         assert edge.batcher.batches_executed >= 1
         assert max(edge.batcher.batch_sizes) == 3
 
+    def test_vmap_batch_bitwise_equals_loop(self):
+        """Shared-param co-tenants execute as one true vmap-batched call;
+        the outputs must be bitwise identical to the per-client loop."""
+        model, _ = make_mlp()
+        rng = np.random.default_rng(5)
+        per_client = {f"c{i}": rng.normal(0, 1, (2, 16)).astype(np.float32)
+                      for i in range(3)}
+
+        def run(enable_vmap):
+            edge = RRTOEdgeServer(execute=True)
+            edge.batcher.enable_vmap = enable_vmap
+            for _ in range(3):
+                edge.connect(model)
+            for _ in range(5):
+                results = edge.run_round(
+                    {c: (x,) for c, x in per_client.items()}
+                )
+            return results, edge
+
+        vmapped, edge_v = run(True)
+        looped, edge_l = run(False)
+        assert edge_v.batcher.vmap_batches >= 1
+        assert edge_l.batcher.vmap_batches == 0
+        for c in per_client:
+            np.testing.assert_array_equal(
+                np.asarray(vmapped[c].outputs[0]),
+                np.asarray(looped[c].outputs[0]),
+            )
+
+    def test_vmap_disabled_falls_back_to_loop(self):
+        model, x = make_mlp()
+        edge = RRTOEdgeServer(execute=True)
+        edge.batcher.enable_vmap = False
+        for _ in range(3):
+            edge.connect(model)
+        ids = list(edge.sessions)
+        for _ in range(5):
+            results = edge.run_round({c: (x,) for c in ids})
+        assert edge.batcher.vmap_batches == 0
+        assert edge.batcher.batches_executed >= 1
+        ref = np.asarray(jax.jit(model.apply)(model.params, x)[0])
+        for r in results.values():
+            np.testing.assert_allclose(
+                np.asarray(r.outputs[0]), ref, rtol=1e-5, atol=1e-5
+            )
+
     def test_per_client_params_isolated(self):
         """Clients with the same architecture but different weights share one
         compiled program yet keep their own parameter memory."""

@@ -26,6 +26,9 @@ def generated():
 
 class TestRRTOServing:
     def test_tokens_identical(self, generated):
+        """The fast path (stateful, donation-aware replay) is token-for-token
+        equal with LocalServing — the KV cache advancing server-side inside
+        the donated step executable computes exactly the local decode loop."""
         r_local, r_srv, _ = generated
         np.testing.assert_array_equal(r_srv.tokens, r_local.tokens)
 
@@ -33,13 +36,43 @@ class TestRRTOServing:
         _, _, served = generated
         hist = served.session.history
         assert hist[0].rpcs > 100          # recording: per-operator RPCs
-        assert hist[-1].rpcs <= 3          # replaying: input + output only
+        assert hist[-1].rpcs <= 3          # replaying: token/pos up, token down
         assert served.session.client.mode == "replaying"
 
     def test_replay_speedup(self, generated):
         _, _, served = generated
         hist = served.session.history
         assert hist[-1].wall_seconds < hist[0].wall_seconds / 5
+
+    def test_stateful_replay_is_o1(self, generated):
+        """The replayed decode step never ships or recomputes the prefix:
+        the KV cache is loop-carried (detected + donated), steady per-token
+        wire bytes exclude it, and per-token replay compute is the intrinsic
+        step cost, orders below the full-prefix forward."""
+        _, _, served = generated
+        client = served.session.client
+        assert client.stateful_replay
+        assert len(client.ios.carried_pairs) >= 1
+        program = served.session.server.context(client.client_id).replay.program
+        assert program.is_stateful and program.step_fn is not None
+        cache_bytes = sum(
+            np.asarray(leaf).nbytes for leaf in served._cache_leaves
+        )
+        steady = [r for r in served.session.history if r.mode == "replaying"][1:]
+        assert steady and all(r.network_bytes < cache_bytes for r in steady)
+
+    def test_legacy_stateless_mode_matches(self):
+        """The seed prefix-recompute formulation is still available and still
+        exact — it is the benchmark baseline for decode_scaling."""
+        prompt = np.random.default_rng(0).integers(0, 256, (1, 8)).astype(np.int32)
+        local = LocalServing(CFG, seed=3)
+        r_local = local.generate({"tokens": prompt}, max_new_tokens=6)
+        served = RRTOServedLM(
+            CFG, bucket_len=32, batch=1, seed=3, min_repeats=3, stateful=False
+        )
+        r_srv = served.generate(prompt, max_new_tokens=6)
+        np.testing.assert_array_equal(r_srv.tokens, r_local.tokens)
+        assert not served.session.client.stateful_replay
 
     def test_cricket_served_stays_slow(self):
         prompt = np.random.default_rng(0).integers(0, 256, (1, 8)).astype(np.int32)

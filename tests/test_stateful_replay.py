@@ -1,0 +1,520 @@
+"""Stateful replay: loop-carried tensor detection, donation-aware replay
+executables (state server-resident, off the wire), O(1) decode-step serving,
+fallback state materialization, carried-aware partition accounting, and
+persistence of the donation binding across server restarts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import OffloadableModel, OffloadSession
+from repro.core.opseq import detect_loop_carried
+from repro.serving.multitenant import RRTOEdgeServer
+from repro.serving.replay_cache import ReplayCache
+
+
+def make_rnn(seed=0, d=8, batch=2):
+    """A recurrent app threading explicit state: apply(p, x, state) ->
+    [y, new_state] — the minimal loop-carried shape."""
+    rng = np.random.default_rng(seed)
+    params = {"w": rng.normal(0, 0.1, (d, d)).astype(np.float32)}
+
+    def apply(p, x, state):
+        new_state = jnp.tanh(state @ p["w"] + x)
+        return [new_state.sum(axis=1), new_state]
+
+    x = rng.normal(0, 1, (batch, d)).astype(np.float32)
+    state0 = np.zeros((batch, d), np.float32)
+    return OffloadableModel(f"rnn{seed}", apply, params, (x, state0)), x, state0
+
+
+def drive(sess, x, state, steps):
+    """Thread the state through ``steps`` inferences; returns history of
+    (result, state-as-returned)."""
+    hist = []
+    for _ in range(steps):
+        res = sess.infer(x, state)
+        state = res.outputs[1]
+        hist.append(res)
+    return hist, state
+
+
+def reference_trajectory(model, x, state0, steps):
+    f = jax.jit(model.apply)
+    state = jnp.asarray(state0)
+    ys = []
+    for _ in range(steps):
+        y, state = f(model.params, x, state)
+        ys.append(np.asarray(y))
+    return ys
+
+
+class TestCarriedDetection:
+    def test_detects_state_pair(self):
+        model, x, state0 = make_rnn()
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        drive(sess, x, state0, 4)
+        ios = sess.client.ios
+        assert ios is not None
+        assert ios.carried_pairs == ((1, 1),)
+        # replay RPCs drop to wire-only traffic
+        assert ios.num_rpcs_replayed == 2
+
+    def test_stateless_app_detects_nothing(self):
+        rng = np.random.default_rng(0)
+        params = {"w": rng.normal(0, 0.1, (8, 8)).astype(np.float32)}
+        model = OffloadableModel(
+            "mlp",
+            lambda p, x: [jnp.tanh(x @ p["w"])],
+            params,
+            (rng.normal(0, 1, (2, 8)).astype(np.float32),),
+        )
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        x = np.asarray(model.example_inputs[0])
+        for _ in range(5):
+            sess.infer(x)
+        ios = sess.client.ios
+        assert ios is not None and ios.carried_pairs == ()
+
+    def test_single_round_log_detects_nothing(self):
+        """A one-round log (cache adoption) cannot detect pairs itself."""
+        model, x, state0 = make_rnn()
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        drive(sess, x, state0, 4)
+        ios = sess.client.ios
+        one_round = list(
+            sess.client.calls[ios.start_index : ios.start_index + len(ios)]
+        )
+        import dataclasses
+
+        solo = dataclasses.replace(ios, start_index=0, carried_pairs=())
+        assert detect_loop_carried(one_round, solo) == ()
+
+
+class TestStatefulReplayExecution:
+    def test_outputs_track_reference(self):
+        """Server-resident state advances correctly even though the app only
+        threads opaque handles once replay starts."""
+        model, x, state0 = make_rnn()
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        steps = 10
+        hist, _ = drive(sess, x, state0, steps)
+        refs = reference_trajectory(model, x, state0, steps)
+        for res, ref in zip(hist, refs):
+            np.testing.assert_allclose(
+                np.asarray(res.outputs[0]), ref, rtol=1e-6, atol=1e-6
+            )
+        assert hist[-1].mode == "replaying"
+
+    def test_state_never_crosses_after_handoff(self):
+        """Steady-state replay ships only the wire input/output: the carried
+        state contributes zero network bytes and zero RPCs."""
+        model, x, state0 = make_rnn(d=64)
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        hist, _ = drive(sess, x, state0, 10)
+        replaying = [r for r in hist if r.mode == "replaying"]
+        first, steady = replaying[0], replaying[1:]
+        assert steady, "never reached steady replay"
+        state_bytes = np.asarray(state0).nbytes
+        for r in steady:
+            assert r.rpcs == 2  # x upload + y download only
+            # vs the handoff round (which shipped the state once): at least
+            # the state bytes vanished from the wire
+            assert r.network_bytes <= first.network_bytes - state_bytes
+
+    def test_fresh_state_reships_once(self):
+        """Supplying genuinely new state (not the threaded handle) pays one
+        upload and overwrites the server-resident state — the app can reset
+        its sequence mid-session."""
+        model, x, state0 = make_rnn()
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        hist, _ = drive(sess, x, state0, 8)
+        steady_rpcs = hist[-1].rpcs
+        # reset: feed a brand-new state array
+        fresh = np.full_like(state0, 0.25)
+        res = sess.infer(x, fresh)
+        assert res.rpcs == steady_rpcs + 1  # the one-time state upload
+        ref_y, _ = jax.jit(model.apply)(model.params, x, jnp.asarray(fresh))
+        np.testing.assert_allclose(
+            np.asarray(res.outputs[0]), np.asarray(ref_y),
+            rtol=1e-6, atol=1e-6,
+        )
+
+    def test_multitenant_stateful_batched(self):
+        """Co-tenant recurrent apps replay as one vmap-batched stateful step;
+        per-client state trajectories stay isolated and correct."""
+        model, x, state0 = make_rnn()
+        edge = RRTOEdgeServer(execute=True)
+        n = 3
+        for _ in range(n):
+            edge.connect(model)
+        ids = list(edge.sessions)
+        rng = np.random.default_rng(7)
+        xs = {c: rng.normal(0, 1, x.shape).astype(np.float32) for c in ids}
+        states = {c: state0 for c in ids}
+        rounds = 8
+        for _ in range(rounds):
+            results = edge.run_round(
+                {c: (xs[c], states[c]) for c in ids}
+            )
+            for c in ids:
+                states[c] = results[c].outputs[1]
+        f = jax.jit(model.apply)
+        for c in ids:
+            state = jnp.asarray(state0)
+            for _ in range(rounds):
+                y, state = f(model.params, xs[c], state)
+            np.testing.assert_allclose(
+                np.asarray(results[c].outputs[0]), np.asarray(y),
+                rtol=1e-6, atol=1e-6,
+            )
+        assert edge.batcher.vmap_batches >= 1
+        assert edge.compile_count == 1
+
+
+class TestPayloadRetention:
+    def test_searchless_client_drops_old_payloads(self):
+        """A client that never locks an IOS (cricket: no search) must not pin
+        every transferred tensor forever — payloads are kept only on the
+        trailing detection horizon."""
+        from repro.core.engine import PAYLOAD_RETENTION_CALLS
+
+        rng = np.random.default_rng(0)
+        params = {"w": rng.normal(0, 0.1, (8, 8)).astype(np.float32)}
+        model = OffloadableModel(
+            "mlp",
+            lambda p, x: [jnp.tanh(x @ p["w"])],
+            params,
+            (rng.normal(0, 1, (2, 8)).astype(np.float32),),
+        )
+        sess = OffloadSession(model, "cricket", execute=False)
+        sess.load()
+        x = np.asarray(model.example_inputs[0])
+        while len(sess.client.calls) <= PAYLOAD_RETENTION_CALLS + 100:
+            sess.infer(x)
+        calls = sess.client.calls
+        old = calls[: len(calls) - PAYLOAD_RETENTION_CALLS - 1]
+        assert all(
+            c.h2d_value is None and c.d2h_value is None for c in old
+        )
+        # recent payloads (the detection horizon) are still live
+        assert any(
+            c.h2d_value is not None
+            for c in calls[-PAYLOAD_RETENTION_CALLS:]
+        )
+
+    def test_detection_survives_in_place_mutation(self):
+        """An app that mutates a downloaded output in place before
+        re-uploading it must NOT be classified loop-carried (the recorded
+        download is a snapshot, not an alias)."""
+        rng = np.random.default_rng(0)
+        params = {"w": rng.normal(0, 0.1, (8, 8)).astype(np.float32)}
+
+        def apply(p, x, state):
+            return [x @ p["w"] + state]
+
+        x = rng.normal(0, 1, (2, 8)).astype(np.float32)
+        state0 = np.zeros((2, 8), np.float32)
+        model = OffloadableModel("mut", apply, params, (x, state0))
+        # execute=False returns writable buffers, letting the app mutate the
+        # very array the recorder would otherwise have aliased
+        sess = OffloadSession(model, "rrto", min_repeats=3, execute=False)
+        sess.load()
+        state = state0
+        for _ in range(6):
+            res = sess.infer(x, state)
+            out = np.asarray(res.outputs[0])
+            out += 1.0          # in-place post-processing by the app
+            state = out         # re-upload the mutated buffer
+        ios = sess.client.ios
+        assert ios is not None
+        assert ios.carried_pairs == ()  # mutated: genuinely new state
+
+
+class TestFallbackMaterialization:
+    def test_dam_deviation_downloads_state(self):
+        """Deviating from a stateful IOS (shape change) downloads the real
+        carried state for catch-up and keeps results correct afterwards."""
+        model, x, state0 = make_rnn()
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        hist, state = drive(sess, x, state0, 8)
+        assert hist[-1].mode == "replaying"
+        client = sess.client
+        assert client.fallbacks == 0
+        # the app's held handle must now be materializable: deviate by
+        # running one inference whose INPUT value is fine but force a
+        # mid-walk deviation via a different x shape? shapes are fixed by
+        # the jaxpr — instead check the materializer directly
+        bound = sess.server.context(client.client_id).replay
+        ref_state = np.asarray(bound.carried_state[0])
+        # the handle the app holds is stale; materialization must fetch the
+        # live value
+        ph = client._carried_placeholders[0]
+        assert not np.array_equal(ph, ref_state)
+        client._replay_prefix = [
+            c for c in client._ios_calls if c.record.func == "cudaMemcpyHtoD"
+        ]
+        # point the prefix handles at what the app would actually resend
+        client._replay_prefix[1].h2d_value = ph
+        rpcs_before = client.stats.rpcs
+        client._materialize_carried_prefix()
+        assert client.stats.rpcs == rpcs_before + 1
+        np.testing.assert_array_equal(
+            np.asarray(client._replay_prefix[1].h2d_value), ref_state
+        )
+        # the app-held handle was updated in place
+        np.testing.assert_array_equal(ph, ref_state)
+
+
+class TestPartitionCarriedAccounting:
+    def test_carried_excluded_from_cut_costs(self):
+        from repro.partition.segments import SegmentGraph
+
+        model, x, state0 = make_rnn()
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        drive(sess, x, state0, 4)
+        client = sess.client
+        calls = client._ios_calls
+        plain = SegmentGraph(calls)
+        carried = SegmentGraph(
+            calls, carried_input_ordinals=[i for i, _ in client.ios.carried_pairs]
+        )
+        assert carried.carried_tids
+        # every boundary's live (wire-crossing) volume shrinks by at least
+        # the carried state bytes wherever the state was live
+        state_bytes = np.asarray(state0).nbytes
+        lp, lc = plain.live_bytes(), carried.live_bytes()
+        assert any(a - b >= state_bytes for a, b in zip(lp, lc))
+        assert all(a >= b for a, b in zip(lp, lc))
+
+    def test_stateful_client_skips_partition(self):
+        from repro.partition.planner import PartitionConfig
+
+        model, x, state0 = make_rnn()
+        sess = OffloadSession(
+            model, "rrto", min_repeats=3, partition=PartitionConfig()
+        )
+        sess.load()
+        hist, _ = drive(sess, x, state0, 8)
+        assert hist[-1].mode == "replaying"
+        assert sess.client.split_plan is None
+        assert sess.client.replanner is None
+
+
+class TestStatefulPersistence:
+    def test_restart_rebuilds_donation_binding(self, tmp_path):
+        """Save/load roundtrip with a stateful entry: the restarted server
+        skips re-validation AND rebuilds the executable stateful (carried
+        pairs recovered from metadata), so the adopting client immediately
+        replays O(1) with the state off the wire."""
+        model, x, state0 = make_rnn()
+        warm = RRTOEdgeServer(execute=True)
+        warm.connect(model)
+        state = state0
+        for _ in range(5):
+            res = warm.run_round({"c0": (x, state)})["c0"]
+            state = res.outputs[1]
+        fp = warm.cache.fingerprints[0]
+        meta_path = str(tmp_path / "cache.json")
+        warm.save_cache(meta_path)
+
+        cold = RRTOEdgeServer(execute=True)
+        cold.load_cache(meta_path)
+        meta = cold.cache.known_metadata(fp)
+        assert meta["carried_pairs"] == [[1, 1]]
+
+        sess = cold.connect(model)
+        state = state0
+        hist = []
+        for _ in range(6):
+            res = cold.run_round({"c0": (x, state)})["c0"]
+            state = res.outputs[1]
+            hist.append(res)
+        client = sess.client
+        assert client.cache_adopted
+        assert sum(1 for r in hist if r.mode == "recording") == 1
+        program = cold.server.context("c0").replay.program
+        assert program.is_stateful and program.carried_pairs == ((1, 1),)
+        # steady state: wire-only RPCs, correct values
+        assert hist[-1].rpcs == 2
+        refs = reference_trajectory(model, x, state0, 6)
+        np.testing.assert_allclose(
+            np.asarray(hist[-1].outputs[0]), refs[-1], rtol=1e-6, atol=1e-6
+        )
+
+    def test_segmented_and_stateful_entries_roundtrip(self, tmp_path):
+        """The cache file carries both a segmented (fingerprint|plan) entry
+        and a stateful entry; both identities survive the restart."""
+        from repro.core.offload import OffloadSession
+        from repro.partition.planner import PartitionConfig
+
+        # a stateless model forced through a split plan -> segmented entry
+        rng = np.random.default_rng(3)
+        params = {
+            "w1": rng.normal(0, 0.1, (64, 64)).astype(np.float32),
+            "w2": rng.normal(0, 0.1, (64, 64)).astype(np.float32),
+        }
+
+        def apply(p, xx):
+            h = jnp.tanh(xx @ p["w1"])
+            return [jnp.tanh(h @ p["w2"])]
+
+        xx = rng.normal(0, 1, (4, 64)).astype(np.float32)
+        split_model = OffloadableModel("mlp", apply, params, (xx,))
+
+        edge = RRTOEdgeServer(execute=True, environment="outdoor")
+        sess = edge.connect(
+            split_model, min_repeats=3, partition=PartitionConfig()
+        )
+        for _ in range(6):
+            edge.run_round({"c0": (xx,)})
+        # a stateful tenant on the same box
+        rnn_model, x, state0 = make_rnn()
+        sess2 = edge.connect(rnn_model, min_repeats=3)
+        state = state0
+        for _ in range(5):
+            res = edge.run_round({"c1": (x, state)})["c1"]
+            state = res.outputs[1]
+
+        path = str(tmp_path / "cache.json")
+        n = edge.save_cache(path)
+        assert n == len(edge.cache)
+        keys = edge.cache.fingerprints
+        assert not any("#" in k for k in keys)  # no derived vmap entries
+
+        fresh = ReplayCache()
+        assert fresh.load(path) == n
+        segmented = [
+            k for k in fresh.persisted_fingerprints if "|" in k
+        ]
+        stateful = [
+            k
+            for k in fresh.persisted_fingerprints
+            if fresh.known_metadata(k).get("carried_pairs")
+        ]
+        if sess.client.split_plan is not None:
+            assert segmented, "split plan produced no segmented entry"
+            assert "plan" in fresh.known_metadata(segmented[0])
+        assert stateful and fresh.known_metadata(stateful[0])[
+            "carried_pairs"
+        ] == [[1, 1]]
+        assert sess2.client.stateful_replay
+
+
+class TestSizeAwareCache:
+    class _P:
+        def __init__(self, nbytes):
+            self.nbytes_estimate = nbytes
+
+    def test_evicts_by_bytes(self):
+        cache = ReplayCache(capacity=8, capacity_bytes=1000)
+        cache.put("a", self._P(400))
+        cache.put("b", self._P(400))
+        assert cache.bytes_total == 800
+        cache.put("c", self._P(400))     # 1200 > 1000 -> evict LRU (a)
+        assert "a" not in cache and "b" in cache and "c" in cache
+        assert cache.stats.evictions == 1
+        assert cache.stats.bytes_evicted == 400
+
+    def test_pinned_entries_survive(self):
+        cache = ReplayCache(capacity=8, capacity_bytes=1000)
+        cache.put("a", self._P(400))
+        cache.pin("a")
+        cache.put("b", self._P(400))
+        cache.put("c", self._P(400))     # must evict b, not pinned a
+        assert "a" in cache and "b" not in cache and "c" in cache
+
+    def test_pin_covers_derived_entries(self):
+        cache = ReplayCache(capacity=8, capacity_bytes=1000)
+        cache.pin("fp")
+        cache.put("fp", self._P(300))
+        cache.put("fp|D0:1|S1:4", self._P(300))
+        cache.put("fp#vmap4", self._P(300))
+        cache.put("other", self._P(300))   # over budget: only victim
+        assert "other" not in cache
+        assert all(
+            k in cache for k in ("fp", "fp|D0:1|S1:4", "fp#vmap4")
+        )
+
+    def test_unpin_reenables_eviction(self):
+        cache = ReplayCache(capacity=8, capacity_bytes=500)
+        cache.pin("a")
+        cache.put("a", self._P(400))
+        cache.put("b", self._P(400))     # denied: everything else is pinned
+        assert "a" in cache and "b" not in cache
+        cache.unpin("a")
+        cache.put("b", self._P(400))     # now a is fair game
+        assert "b" in cache and "a" not in cache
+
+    def test_oversized_entry_stays_alone(self):
+        cache = ReplayCache(capacity=8, capacity_bytes=100)
+        cache.put("big", self._P(5000))
+        assert "big" in cache            # never evict the sole entry
+
+    def test_entry_count_capacity_still_applies(self):
+        cache = ReplayCache(capacity=2)
+        for k in "abc":
+            cache.put(k, self._P(10))
+        assert "a" not in cache and len(cache) == 2
+
+    def test_derived_vmap_entries_never_evict_base_programs(self):
+        """Per-width batched executables pile up (stateful lockstep shrinks
+        the width as clients finish); they must be evicted before any base
+        program or an adopting client would recompile and break
+        program-identity sharing."""
+        cache = ReplayCache(capacity=4)
+        cache.put("fpA", self._P(10))
+        cache.put("fpB", self._P(10))
+        for w in (2, 3, 4):
+            cache.put(f"fpA#vmap{w}", self._P(10))   # over entry capacity
+        assert "fpA" in cache and "fpB" in cache     # bases survived
+        assert sum(1 for k in cache.fingerprints if "#" in k) == 2
+
+    def test_evicting_base_purges_its_derived_entries(self):
+        cache = ReplayCache(capacity=8, capacity_bytes=100)
+        cache.put("fpA", self._P(40))
+        cache.put("fpA#vmap2", self._P(10))
+        cache.put("fpB", self._P(80))   # evicts vmap first, then fpA
+        assert "fpA" not in cache and "fpA#vmap2" not in cache
+        assert "fpB" in cache
+
+
+class TestBatcherInputDigest:
+    def test_mixed_shape_cotenants_fall_to_solo(self):
+        """A submission whose inputs mismatch its preload (shape drift mid
+        window) is rejected by the cheap digest compare and replays solo —
+        regression for the full-array-compare-per-submit hot path."""
+        from repro.serving.multitenant import _BatchGroup, _inputs_equal
+
+        a = [np.zeros((2, 8), np.float32)]
+        b = [np.zeros((4, 8), np.float32)]
+        assert not _inputs_equal(a, b)
+        assert _inputs_equal(a, [np.zeros((2, 8), np.float32)])
+        group = _BatchGroup(done_at=0.0, pending={"c0": a})
+        assert not group.claim("c0", b)
+        assert not group.claim("c0", b)  # popped: second claim is a miss
+
+    def test_digest_short_circuits_value_compare(self, monkeypatch):
+        import repro.serving.multitenant as mt
+
+        calls = {"n": 0}
+        real = np.array_equal
+
+        def counting(x, y):
+            calls["n"] += 1
+            return real(x, y)
+
+        monkeypatch.setattr(mt.np, "array_equal", counting)
+        a = [np.zeros((2, 8), np.float32)]
+        b = [np.zeros((4, 8), np.float32)]
+        assert not mt._inputs_equal(a, b)
+        assert calls["n"] == 0           # digest rejected before any compare
