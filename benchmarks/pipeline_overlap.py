@@ -1,0 +1,162 @@
+"""Pipeline overlap sweep — steady-state pipelined split replay vs the
+sequential split path, across a bandwidth sweep.
+
+The sequential split path executes each inference's device segments, uplink,
+server segments and downlink end-to-end before the next inference begins, so
+its steady-state per-inference latency is the *sum* of the stage times.  The
+pipelined path (``repro.partition.pipeline`` + the event-driven scheduler)
+overlaps consecutive inferences — while the server runs inference *i*'s
+server segments, the device computes inference *i+1*'s and streams its cut —
+collapsing the steady-state interval toward the *max* stage time
+(``max(device, link, server)``).
+
+Per bandwidth point this benchmark:
+
+* plans the cut twice — one-shot latency objective (the PR-2 planner) and
+  the pipeline-aware throughput objective — and records both;
+* measures the sequential reference as the latency plan's modeled one-shot
+  schedule (``compute_schedule``, the timing the engine actually executes);
+* measures the pipelined steady state by *event-driven simulation*: an
+  open-loop periodic arrival stream slightly above the analytic bottleneck
+  rate, steady period = mean inter-completion interval over the tail.
+
+Guards (the ``--smoke`` gate):
+
+* ``interior_overlap``: pipelined steady-state per-inference latency is
+  <= 0.8x the sequential split latency at >= 3 interior sweep points;
+* ``throughput_planner_dominates``: the throughput-objective plan's period
+  is never worse than the latency-objective plan's period (same candidate
+  set, scored under the stream objective);
+* ``queue_bounded_at_period``: driving exactly at the measured steady
+  period keeps the queue bounded (the pipeline is actually sustainable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+SWEEP_MBPS = (8.0, 48.0, 96.0, 128.0, 192.0, 384.0)
+MBPS = 1e6 / 8.0
+N_INFER = 32          # simulated stream length per point
+OVERDRIVE = 0.95      # arrival period as a fraction of the analytic period
+
+
+@dataclasses.dataclass
+class OverlapRow:
+    bandwidth_mbps: float
+    sequential_s: float          # one-shot split latency (latency plan)
+    pipelined_period_s: float    # measured steady inter-completion interval
+    analytic_period_s: float     # throughput plan's modeled period
+    latency_plan_period_s: float
+    tp_plan_signature: str
+    lat_plan_signature: str
+    bottleneck: str
+    max_queue_depth: int
+    overlap_ratio: float         # pipelined / sequential
+
+
+def run(
+    sweep_mbps: Tuple[float, ...] = SWEEP_MBPS,
+    model=None,
+    n_infer: int = N_INFER,
+) -> Tuple[List[OverlapRow], Dict[str, bool]]:
+    from benchmarks.partition_sweep import record_graph
+    from repro.partition import (
+        PartitionConfig,
+        pipeline_schedule,
+        plan_partition,
+        simulate_pipeline,
+        stage_chain,
+    )
+    from repro.partition.segments import ConstantLink
+
+    graph, device, server, model = record_graph(model)
+    wire_div = model.input_wire_divisor
+    tp_cfg = PartitionConfig(objective="throughput")
+
+    rows: List[OverlapRow] = []
+    queue_bounded = True
+    for mbps in sweep_mbps:
+        bw = mbps * MBPS
+        link = ConstantLink(bw, input_wire_divisor=wire_div)
+        lat = plan_partition(
+            graph, device, server, bw, input_wire_divisor=wire_div
+        )
+        tp = plan_partition(
+            graph, device, server, bw, input_wire_divisor=wire_div,
+            config=tp_cfg,
+        )
+        chain = stage_chain(
+            graph, tp.plan, device, server, input_wire_divisor=wire_div
+        )
+        pipe = pipeline_schedule(
+            graph, tp.plan, device, server, link, input_wire_divisor=wire_div
+        )
+        # open-loop periodic stream slightly above the bottleneck rate: the
+        # measured tail inter-completion interval is the service capacity
+        arrivals = [k * pipe.period_seconds * OVERDRIVE for k in range(n_infer)]
+        sim = simulate_pipeline(chain, link, arrivals)
+        period = sim.steady_period()
+        # sustainability probe: driven at the measured period, the queue must
+        # not grow without bound
+        probe = simulate_pipeline(
+            chain, link, [k * period for k in range(n_infer)]
+        )
+        queue_bounded = queue_bounded and probe.max_queue_depth <= 4
+        rows.append(
+            OverlapRow(
+                bandwidth_mbps=mbps,
+                sequential_s=lat.seconds,
+                pipelined_period_s=period,
+                analytic_period_s=tp.period_seconds,
+                latency_plan_period_s=lat.period_seconds,
+                tp_plan_signature=tp.plan.signature(),
+                lat_plan_signature=lat.plan.signature(),
+                bottleneck=pipe.bottleneck,
+                max_queue_depth=sim.max_queue_depth,
+                overlap_ratio=period / lat.seconds,
+            )
+        )
+
+    interior = rows[1:-1]
+    eps = 1e-12
+    checks = {
+        "interior_overlap": (
+            sum(1 for r in interior if r.overlap_ratio <= 0.8) >= 3
+        ),
+        "throughput_planner_dominates": all(
+            r.analytic_period_s <= r.latency_plan_period_s + eps for r in rows
+        ),
+        "queue_bounded_at_period": queue_bounded,
+    }
+    return rows, checks
+
+
+def main(sweep_mbps: Optional[Tuple[float, ...]] = None):
+    rows, checks = run(sweep_mbps or SWEEP_MBPS)
+    print(
+        f"{'bw (Mbps)':>10s} {'sequential':>11s} {'pipelined':>10s} "
+        f"{'ratio':>6s} {'bneck':>7s} {'maxQ':>5s}  plan"
+    )
+    for r in rows:
+        print(
+            f"{r.bandwidth_mbps:10.1f} {r.sequential_s * 1e3:9.2f}ms "
+            f"{r.pipelined_period_s * 1e3:8.2f}ms {r.overlap_ratio:6.3f} "
+            f"{r.bottleneck:>7s} {r.max_queue_depth:5d}  "
+            f"{r.tp_plan_signature[:40]}"
+        )
+    print()
+    for name, ok in checks.items():
+        print(f"{name}: {'OK' if ok else 'FAILED'}")
+    if not all(checks.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

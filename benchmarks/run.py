@@ -16,37 +16,107 @@ sys.path.insert(0, _ROOT)
 
 def smoke() -> None:
     """Tiny-config smoke run for CI: exercises session recording, the IOS
-    search, the split planner, stateful replay and the benchmark plumbing in
-    a couple of minutes, failing loudly if any modeled invariant breaks."""
-    from benchmarks import decode_scaling, partition_sweep, tab4_rpc_gpu_util
+    search, the split planner, stateful replay, pipelined split replay and
+    the benchmark plumbing in a couple of minutes.
+
+    Every benchmark's guards are evaluated even when an earlier one trips —
+    the run ends with a per-benchmark summary naming exactly which guard
+    failed where, instead of dying on the first assert."""
+    from benchmarks import (
+        decode_scaling,
+        partition_sweep,
+        pipeline_overlap,
+        tab4_rpc_gpu_util,
+    )
+
+    failures: list = []        # (benchmark, guard, detail)
+    csv_rows: list = []
+
+    def record(benchmark: str, checks: dict, detail: str = "") -> None:
+        for guard, ok in checks.items():
+            if not ok:
+                failures.append((benchmark, guard, detail))
 
     print("== partition_sweep (smoke) ==", file=sys.stderr, flush=True)
-    rows, checks = partition_sweep.run()
-    assert all(checks.values()), f"partition sweep checks failed: {checks}"
+    try:
+        rows, checks = partition_sweep.run()
+        record("partition_sweep", checks)
+        interior = rows[len(rows) // 2]
+        csv_rows.append((
+            "smoke_partition_sweep",
+            interior.planner_s * 1e6,
+            f"plan={interior.plan_signature}",
+        ))
+    except Exception as e:  # noqa: BLE001 — summarize, don't die first
+        failures.append(("partition_sweep", "crashed", repr(e)))
 
     print("== tab4_rpc_gpu_util (smoke) ==", file=sys.stderr, flush=True)
-    util = tab4_rpc_gpu_util.run()
-    assert util["rrto"]["rpcs"] == 11, util["rrto"]
+    try:
+        util = tab4_rpc_gpu_util.run()
+        record(
+            "tab4_rpc_gpu_util",
+            {"rrto_rpcs_paper11": util["rrto"]["rpcs"] == 11},
+            str(util["rrto"]),
+        )
+        csv_rows.append(
+            ("smoke_tab4_rpcs", float(util["rrto"]["rpcs"]), "paper11")
+        )
+    except Exception as e:  # noqa: BLE001
+        failures.append(("tab4_rpc_gpu_util", "crashed", repr(e)))
 
     print("== decode_scaling (smoke) ==", file=sys.stderr, flush=True)
-    dec_rows, dec_checks, _ = decode_scaling.run(smoke=True)
-    # the perf guard: per-token replay compute must NOT grow with sequence
-    # position once replay is stateful (O(1) step vs the seed's O(seq))
-    assert all(dec_checks.values()), f"decode scaling guard failed: {dec_checks}"
+    try:
+        # the perf guard: per-token replay compute must NOT grow with
+        # sequence position once replay is stateful (O(1) vs seed O(seq))
+        dec_rows, dec_checks, _ = decode_scaling.run(smoke=True)
+        record("decode_scaling", dec_checks)
+        lo, hi = dec_rows[0], dec_rows[-1]
+        csv_rows.append((
+            "smoke_decode_scaling",
+            hi.stateful_token_compute_s * 1e6,
+            f"state_growth={hi.stateful_token_flops / lo.stateful_token_flops:.2f}x;"
+            f"seed_growth={hi.seed_token_flops / lo.seed_token_flops:.2f}x",
+        ))
+    except Exception as e:  # noqa: BLE001
+        failures.append(("decode_scaling", "crashed", repr(e)))
+
+    print("== pipeline_overlap (smoke) ==", file=sys.stderr, flush=True)
+    try:
+        # the overlap guard: steady-state pipelined split latency must stay
+        # <= 0.8x the sequential split path at the sweep's interior points
+        pipe_rows, pipe_checks = pipeline_overlap.run()
+        record("pipeline_overlap", pipe_checks)
+        best = min(pipe_rows[1:-1], key=lambda r: r.overlap_ratio)
+        csv_rows.append((
+            "smoke_pipeline_overlap",
+            best.pipelined_period_s * 1e6,
+            f"bw={best.bandwidth_mbps:g}Mbps;"
+            f"vs_sequential={best.overlap_ratio:.2f}x;"
+            f"bottleneck={best.bottleneck}",
+        ))
+    except Exception as e:  # noqa: BLE001
+        failures.append(("pipeline_overlap", "crashed", repr(e)))
 
     print("name,us_per_call,derived")
-    interior = rows[len(rows) // 2]
-    print(
-        f"smoke_partition_sweep,{interior.planner_s * 1e6:.2f},"
-        f"plan={interior.plan_signature}"
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+    print("== smoke summary ==", file=sys.stderr, flush=True)
+    benchmarks_run = (
+        "partition_sweep", "tab4_rpc_gpu_util", "decode_scaling",
+        "pipeline_overlap",
     )
-    print(f"smoke_tab4_rpcs,{float(util['rrto']['rpcs']):.2f},paper11")
-    lo, hi = dec_rows[0], dec_rows[-1]
-    print(
-        f"smoke_decode_scaling,{hi.stateful_token_compute_s * 1e6:.2f},"
-        f"state_growth={hi.stateful_token_flops / lo.stateful_token_flops:.2f}x;"
-        f"seed_growth={hi.seed_token_flops / lo.seed_token_flops:.2f}x"
-    )
+    failed_names = {b for b, _, _ in failures}
+    for b in benchmarks_run:
+        if b not in failed_names:
+            print(f"  {b}: OK", file=sys.stderr, flush=True)
+    for b, guard, detail in failures:
+        suffix = f" ({detail})" if detail else ""
+        print(f"  {b}: FAILED guard '{guard}'{suffix}", file=sys.stderr,
+              flush=True)
+    if failures:
+        tripped = ", ".join(f"{b}:{g}" for b, g, _ in failures)
+        raise SystemExit(f"smoke guards tripped: {tripped}")
 
 
 def main() -> None:
@@ -61,6 +131,7 @@ def main() -> None:
         multiclient_scaling,
         opseq_search_perf,
         partition_sweep,
+        pipeline_overlap,
         roofline,
         tab3_rpc_composition,
         tab4_rpc_gpu_util,
@@ -171,6 +242,17 @@ def main() -> None:
         f"bw={interior.bandwidth_mbps:g}Mbps;"
         f"vs_binary={interior.planner_s / min(interior.full_offload_s, interior.device_only_s):.2f}x;"
         f"dominates={all(sweep_checks.values())}",
+    ))
+
+    print("== pipeline_overlap ==", file=sys.stderr, flush=True)
+    pipe_rows, pipe_checks = pipeline_overlap.run()
+    best = min(pipe_rows[1:-1], key=lambda r: r.overlap_ratio)
+    rows.append((
+        "pipeline_overlap",
+        best.pipelined_period_s * 1e6,
+        f"bw={best.bandwidth_mbps:g}Mbps;"
+        f"vs_sequential={best.overlap_ratio:.2f}x;"
+        f"guards={all(pipe_checks.values())}",
     ))
 
     print("== roofline ==", file=sys.stderr, flush=True)

@@ -247,6 +247,19 @@ class ReplayProgram:
         self.d2h_avals = [
             c.out_avals[0] for c in calls if c.record.func == FUNC_D2H
         ]
+        # H2D records carry no avals — the upload's structural signature
+        # comes from the recorded live payload (present for the IOS calls a
+        # program is ever built from; None-safe for exotic callers)
+        self.h2d_avals = [
+            (
+                (tuple(np.asarray(c.h2d_value).shape),
+                 np.asarray(c.h2d_value).dtype)
+                if c.h2d_value is not None
+                else None
+            )
+            for c in calls
+            if c.record.func == FUNC_H2D
+        ]
         self.n_kernels = len(kernel_calls)
         self.total_flops = plan["total_flops"]
         self.total_bytes = plan["total_bytes"]
@@ -264,6 +277,13 @@ class ReplayProgram:
     @property
     def is_stateful(self) -> bool:
         return bool(self.carried_pairs)
+
+    @property
+    def wire_in_avals(self):
+        """(shape, dtype) of each H2D payload that still crosses the wire,
+        in wire order — the structural signature of one replay submission
+        (the multi-tenant batcher caches its digest per bound replay)."""
+        return [self.h2d_avals[i] for i in self.wire_in]
 
     def build_batched(self, width: int) -> "BatchedReplayProgram":
         """Compile a true ``jax.vmap``-batched executable over ``width``
@@ -498,6 +518,139 @@ class BoundSegmentedReplay:
         for tid, v in zip(self.graph.output_tids, results):
             env[self.graph.tensors[tid].addr] = v
         return results
+
+
+class PipelinedSegmentedReplay:
+    """Streaming executor over a :class:`BoundSegmentedReplay`: double-buffers
+    the device/server cut across *consecutive* inferences.
+
+    The sequential split path finishes inference *i* end-to-end before
+    inference *i+1* begins, so the link and one of the two compute resources
+    idle at any instant.  A sustained stream admits the pipeline transform:
+    while the server executes inference *i*'s server segments, the device
+    computes inference *i+1*'s device segments and streams its cut-crossing
+    tensors.  Timing comes from the event-driven scheduler
+    (:func:`repro.partition.pipeline.simulate_pipeline`): the device and the
+    (half-duplex) radio are private
+    :class:`~repro.core.netsim.CapacityResource`\\ s whose busy frontiers
+    persist across flushes, and server segments occupy the *shared* GPU
+    queue through ``OffloadServer.occupy`` so co-tenant contention stays
+    visible.  Steady-state per-inference latency is therefore bottleneck-
+    bound (``max(device, link, server)``) instead of sum-bound.
+
+    Functional execution is the *same* per-segment walk as the sequential
+    path (``BoundSegmentedReplay.execute``), run in submission order with
+    in-order completion per client — pipelined outputs are bitwise identical
+    to sequential split replay by construction, and the property is tested.
+    ``submit()`` queues an arrival and returns its outputs immediately;
+    ``flush()`` schedules every queued arrival on the timeline and returns
+    the in-order completion times."""
+
+    def __init__(
+        self,
+        bound: BoundSegmentedReplay,
+        client_device: DeviceSpec,
+        server: "OffloadServer",
+        network: NetworkModel,
+        *,
+        input_wire_divisor: float = 1.0,
+        t0: float = 0.0,
+    ):
+        from repro.core.netsim import CapacityResource
+        from repro.partition.pipeline import (
+            RES_LINK,
+            RES_SERVER,
+            stage_chain,
+        )
+        from repro.partition.segments import NetworkLink
+
+        self.bound = bound
+        self.server = server
+        self.network = network
+        self.chain = stage_chain(
+            bound.graph,
+            bound.plan,
+            client_device,
+            server.device,
+            input_wire_divisor=input_wire_divisor,
+        )
+        # the engine's live-trace link adapter (ingress bytes accumulate);
+        # the chain already carries wire-divided input bytes, so the adapter
+        # must not divide again
+        self._link_model = NetworkLink(network, 1.0)
+        # session-lifetime resources on an unbounded stream: keep the O(1)
+        # running totals, not the per-interval history
+        self.device = CapacityResource(
+            "device", free_at=t0, record_intervals=False
+        )
+        self.link = CapacityResource("link", free_at=t0, record_intervals=False)
+        self._per_inference_server_s = sum(
+            s.seconds for s in self.chain if s.resource == RES_SERVER
+        )
+        self._per_inference_crossings = sum(
+            1 for s in self.chain if s.resource == RES_LINK
+        )
+        self._per_inference_bytes = sum(
+            s.nbytes for s in self.chain if s.resource == RES_LINK
+        )
+        self.submitted = 0
+        self._queued: List[float] = []
+        self._last_done = t0
+        self.crossings = 0
+        self.comm_bytes = 0.0
+        self.server_seconds = 0.0
+
+    def submit(
+        self,
+        inputs: List[np.ndarray],
+        env: Dict[int, Any],
+        t_arrival: float,
+    ) -> List[Any]:
+        """Queue one inference at ``t_arrival`` and return its outputs (the
+        functional walk runs now, in submission order).  Arrivals must be
+        nondecreasing within a flush window."""
+        if self._queued and t_arrival < self._queued[-1]:
+            raise ValueError(
+                f"arrival {t_arrival} precedes queued arrival "
+                f"{self._queued[-1]}"
+            )
+        outs = self.bound.execute(inputs, env, execute=self.server.execute)
+        self._queued.append(float(t_arrival))
+        self.submitted += 1
+        self.crossings += self._per_inference_crossings
+        self.comm_bytes += self._per_inference_bytes
+        self.server_seconds += self._per_inference_server_s
+        return outs
+
+    def flush(self) -> List[float]:
+        """Schedule every queued arrival event-driven over the persistent
+        resources; returns in-order completion times (one per arrival)."""
+        from repro.partition.pipeline import (
+            SharedGPUResource,
+            simulate_pipeline,
+        )
+
+        if not self._queued:
+            return []
+        sim = simulate_pipeline(
+            self.chain,
+            self._link_model,
+            self._queued,
+            device=self.device,
+            server=SharedGPUResource(self.server),
+            link_resource=self.link,
+        )
+        self._queued = []
+        dones: List[float] = []
+        for s in sim.inferences:
+            self._last_done = max(self._last_done, s.done)
+            dones.append(self._last_done)
+        return dones
+
+    def busy_snapshot(self) -> Tuple[float, float]:
+        """(device busy, link busy) seconds accumulated so far — the stream
+        driver diffs these around a window to bill energy phases."""
+        return self.device.busy_total, self.link.busy_total
 
 
 @dataclasses.dataclass
@@ -870,6 +1023,12 @@ class RRTOClient:
         self.split_plan: Optional["SplitPlan"] = None
         self._split_output_local: List[bool] = []
         self._inputs_uploaded = False
+        # multi-tenant hook: co-tenant server-resident segments of one shared
+        # IOS batch on the GPU (set by the edge server, like replay_submit)
+        self.split_submit: Optional[Any] = None
+        # pipelined streaming executor (partition.pipelined=True): rebuilt on
+        # every plan install, consumed by OffloadSession.infer_stream
+        self.pipelined_exec: Optional[PipelinedSegmentedReplay] = None
 
         self.mode = MODE_RECORDING
         self.logs: List[OperatorRecord] = []
@@ -1113,12 +1272,24 @@ class RRTOClient:
         """Adopt a split plan; a full-server plan reverts to classic replay."""
         if plan.is_full_server:
             self.split_plan = None
+            self.pipelined_exec = None
             return
         self.split_plan = plan
         self.server.prepare_split(
             self._ios_calls, plan, client_id=self.client_id,
             fingerprint=self.ios_fp,
         )
+        if self.partition is not None and self.partition.pipelined:
+            self.pipelined_exec = PipelinedSegmentedReplay(
+                self.server.context(self.client_id).split,
+                self.client_device,
+                self.server,
+                self.network,
+                input_wire_divisor=self.input_wire_divisor,
+                t0=self.clock.t,
+            )
+        else:
+            self.pipelined_exec = None
 
     # -- replaying-phase handling ----------------------------------------------
     def _replay_call(self, call: InterceptedCall) -> Any:
@@ -1242,7 +1413,11 @@ class RRTOClient:
         GPU, and boundary tensors ship with uplink overlapped against the
         device compute that follows their producers.  Afterwards the adaptive
         re-planner observes the live bandwidth and may swap plans."""
-        from repro.partition.segments import NetworkLink, compute_schedule
+        from repro.partition.segments import (
+            PLACE_SERVER,
+            NetworkLink,
+            compute_schedule,
+        )
 
         ctx = self.server.context(self.client_id)
         bound = ctx.split
@@ -1261,17 +1436,36 @@ class RRTOClient:
         outs = bound.execute(
             self._replay_inputs, ctx.env, execute=self.server.execute
         )
-        for start, dur in sched.server_busy:
-            self.server.occupy(dur, start)
+        # server segments occupy the shared GPU — through the co-tenant
+        # segment batcher when the edge server installed one (same-segment
+        # submissions of one shared IOS execute as one batched occupancy)
+        server_segs = [
+            s for s in self.split_plan.segments
+            if s.placement == PLACE_SERVER
+        ]
+        completions: List[float] = []
+        for seg, (start, dur) in zip(server_segs, sched.server_busy):
+            if self.split_submit is not None:
+                completions.append(self.split_submit(seg, dur, start))
+            else:
+                completions.append(self.server.occupy(dur, start))
         # phase-integrated billing covers the body exactly once: overlapped
         # uplink is inside the inference draw (see Schedule.radio_only_seconds)
         self.meter.add(STATE_INFERENCE, sched.device_seconds)
         self.meter.add(STATE_COMM, sched.radio_only_seconds)
         self.meter.add(STATE_STANDBY, sched.wait_seconds)
         self.clock.advance(sched.body_seconds)
-        if sched.server_busy and self.server.busy_until > self.clock.t:
-            # co-tenant GPU contention extended our server segments
-            self._wait_until(self.server.busy_until)
+        if completions:
+            # co-tenant GPU contention extended our server segments; with the
+            # segment batcher the wait is our own segments' group completion,
+            # without it the conservative shared-queue frontier
+            horizon = (
+                max(completions)
+                if self.split_submit is not None
+                else self.server.busy_until
+            )
+            if horizon > self.clock.t:
+                self._wait_until(horizon)
         self.stats.rpcs += sched.crossings
         self.stats.network_bytes += sched.comm_bytes
         self._split_output_local = list(sched.output_local)
@@ -1296,6 +1490,10 @@ class RRTOClient:
         server for catch-up, revert to recording, re-search later."""
         self.fallbacks += 1
         self.mode = MODE_RECORDING
+        # the stream executor replays the now-deviated IOS: drop it so
+        # infer_stream falls back to closed-loop recording until a fresh
+        # lock reinstalls a plan (and with it a fresh executor)
+        self.pipelined_exec = None
         if self._carried_in_map:
             self._materialize_carried_prefix()
         # when the inputs never reached the server this inference (split mode

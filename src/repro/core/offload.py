@@ -38,6 +38,7 @@ from repro.core.energy import (
     PowerModel,
 )
 from repro.core.engine import (
+    MODE_REPLAYING,
     REPLAY_FUSION_FACTOR,
     REPLAY_KERNELS_PER_FUSION,
     OffloadServer,
@@ -80,6 +81,19 @@ class InferenceResult:
     network_bytes: float
     server_busy_seconds: float
     mode: str
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """One inference of an open-loop stream (see ``infer_stream``)."""
+
+    outputs: List[Any]
+    arrival_t: float          # absolute simulated arrival time
+    done_at: float            # absolute in-order completion time
+
+    @property
+    def latency_seconds(self) -> float:
+        return self.done_at - self.arrival_t
 
 
 class OffloadSession:
@@ -332,6 +346,97 @@ class OffloadSession:
         )
         self.history.append(res)
         return res
+
+    # ------------------------------------------------------------------
+    def infer_stream(
+        self,
+        inputs_seq: Sequence[Tuple[Any, ...]],
+        *,
+        arrivals: Optional[Sequence[float]] = None,
+    ) -> List["StreamResult"]:
+        """Open-loop streaming inference: submit every element of
+        ``inputs_seq`` at its arrival offset (seconds from now; default 0 —
+        a saturated back-to-back stream) without waiting for earlier
+        completions.
+
+        On a replay-locked split session with
+        ``PartitionConfig(pipelined=True)``, submissions double-buffer the
+        device/server cut through the client's
+        :class:`~repro.core.engine.PipelinedSegmentedReplay`: while the
+        server runs inference *i*'s server segments, the device computes
+        inference *i+1*'s device segments — steady-state per-inference
+        latency is bottleneck-bound instead of sum-bound.  Results are
+        delivered in order, bitwise identical to sequential split replay.
+        Any other state (still recording, full-server plan, pipelining off)
+        falls back to closed-loop sequential ``infer()`` per arrival, so a
+        cold session can be streamed from the start and warms itself up.
+        """
+        if self.system != "rrto":
+            raise ValueError("infer_stream requires an rrto session")
+        if not self._loaded:
+            self.load()
+        n = len(inputs_seq)
+        if n == 0:
+            return []
+        offs = [0.0] * n if arrivals is None else [float(a) for a in arrivals]
+        if len(offs) != n:
+            raise ValueError(
+                f"{n} inputs but {len(offs)} arrival offsets"
+            )
+        if any(b < a for a, b in zip(offs, offs[1:])) or any(
+            a < 0 for a in offs
+        ):
+            raise ValueError("arrival offsets must be sorted and >= 0")
+        base = self.clock.t
+        # the pipelined executor is only valid while the session is replay-
+        # locked (a DAM fallback reverts to recording and drops it)
+        pipe = (
+            self.client.pipelined_exec
+            if self.client.mode == MODE_REPLAYING
+            else None
+        )
+        if pipe is None:
+            results = []
+            for off, ins in zip(offs, inputs_seq):
+                self.client._wait_until(base + off)
+                r = self.infer(*ins)
+                results.append(
+                    StreamResult(
+                        outputs=r.outputs,
+                        arrival_t=base + off,
+                        done_at=self.clock.t,
+                    )
+                )
+            return results
+        env = self.server.context(self.client_id).env
+        dev0, link0 = pipe.busy_snapshot()
+        bytes0, cross0 = pipe.comm_bytes, pipe.crossings
+        outputs = [
+            pipe.submit(self.replay_wire_inputs(ins), env, base + off)
+            for off, ins in zip(offs, inputs_seq)
+        ]
+        dones = pipe.flush()
+        results = [
+            StreamResult(outputs=o, arrival_t=base + off, done_at=done)
+            for o, off, done in zip(outputs, offs, dones)
+        ]
+        # completions are in-order, so the last one closes the window
+        wall = max(0.0, results[-1].done_at - base)
+        dev1, link1 = pipe.busy_snapshot()
+        dev_busy = dev1 - dev0
+        link_busy = link1 - link0
+        # phase-integrated billing sums exactly to the wall time: radio time
+        # overlapped with device compute sits inside the inference draw
+        # (same convention as Schedule.radio_only_seconds)
+        comm = min(link_busy, max(0.0, wall - dev_busy))
+        self.meter.add(STATE_INFERENCE, dev_busy)
+        self.meter.add(STATE_COMM, comm)
+        self.meter.add(STATE_STANDBY, max(0.0, wall - dev_busy - comm))
+        self.clock.advance(wall)
+        self.client.stats.rpcs += pipe.crossings - cross0
+        self.client.stats.network_bytes += pipe.comm_bytes - bytes0
+        self._infer_count += n
+        return results
 
     # ------------------------------------------------------------------
     def _device_only(self, inputs) -> List[Any]:

@@ -2,10 +2,19 @@
 recorded inference operator sequence (partial offloading on top of RRTO's
 record/replay engine)."""
 from repro.partition.adaptive import AdaptiveReplanner, ReplannerStats
+from repro.partition.pipeline import (
+    PipelineSchedule,
+    PipelineSimulation,
+    Stage,
+    pipeline_schedule,
+    simulate_pipeline,
+    stage_chain,
+)
 from repro.partition.planner import (
     EvaluatedPlan,
     PartitionConfig,
     evaluate_plan,
+    plan_cost,
     plan_partition,
 )
 from repro.partition.segments import (
@@ -25,8 +34,15 @@ __all__ = [
     "ReplannerStats",
     "EvaluatedPlan",
     "PartitionConfig",
+    "PipelineSchedule",
+    "PipelineSimulation",
+    "Stage",
     "evaluate_plan",
+    "pipeline_schedule",
+    "plan_cost",
     "plan_partition",
+    "simulate_pipeline",
+    "stage_chain",
     "PLACE_DEVICE",
     "PLACE_SERVER",
     "ConstantLink",

@@ -28,6 +28,7 @@ from repro.partition.planner import (
     EvaluatedPlan,
     PartitionConfig,
     evaluate_plan,
+    plan_cost,
     plan_partition,
 )
 from repro.partition.segments import SegmentGraph, SplitPlan
@@ -124,8 +125,8 @@ class AdaptiveReplanner:
             input_wire_divisor=self.input_wire_divisor,
         )
         objective = self.config.objective
-        cand_cost = candidate.seconds if objective == "latency" else candidate.joules
-        inc_cost = incumbent.seconds if objective == "latency" else incumbent.joules
+        cand_cost = plan_cost(candidate, objective)
+        inc_cost = plan_cost(incumbent, objective)
         if cand_cost < inc_cost * (1.0 - self.config.hysteresis):
             self.current = candidate
             self.stats.replans += 1

@@ -26,7 +26,7 @@ worse than binary offloading at the planned operating point.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro.core.costmodel import DeviceSpec
 from repro.core.energy import PowerModel
@@ -45,17 +45,27 @@ from repro.partition.segments import (
 
 @dataclasses.dataclass(frozen=True)
 class PartitionConfig:
-    """Knobs for the split planner and its adaptive re-planner."""
+    """Knobs for the split planner and its adaptive re-planner.
 
-    objective: str = "latency"          # "latency" | "energy"
+    ``objective="throughput"`` optimizes the *steady-state pipelined
+    per-inference interval* (the pipeline period — see
+    ``repro.partition.pipeline``) instead of one-shot latency: the right
+    objective for a sustained stream, where the cut should balance device,
+    link and server rather than minimize a single inference's span.
+    ``pipelined=True`` additionally makes a replay-locked session install a
+    :class:`~repro.core.engine.PipelinedSegmentedReplay` stream executor
+    alongside the sequential split path."""
+
+    objective: str = "latency"          # "latency" | "energy" | "throughput"
     adaptive: bool = True
     hysteresis: float = 0.15            # relative gain required to swap plans
     min_replan_interval_s: float = 0.25
     bandwidth_ema: float = 0.3          # EMA weight of a fresh bandwidth sample
     single_cut_candidates: int = 3      # sweep survivors per orientation
+    pipelined: bool = False             # build the stream executor on install
 
     def __post_init__(self):
-        if self.objective not in ("latency", "energy"):
+        if self.objective not in ("latency", "energy", "throughput"):
             raise ValueError(f"unknown objective {self.objective!r}")
 
 
@@ -65,6 +75,34 @@ class EvaluatedPlan:
     schedule: Schedule
     seconds: float
     joules: float
+    # lazy thunk for the steady-state pipelined per-inference interval: the
+    # latency/energy objectives never read it, so the extra stage-chain walk
+    # is only paid when a throughput planner (or a caller) asks
+    _period_fn: Optional[Callable[[], float]] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _period: Optional[float] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    @property
+    def period_seconds(self) -> float:
+        """Steady-state pipelined per-inference interval (throughput
+        objective), computed on first access."""
+        if self._period is None:
+            self._period = self._period_fn() if self._period_fn else 0.0
+        return self._period
+
+
+def plan_cost(ev: EvaluatedPlan, objective: str) -> float:
+    """The scalar a planner/replanner compares plans by, per objective."""
+    if objective == "latency":
+        return ev.seconds
+    if objective == "energy":
+        return ev.joules
+    if objective == "throughput":
+        return ev.period_seconds
+    raise ValueError(f"unknown objective {objective!r}")
 
 
 def evaluate_plan(
@@ -78,16 +116,31 @@ def evaluate_plan(
     power: Optional[PowerModel] = None,
     input_wire_divisor: float = 1.0,
 ) -> EvaluatedPlan:
-    """Exact modeled cost of one plan at a constant-bandwidth operating point."""
+    """Exact modeled cost of one plan at a constant-bandwidth operating point.
+
+    Both the one-shot cost (latency/energy objectives) and the pipeline
+    steady state (``period_seconds``, throughput objective) are available —
+    they share the link operating point, so a caller can compare any plan
+    under any objective; the period is computed lazily on first access."""
+    from repro.partition.pipeline import pipeline_schedule
+
     link = ConstantLink(
         bandwidth_bytes_per_s, rtt_s, input_wire_divisor=input_wire_divisor
     )
     sched = compute_schedule(graph, plan, device, server, link)
+
+    def period() -> float:
+        return pipeline_schedule(
+            graph, plan, device, server, link,
+            input_wire_divisor=input_wire_divisor,
+        ).period_seconds
+
     return EvaluatedPlan(
         plan=plan,
         schedule=sched,
         seconds=sched.total_seconds,
         joules=sched.joules(power or PowerModel()),
+        _period_fn=period,
     )
 
 
@@ -264,11 +317,17 @@ def plan_partition(
         SplitPlan.full_server(n),
         SplitPlan.full_device(n),
     ]
+    # the DP generates candidate *shapes*; throughput shares latency's costs
+    # (a per-op "period" is not decomposable) — the exact re-evaluation below
+    # scores every candidate under the true objective either way
+    dp_objective = (
+        "latency" if config.objective == "throughput" else config.objective
+    )
     candidates.append(
         SplitPlan.from_placements(
             _dp_placements(
                 graph, device, server, bandwidth_bytes_per_s, rtt_s, power,
-                config.objective, wire_live,
+                dp_objective, wire_live,
             )
         )
     )
@@ -296,13 +355,9 @@ def plan_partition(
             graph, plan, device, server, bandwidth_bytes_per_s,
             rtt_s=rtt_s, power=power, input_wire_divisor=input_wire_divisor,
         )
-        key = ev.seconds if config.objective == "latency" else ev.joules
-        best_key = (
-            None
-            if best is None
-            else (best.seconds if config.objective == "latency" else best.joules)
-        )
-        if best is None or key < best_key:
+        if best is None or plan_cost(ev, config.objective) < plan_cost(
+            best, config.objective
+        ):
             best = ev
     assert best is not None
     best.plan = dataclasses.replace(

@@ -354,6 +354,35 @@ class SegmentGraph:
 # the shared timing model
 # ---------------------------------------------------------------------------
 
+def device_op_time(device: DeviceSpec, op: OpInfo) -> float:
+    """Eager per-op device dispatch cost — the one timing rule both the
+    sequential device walk (``compute_schedule``) and the pipeline stage
+    chain (``partition/pipeline.py``) price device segments by."""
+    return device.op_time(op.flops, op.mem_bytes) + device.kernel_launch_s
+
+
+def placement_state(graph: "SegmentGraph", input_wire_divisor: float = 1.0):
+    """Initial tensor placement and wire-size rule shared by *every*
+    scheduler that walks a plan over the graph (``compute_schedule`` here,
+    ``stage_chain`` in ``partition/pipeline.py``): parameters live on both
+    endpoints, inference inputs start on the device and travel wire-divided
+    (compressed camera frames), loop-carried tensors are server-pinned.
+    Returns ``(at_device, at_server, wire_bytes)`` — one source of truth, so
+    a future pinning/compression rule cannot desynchronize the sequential
+    schedule from the pipeline chain."""
+    tensors = graph.tensors
+    carried = getattr(graph, "carried_tids", frozenset())
+    input_set = set(graph.input_tids) - set(carried)
+
+    def wire_bytes(tid: int) -> float:
+        nb = float(tensors[tid].nbytes)
+        return nb / input_wire_divisor if tid in input_set else nb
+
+    at_device = {t.tid for t in tensors if t.is_param} | input_set
+    at_server = {t.tid for t in tensors if t.is_param} | set(carried)
+    return at_device, at_server, wire_bytes
+
+
 @dataclasses.dataclass(frozen=True)
 class ConstantLink:
     """Planning-time link model: a single bandwidth/RTT operating point."""
@@ -474,21 +503,13 @@ def compute_schedule(
         )
     sched = Schedule(output_local=[])
     tensors = graph.tensors
-    wire_div = getattr(link, "input_wire_divisor", 1.0)
-    carried = getattr(graph, "carried_tids", frozenset())
-    input_set = set(graph.input_tids) - carried
-
-    def wire_bytes(tid: int) -> float:
-        # inference inputs travel compressed (e.g. JPEG camera frames);
-        # intermediates are raw activations
-        nb = float(tensors[tid].nbytes)
-        return nb / wire_div if tid in input_set else nb
-
-    # parameters live on both endpoints; inputs start on the device;
-    # loop-carried state is pinned on the server (a device segment consuming
-    # it would have to download it — the schedule bills that honestly)
-    at_device = {t.tid for t in tensors if t.is_param} | input_set
-    at_server = {t.tid for t in tensors if t.is_param} | set(carried)
+    # parameters live on both endpoints; inputs start on the device (and
+    # travel compressed); loop-carried state is pinned on the server (a
+    # device segment consuming it would have to download it — the schedule
+    # bills that honestly).  Seeding shared with the pipeline stage chain.
+    at_device, at_server, wire_bytes = placement_state(
+        graph, getattr(link, "input_wire_divisor", 1.0)
+    )
     ready = {tid: 0.0 for tid in at_device}
 
     t = 0.0            # frontier of the executing side
@@ -541,7 +562,7 @@ def compute_schedule(
             # uplink can overlap the rest of this segment's compute
             for k in range(seg.start, seg.end):
                 op = graph.ops[k]
-                dt = device.op_time(op.flops, op.mem_bytes) + device.kernel_launch_s
+                dt = device_op_time(device, op)
                 t += dt
                 sched.device_seconds += dt
                 for tid in graph.writes[k]:

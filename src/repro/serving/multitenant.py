@@ -25,10 +25,17 @@ shared pieces:
   parameter *values* (the common edge deployment: one app binary on every
   device), the group executes as **one true ``jax.vmap``-compiled batched
   call** — a :class:`~repro.core.engine.BatchedReplayProgram` cached per
-  (replay key, batch width) in the shared :class:`ReplayCache` — whose
-  outputs are bitwise identical to the per-client execution loop; members
-  with distinct parameters fall back to per-client functional execution
-  under the same modeled batch timing.
+  (replay key, padded batch width) in the shared :class:`ReplayCache` —
+  whose outputs are bitwise identical to the per-client execution loop;
+  members with distinct parameters fall back to per-client functional
+  execution under the same modeled batch timing.  Batch widths pad to the
+  next power of two (masked lanes replay lane 0 and are discarded), so a
+  fingerprint compiles O(log N) batched executables instead of one per
+  width.  Split-mode co-tenants batch too, at *segment* granularity: their
+  server-resident segments group by (fingerprint, segment bounds) — clients
+  on different device-side cuts of one shared IOS share the GPU slot for
+  the segments their plans have in common (``submit_segment``, wired
+  through ``RRTOClient.split_submit``).
 
 Simulation contract: sessions share one clock, so ``run_round`` drives them
 cooperatively — recording-phase clients serialize their RPC storms through
@@ -50,6 +57,7 @@ import numpy as np
 
 from repro.core.costmodel import GTX_2080TI, DeviceSpec
 from repro.core.engine import (
+    BATCH_MARGINAL_COST,
     MODE_REPLAYING,
     OffloadServer,
     RRTOClient,
@@ -57,6 +65,7 @@ from repro.core.engine import (
 )
 from repro.core.netsim import ServerIngress, get_network
 from repro.core.offload import InferenceResult, OffloadableModel, OffloadSession
+from repro.partition.segments import PLACE_SERVER
 from repro.serving.replay_cache import ReplayCache
 
 
@@ -67,14 +76,41 @@ def _inputs_digest(arrs: Sequence[np.ndarray]) -> Tuple:
     return tuple((a.shape, str(a.dtype)) for a in arrs)
 
 
-def _inputs_equal(a: Sequence[np.ndarray], b: Sequence[np.ndarray]) -> bool:
+def _inputs_equal(
+    a: Sequence[np.ndarray],
+    b: Sequence[np.ndarray],
+    digest: Optional[Tuple] = None,
+) -> bool:
+    """Element-wise equality with a structural short-circuit.  ``digest`` is
+    the bound replay's cached wire-input signature: when supplied, both sides
+    are checked against it in place instead of rebuilding two signature
+    tuples per round (the wire structure is a program property, stable for
+    the life of the binding)."""
     if len(a) != len(b):
         return False
     a = [np.asarray(x) for x in a]
     b = [np.asarray(y) for y in b]
-    if _inputs_digest(a) != _inputs_digest(b):
+    if digest is not None:
+        if len(a) != len(digest):
+            return False
+        for x, y, (shape, dtype) in zip(a, b, digest):
+            if (
+                x.shape != shape
+                or y.shape != shape
+                or str(x.dtype) != dtype
+                or str(y.dtype) != dtype
+            ):
+                return False
+    elif _inputs_digest(a) != _inputs_digest(b):
         return False
     return all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+def _padded_width(n: int) -> int:
+    """Round a batch width up to the next power of two (min 2): co-tenant
+    groups of width 2..N share O(log N) compiled batched executables instead
+    of one per width; padded lanes replay lane 0 and are discarded."""
+    return max(2, 1 << (int(n) - 1).bit_length())
 
 
 @dataclasses.dataclass
@@ -89,10 +125,25 @@ class _BatchGroup:
     # time, so an unclaimed member's env and carried state stay untouched
     outs: Optional[Dict[str, List[np.ndarray]]] = None
     carried: Optional[Dict[str, List[Any]]] = None
+    # shared wire-input digest of the group's program (all members run the
+    # same program, so one cached signature verifies every claim)
+    digest: Optional[Tuple] = None
 
     def claim(self, client_id: str, inputs: Sequence[np.ndarray]) -> bool:
         preloaded = self.pending.pop(client_id, None)
-        return preloaded is not None and _inputs_equal(preloaded, inputs)
+        return preloaded is not None and _inputs_equal(
+            preloaded, inputs, digest=self.digest
+        )
+
+
+@dataclasses.dataclass
+class _SegmentGroup:
+    """One co-tenant server-segment batch: same IOS fingerprint, same server
+    segment bounds, possibly *different* device-side cuts."""
+
+    done_at: float
+    remaining: set                   # client ids that may still claim a slot
+    width: int
 
 
 class ReplayBatcher:
@@ -108,20 +159,64 @@ class ReplayBatcher:
         # fingerprint -> list of (client, wire inputs) preloaded for the round
         self._pending: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]] = {}
         self._groups: Dict[str, _BatchGroup] = {}
+        # (fingerprint, seg.start, seg.end) -> client ids expected this round
+        self._seg_pending: Dict[Tuple[str, int, int], List[str]] = {}
+        self._seg_groups: Dict[Tuple[str, int, int], _SegmentGroup] = {}
+        # client id -> (bound replay, wire-input digest): the structural
+        # signature is a program property, computed once per binding instead
+        # of twice per round (hot path under many co-tenants)
+        self._digest_cache: Dict[str, Tuple[Any, Tuple]] = {}
+        # padded-vmap bookkeeping: raw widths served per padded cache key
+        self._vmap_widths_served: Dict[str, set] = {}
         self.batches_executed = 0
         self.batched_replays = 0     # submissions served from a batch
         self.solo_replays = 0        # submissions that fell back to solo
         self.vmap_batches = 0        # groups executed as one true vmap call
         self.vmap_compiles = 0       # batched executables built (not cached)
+        self.vmap_compiles_avoided = 0  # widths served by a padded executable
+        self.vmap_padded_lanes = 0   # masked lanes executed across all batches
+        self.digest_cache_hits = 0
+        self.seg_batches = 0         # co-tenant server-segment batched execs
+        self.seg_batched = 0         # segment submissions served from a batch
+        self.seg_solo = 0            # segment submissions that ran solo
         self.batch_sizes: List[int] = []
 
     def begin_round(
-        self, entries: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]]
+        self,
+        entries: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]],
+        seg_entries: Optional[Dict[Tuple[str, int, int], List[str]]] = None,
     ) -> None:
         """Preload one driving round: for each fingerprint, the replay-phase
-        clients that will submit this round and their wire inputs."""
+        clients that will submit this round and their wire inputs; for each
+        (fingerprint, server-segment) key, the split-mode clients whose plans
+        execute that segment on the GPU this round."""
         self._pending = {fp: list(members) for fp, members in entries.items()}
         self._groups = {}
+        self._seg_pending = (
+            {k: list(v) for k, v in seg_entries.items()}
+            if seg_entries
+            else {}
+        )
+        self._seg_groups = {}
+
+    def _wire_digest(self, client_id: str) -> Optional[Tuple]:
+        """The cached wire-input shape/dtype digest of one client's bound
+        replay (recomputed only when the binding changes)."""
+        bound = self.server.context(client_id).replay
+        if bound is None:
+            return None
+        ent = self._digest_cache.get(client_id)
+        if ent is not None and ent[0] is bound:
+            self.digest_cache_hits += 1
+            return ent[1]
+        avals = bound.program.wire_in_avals
+        if any(a is None for a in avals):
+            return None  # recorded payload was trimmed; fall back per round
+        digest = tuple(
+            (tuple(shape), str(np.dtype(dtype))) for shape, dtype in avals
+        )
+        self._digest_cache[client_id] = (bound, digest)
+        return digest
 
     def make_submit(self, client: RRTOClient):
         """A bound submit hook for ``RRTOClient.replay_submit``."""
@@ -132,6 +227,56 @@ class ReplayBatcher:
             )
 
         return submit
+
+    def make_split_submit(self, client: RRTOClient):
+        """A bound server-segment hook for ``RRTOClient.split_submit``."""
+
+        def submit(seg, solo_seconds: float, start: float) -> float:
+            return self.submit_segment(client, seg, solo_seconds, start)
+
+        return submit
+
+    def submit_segment(
+        self, client: RRTOClient, seg, solo_seconds: float, start: float
+    ) -> float:
+        """One split-mode client's server segment reaching the GPU.
+
+        Co-tenants whose plans share this (fingerprint, segment-bounds) key —
+        even when their *device-side* cuts differ — execute the segment as
+        one batched GPU occupancy: the first submitter reserves the
+        sub-linear batched slot for the whole preloaded group and every
+        member completes at the group's finish time.  Functional execution
+        stays per-client (each client's segment walk already produced its own
+        bitwise-exact values); the batch is a shared-GPU scheduling win, the
+        same modeling contract as ``batched_compute_seconds``."""
+        fp = client.ios_fp
+        key = (fp, seg.start, seg.end) if fp is not None else None
+        group = self._seg_groups.get(key) if key is not None else None
+        if group is None and key is not None:
+            members = self._seg_pending.pop(key, None)
+            if members and client.client_id in members:
+                width = len(members)
+                compute = solo_seconds * (
+                    1.0 + BATCH_MARGINAL_COST * (width - 1)
+                )
+                begin = start + (self.window_s if width > 1 else 0.0)
+                done = self.server.occupy(compute, begin)
+                group = _SegmentGroup(
+                    done_at=done, remaining=set(members), width=width
+                )
+                self._seg_groups[key] = group
+                if width > 1:
+                    self.seg_batches += 1
+        if group is not None and client.client_id in group.remaining:
+            group.remaining.discard(client.client_id)
+            if group.width > 1:
+                self.seg_batched += 1
+            else:
+                self.seg_solo += 1
+            return max(group.done_at, start)
+        # not preloaded (or already claimed): plain solo occupancy
+        self.seg_solo += 1
+        return self.server.occupy(solo_seconds, start)
 
     def submit(
         self,
@@ -220,18 +365,35 @@ class ReplayBatcher:
         if not members[0][1] and not program.is_stateful:
             return None  # no mapped axis to batch over
         width = len(members)
-        key = f"{fp}#vmap{width}"
+        # pad to the next power of two: one compiled executable serves every
+        # group width in (padded/2, padded], so a fingerprint needs O(log N)
+        # batched executables instead of one per width.  Padded lanes
+        # replicate lane 0 (any valid data — their outputs are discarded).
+        padded = _padded_width(width)
+        key = f"{fp}#vmap{padded}"
         cache = self.server.replay_cache
         batched: Optional[BatchedReplayProgram] = (
             cache.get(key) if cache is not None else None
         )
-        if batched is None or batched.base is not program:
-            batched = program.build_batched(width)
+        compiled_now = batched is None or batched.base is not program
+        if compiled_now:
+            batched = program.build_batched(padded)
             self.vmap_compiles += 1
             if cache is not None:
                 cache.put(key, batched)
+        served = self._vmap_widths_served.setdefault(key, set())
+        if not compiled_now and width not in served:
+            # an exact-width scheme would have compiled a fresh executable
+            # for this group width; the padded one absorbed it
+            self.vmap_compiles_avoided += 1
+        served.add(width)
+        self.vmap_padded_lanes += padded - width
+        pad = padded - width
         stacked_inputs = [
-            np.stack([np.asarray(m[1][k]) for m in members])
+            np.stack(
+                [np.asarray(m[1][k]) for m in members]
+                + [np.asarray(members[0][1][k])] * pad
+            )
             for k in range(len(members[0][1]))
         ]
         if program.is_stateful:
@@ -242,7 +404,7 @@ class ReplayBatcher:
                     return None
                 states.append(st)
             stacked_state = [
-                jnp.stack([st[k] for st in states])
+                jnp.stack([st[k] for st in states] + [states[0][k]] * pad)
                 for k in range(len(states[0]))
             ]
             with _quiet_donation():
@@ -289,6 +451,7 @@ class ReplayBatcher:
         start = t + (self.window_s if batch > 1 else 0.0)
         group.done_at = self.server.occupy(compute, start)
         group.pending = {cl.client_id: wire for cl, wire in members}
+        group.digest = self._wire_digest(first.client_id)
         self._groups[fp] = group
         self.batches_executed += 1
         self.batch_sizes.append(batch)
@@ -357,6 +520,7 @@ class RRTOEdgeServer:
             **session_kwargs,
         )
         sess.client.replay_submit = self.batcher.make_submit(sess.client)
+        sess.client.split_submit = self.batcher.make_split_submit(sess.client)
         self.sessions[cid] = sess
         self.ingress.active_clients = len(self.sessions)
         return sess
@@ -373,21 +537,28 @@ class RRTOEdgeServer:
         storms serialized through the shared server and ingress."""
         self.ingress.active_clients = len(inputs_by_client)
         entries: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]] = {}
+        seg_entries: Dict[Tuple[str, int, int], List[str]] = {}
         for cid, inputs in inputs_by_client.items():
             sess = self.sessions[cid]
             cl = sess.client
-            # split-plan clients run their own segmented schedule (device
-            # compute interleaves with server segments), so only full-server
-            # replays batch; the batch key is the full replay identity
-            if (
-                cl.mode == MODE_REPLAYING
-                and cl.replay_key is not None
-                and cl.split_plan is None
-            ):
+            # full-server replays batch as whole programs (key = the full
+            # replay identity); split-plan clients run their own segmented
+            # schedule, but their *server-resident* segments still batch —
+            # keyed by (fingerprint, segment bounds), so co-tenants on
+            # different device-side cuts of one shared IOS share the GPU slot
+            if cl.mode != MODE_REPLAYING or cl.replay_key is None:
+                continue
+            if cl.split_plan is None:
                 entries.setdefault(cl.replay_key, []).append(
                     (cl, sess.replay_wire_inputs(inputs))
                 )
-        self.batcher.begin_round(entries)
+            else:
+                for seg in cl.split_plan.segments:
+                    if seg.placement == PLACE_SERVER:
+                        seg_entries.setdefault(
+                            (cl.ios_fp, seg.start, seg.end), []
+                        ).append(cid)
+        self.batcher.begin_round(entries, seg_entries)
         return {
             cid: self.sessions[cid].infer(*inputs)
             for cid, inputs in inputs_by_client.items()
@@ -429,6 +600,12 @@ class RRTOEdgeServer:
             solo_replays=self.batcher.solo_replays,
             vmap_batches=self.batcher.vmap_batches,
             vmap_compiles=self.batcher.vmap_compiles,
+            vmap_compiles_avoided=self.batcher.vmap_compiles_avoided,
+            vmap_padded_lanes=self.batcher.vmap_padded_lanes,
+            digest_cache_hits=self.batcher.digest_cache_hits,
+            seg_batches=self.batcher.seg_batches,
+            seg_batched=self.batcher.seg_batched,
+            seg_solo=self.batcher.seg_solo,
             mean_batch=(
                 float(np.mean(self.batcher.batch_sizes))
                 if self.batcher.batch_sizes

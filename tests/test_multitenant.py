@@ -203,6 +203,188 @@ class TestCacheAdoption:
             )
 
 
+class TestPaddedVmapWidths:
+    def test_padded_widths_reuse_executables(self):
+        """Batch widths pad to the next power of two: a width-3 round reuses
+        the width-4 executable a width-4 round compiled (O(log N) compiles
+        per fingerprint instead of one per width), with correct outputs."""
+        model, x = make_mlp()
+        ref = np.asarray(jax.jit(model.apply)(model.params, x)[0])
+        edge = RRTOEdgeServer(execute=True)
+        for _ in range(4):
+            edge.connect(model)
+        ids = list(edge.sessions)
+        for _ in range(4):
+            edge.run_round({c: (x,) for c in ids})
+        assert all(
+            s.client.mode == "replaying" for s in edge.sessions.values()
+        )
+        edge.run_round({c: (x,) for c in ids})      # width 4 -> #vmap4
+        assert any("#vmap4" in k for k in edge.cache.fingerprints)
+        compiles = edge.batcher.vmap_compiles
+        avoided = edge.batcher.vmap_compiles_avoided
+        results = edge.run_round({c: (x,) for c in ids[:3]})  # width 3 -> pads to 4
+        assert edge.batcher.vmap_compiles == compiles       # no new build
+        assert edge.batcher.vmap_compiles_avoided == avoided + 1
+        assert edge.batcher.vmap_padded_lanes >= 1
+        assert not any("#vmap3" in k for k in edge.cache.fingerprints)
+        for r in results.values():
+            np.testing.assert_allclose(
+                np.asarray(r.outputs[0]), ref, rtol=1e-5, atol=1e-5
+            )
+
+    def test_padded_width_helper(self):
+        from repro.serving.multitenant import _padded_width
+
+        assert [_padded_width(n) for n in (1, 2, 3, 4, 5, 8, 9)] == [
+            2, 2, 4, 4, 8, 8, 16,
+        ]
+
+
+class TestDigestCache:
+    def test_digest_cached_per_bound_replay(self):
+        """The wire-input shape/dtype digest is computed once per binding and
+        reused across rounds (the hot path under many co-tenants)."""
+        model, x = make_mlp()
+        edge = RRTOEdgeServer(execute=True)
+        for _ in range(2):
+            edge.connect(model)
+        ids = list(edge.sessions)
+        for _ in range(4):
+            edge.run_round({c: (x,) for c in ids})
+        assert all(
+            s.client.mode == "replaying" for s in edge.sessions.values()
+        )
+        edge.run_round({c: (x,) for c in ids})       # digest computed once
+        hits0 = edge.batcher.digest_cache_hits
+        for _ in range(3):
+            edge.run_round({c: (x,) for c in ids})
+        assert edge.batcher.digest_cache_hits >= hits0 + 3
+
+    def test_mismatched_submission_still_rejected(self):
+        """The cached digest must not weaken the claim check: a submission
+        whose values differ from the preload falls back to solo replay."""
+        model, x = make_mlp()
+        edge = RRTOEdgeServer(execute=True)
+        sess = edge.connect(model)
+        for _ in range(4):
+            edge.run_round({"c0": (x,)})
+        assert sess.client.mode == "replaying"
+        cl = sess.client
+        wire = sess.replay_wire_inputs((x,))
+        edge.batcher.begin_round({cl.replay_key: [(cl, wire)]})
+        wrong = [np.asarray(w) + 1.0 for w in wire]
+        solo0 = edge.batcher.solo_replays
+        outs, _ = edge.batcher.submit(cl, wrong, edge.clock.t)
+        assert edge.batcher.solo_replays == solo0 + 1
+        ref = np.asarray(
+            jax.jit(model.apply)(model.params, np.asarray(wrong[0]))[0]
+        )
+        np.testing.assert_allclose(
+            np.asarray(outs[0]), ref, rtol=1e-5, atol=1e-5
+        )
+
+
+class TestServerSegmentBatching:
+    MBPS = 1e6 / 8.0
+
+    def _locked_split_edge(self, n_clients=2, execute=True):
+        """Co-tenant split sessions on one shared IOS, all replay-locked,
+        with adaptive re-planning off so forced plans stay installed."""
+        from repro.models.cnn_zoo import make_sensor_encoder
+        from repro.partition import PartitionConfig
+
+        model = make_sensor_encoder(scale=0.25, input_size=32, n_blocks=2)
+        edge = RRTOEdgeServer(execute=execute)
+        cfg = PartitionConfig(adaptive=False)
+        sessions = []
+        for _ in range(n_clients):
+            s = edge.connect(model, min_repeats=2, partition=cfg)
+            s.network.trace_bytes_per_s = np.full(16, 8.0 * self.MBPS)
+            sessions.append(s)
+        x = model.example_inputs
+        for _ in range(6):
+            edge.run_round({s.client_id: x for s in sessions})
+        assert all(s.client.mode == "replaying" for s in sessions)
+        return edge, sessions, model
+
+    def test_same_server_segments_batch(self):
+        """Split co-tenants whose plans share a server segment execute it as
+        one batched GPU occupancy, and outputs stay exact."""
+        from repro.partition import SegmentGraph, SplitPlan
+        from repro.partition.segments import PLACE_DEVICE, PLACE_SERVER
+
+        edge, sessions, model = self._locked_split_edge()
+        n = SegmentGraph(sessions[0].client._ios_calls).n_ops
+        plan = SplitPlan.from_placements(
+            [PLACE_DEVICE] * 3 + [PLACE_SERVER] * (n - 3)
+        )
+        for s in sessions:
+            s.client._install_plan(plan)
+        x = model.example_inputs
+        ref = None
+        batches0 = edge.batcher.seg_batches
+        results = edge.run_round({s.client_id: x for s in sessions})
+        assert edge.batcher.seg_batches >= batches0 + 1
+        assert edge.batcher.seg_batched >= 2
+        for s in sessions:
+            out = np.asarray(results[s.client_id].outputs[0])
+            if ref is None:
+                ref = out
+            np.testing.assert_array_equal(out, ref)
+
+    def test_different_device_cuts_still_share_server_segment(self):
+        """The group key is (fingerprint, server-segment bounds), not the
+        full plan: clients on *different* split plans of one shared IOS
+        batch the server segment their plans have in common."""
+        from repro.partition import SegmentGraph, SplitPlan
+        from repro.partition.segments import PLACE_DEVICE, PLACE_SERVER
+
+        edge, sessions, model = self._locked_split_edge()
+        n = SegmentGraph(sessions[0].client._ios_calls).n_ops
+        mid = max(5, n // 2)
+        # plan A: device prefix, shared server segment, device tail, second
+        # server segment; plan B: same prefix + shared segment, device tail
+        plan_a = SplitPlan.from_placements(
+            [PLACE_DEVICE] * 3
+            + [PLACE_SERVER] * (mid - 3)
+            + [PLACE_DEVICE] * 2
+            + [PLACE_SERVER] * (n - mid - 2)
+        )
+        plan_b = SplitPlan.from_placements(
+            [PLACE_DEVICE] * 3
+            + [PLACE_SERVER] * (mid - 3)
+            + [PLACE_DEVICE] * (n - mid)
+        )
+        assert plan_a.signature() != plan_b.signature()
+        sessions[0].client._install_plan(plan_a)
+        sessions[1].client._install_plan(plan_b)
+        x = model.example_inputs
+        batches0 = edge.batcher.seg_batches
+        results = edge.run_round({s.client_id: x for s in sessions})
+        # the shared (3, mid) segment batched; plan A's tail segment ran solo
+        assert edge.batcher.seg_batches >= batches0 + 1
+        assert edge.batcher.seg_solo >= 1
+        a = np.asarray(results[sessions[0].client_id].outputs[0])
+        b = np.asarray(results[sessions[1].client_id].outputs[0])
+        np.testing.assert_array_equal(a, b)
+
+    def test_full_server_clients_keep_whole_program_batching(self):
+        """Split-segment batching must not siphon full-server replays out of
+        the existing whole-program batch groups."""
+        model, x = make_mlp()
+        edge = RRTOEdgeServer(execute=True)
+        for _ in range(2):
+            edge.connect(model)
+        ids = list(edge.sessions)
+        for _ in range(4):
+            edge.run_round({c: (x,) for c in ids})
+        batches0 = edge.batcher.batches_executed
+        edge.run_round({c: (x,) for c in ids})
+        assert edge.batcher.batches_executed == batches0 + 1
+        assert edge.batcher.seg_batches == 0
+
+
 class TestLRUEviction:
     def test_evicts_least_recently_used(self):
         class P:  # stand-in program

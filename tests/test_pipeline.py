@@ -1,0 +1,454 @@
+"""Pipelined split replay + the event-driven timeline: capacity-resource and
+event-scheduler semantics, per-client clock skew, open-loop arrivals under
+overload (queue growth), the pipeline-aware throughput objective, and the
+acceptance property — pipelined streaming outputs bitwise-identical to the
+sequential split path across registry models, with in-order delivery."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    BoundSegmentedReplay,
+    PipelinedSegmentedReplay,
+    SegmentedReplayProgram,
+)
+from repro.core.netsim import (
+    CapacityResource,
+    ClientClock,
+    EventTimeline,
+    periodic_arrivals,
+    poisson_arrivals,
+)
+from repro.core.offload import OffloadSession
+from repro.models.cnn_zoo import ZOO
+from repro.partition import (
+    PartitionConfig,
+    PLACE_DEVICE,
+    PLACE_SERVER,
+    SegmentGraph,
+    SplitPlan,
+    evaluate_plan,
+    pipeline_schedule,
+    plan_partition,
+    simulate_pipeline,
+    stage_chain,
+)
+from repro.partition.pipeline import Stage
+from repro.partition.segments import ConstantLink
+
+MBPS = 1e6 / 8.0
+
+REGISTRY_CASES = {
+    "vgg16": dict(scale=0.1, input_size=32),
+    "sensor_encoder": dict(scale=0.25, input_size=32, n_blocks=2),
+}
+
+
+class TestCapacityResource:
+    def test_reservations_serialize(self):
+        r = CapacityResource("gpu")
+        assert r.reserve(1.0, 2.0) == (1.0, 3.0)
+        # a request in the past queues behind the frontier
+        assert r.reserve(0.0, 1.0) == (3.0, 4.0)
+        assert r.busy == [(1.0, 3.0), (3.0, 4.0)]
+
+    def test_busy_seconds_and_utilization(self):
+        r = CapacityResource("link")
+        r.reserve(0.0, 1.0)
+        r.reserve(2.0, 1.0)
+        assert r.busy_seconds(0.0, 3.0) == pytest.approx(2.0)
+        assert r.busy_seconds(0.5, 2.5) == pytest.approx(1.0)
+        assert r.utilization(0.0, 4.0) == pytest.approx(0.5)
+
+    def test_zero_duration_records_nothing(self):
+        r = CapacityResource("x")
+        r.reserve(5.0, 0.0)
+        assert r.busy == [] and r.free_at == 5.0
+        with pytest.raises(ValueError):
+            r.reserve(0.0, -1.0)
+
+
+class TestEventTimeline:
+    def test_fires_in_time_order_fifo_ties(self):
+        tl = EventTimeline()
+        order = []
+        tl.at(2.0, lambda: order.append("late"))
+        tl.at(1.0, lambda: order.append("a"))
+        tl.at(1.0, lambda: order.append("b"))       # tie: FIFO
+        tl.run()
+        assert order == ["a", "b", "late"]
+        assert tl.now == 2.0 and tl.fired == 3
+
+    def test_handlers_schedule_further_events(self):
+        tl = EventTimeline()
+        seen = []
+
+        def chain(k):
+            seen.append(k)
+            if k < 3:
+                tl.at(tl.now + 1.0, lambda: chain(k + 1))
+
+        tl.at(0.5, lambda: chain(0))
+        tl.run()
+        assert seen == [0, 1, 2, 3] and tl.now == pytest.approx(3.5)
+
+    def test_run_until_stops_early(self):
+        tl = EventTimeline()
+        seen = []
+        for t in (1.0, 2.0, 3.0):
+            tl.at(t, lambda t=t: seen.append(t))
+        tl.run(until=2.0)
+        assert seen == [1.0, 2.0] and len(tl) == 1
+
+
+class TestClockSkewAndArrivals:
+    def test_clock_roundtrip(self):
+        cc = ClientClock(offset_s=0.050, drift=50e-6)
+        for t in (0.0, 1.0, 123.456):
+            assert cc.to_local(cc.to_global(t)) == pytest.approx(t)
+        # a fast-drifting clock's local second is more than a global second
+        assert cc.to_global(1000.0) - cc.to_global(0.0) > 1000.0
+
+    def test_skewed_clients_interleave_on_global_timeline(self):
+        """Two clients emit periodic arrivals in their own skewed local time;
+        mapped to global time, the event timeline interleaves them in true
+        order — the lockstep round driver cannot express this."""
+        a = ClientClock(offset_s=0.000, drift=0.0)
+        b = ClientClock(offset_s=0.004, drift=100e-6)  # 4 ms ahead
+        period = 0.010
+        merged = []
+        tl = EventTimeline()
+        for name, clock in (("a", a), ("b", b)):
+            for t_local in periodic_arrivals(period, 5):
+                tl.at(
+                    clock.to_global(t_local),
+                    lambda name=name: merged.append((tl.now, name)),
+                )
+        tl.run()
+        times = [t for t, _ in merged]
+        assert times == sorted(times)
+        # the offset interleaves a/b strictly: a@10ms, b@14ms, a@20ms, ...
+        assert [n for _, n in merged[:6]] == ["a", "b", "a", "b", "a", "b"]
+
+    def test_poisson_arrivals_deterministic_and_open_loop(self):
+        xs = poisson_arrivals(100.0, 200, seed=7)
+        assert xs == poisson_arrivals(100.0, 200, seed=7)
+        assert all(b > a for a, b in zip(xs, xs[1:]))
+        mean_gap = (xs[-1] - xs[0]) / (len(xs) - 1)
+        assert 0.005 < mean_gap < 0.02          # ~1/100 Hz, loose bounds
+        with pytest.raises(ValueError):
+            poisson_arrivals(0.0, 5)
+
+    def test_periodic_jitter_never_reorders(self):
+        xs = periodic_arrivals(0.01, 50, jitter_s=0.02, seed=3)
+        assert all(b >= a for a, b in zip(xs, xs[1:]))
+
+
+class TestOverload:
+    """Open-loop arrivals above the bottleneck service rate must grow the
+    queue without bound — an observable, not a modeling error."""
+
+    CHAIN = [Stage("server", seconds=0.010)]
+    LINK = ConstantLink(1e9)
+
+    def test_queue_grows_under_overload(self):
+        # service 10 ms/inference, arrivals every 5 ms: 2x overload
+        arrivals = periodic_arrivals(0.005, 40)
+        sim = simulate_pipeline(self.CHAIN, self.LINK, arrivals)
+        depths = [s.queue_depth for s in sim.inferences]
+        waits = [s.queue_wait for s in sim.inferences]
+        assert sim.max_queue_depth >= 10
+        assert depths[-1] > depths[len(depths) // 2] > depths[2]
+        assert waits[-1] > waits[len(waits) // 2] > 0.0
+        # latency grows roughly linearly with index under 2x overload
+        assert sim.inferences[-1].latency > 5 * sim.inferences[5].latency
+
+    def test_queue_bounded_below_capacity(self):
+        arrivals = periodic_arrivals(0.012, 40)   # 20% headroom
+        sim = simulate_pipeline(self.CHAIN, self.LINK, arrivals)
+        assert sim.max_queue_depth <= 1
+        assert max(s.latency for s in sim.inferences) <= 0.011
+
+    def test_poisson_overload_via_event_timeline(self):
+        sim = simulate_pipeline(
+            self.CHAIN, self.LINK, poisson_arrivals(200.0, 60, seed=1)
+        )
+        assert sim.max_queue_depth >= 10
+
+
+@pytest.fixture(scope="module")
+def recorded():
+    """One replay-locked RRTO session per registry model (real execution)."""
+    out = {}
+    for name, kwargs in REGISTRY_CASES.items():
+        model = ZOO[name](**kwargs)
+        sess = OffloadSession(model, "rrto", min_repeats=2)
+        sess.load()
+        res = None
+        for _ in range(5):
+            res = sess.infer(*model.example_inputs)
+        assert res.mode == "replaying", f"{name} never locked its IOS"
+        out[name] = (sess, [np.asarray(o) for o in res.outputs])
+    return out
+
+
+class TestPipelinedEquivalence:
+    """Acceptance property: pipelined streaming execution is bitwise
+    identical to the sequential split path, for any plan, across >= 2
+    registry models, with in-order completion."""
+
+    @pytest.mark.parametrize("name", sorted(REGISTRY_CASES))
+    def test_bitwise_identical_to_sequential_split(self, recorded, name):
+        sess, ref_outputs = recorded[name]
+        calls = sess.client._ios_calls
+        env = sess.server.context(sess.client_id).env
+        n_ops = SegmentGraph(calls).n_ops
+        plans = [
+            SplitPlan.from_placements(
+                [PLACE_DEVICE] * 2 + [PLACE_SERVER] * (n_ops - 2)
+            ),
+            SplitPlan.from_placements(
+                [PLACE_SERVER] * (n_ops // 2)
+                + [PLACE_DEVICE] * (n_ops - n_ops // 2)
+            ),
+            SplitPlan.full_device(n_ops),
+        ]
+        inputs = sess.replay_wire_inputs(sess.model.example_inputs)
+        for plan in plans:
+            prog = SegmentedReplayProgram(calls, plan)
+            bound = BoundSegmentedReplay.from_own(prog)
+            seq_outs = bound.execute(inputs, env)
+            pipe = PipelinedSegmentedReplay(
+                bound, sess.client_device, sess.server, sess.network,
+                input_wire_divisor=sess.model.input_wire_divisor,
+            )
+            stream_outs = [pipe.submit(inputs, env, 0.001 * k) for k in range(3)]
+            dones = pipe.flush()
+            assert len(dones) == 3
+            assert all(a <= b for a, b in zip(dones, dones[1:]))
+            for outs in stream_outs:
+                for got, want, ref in zip(outs, seq_outs, ref_outputs):
+                    got = np.asarray(got)
+                    assert np.array_equal(got, np.asarray(want)), (
+                        f"{name}: plan {plan.signature()} pipelined != "
+                        "sequential"
+                    )
+                    assert np.array_equal(got, ref), (
+                        f"{name}: plan {plan.signature()} != full replay"
+                    )
+
+    def test_arrivals_must_be_monotone(self, recorded):
+        sess, _ = recorded["sensor_encoder"]
+        calls = sess.client._ios_calls
+        n_ops = SegmentGraph(calls).n_ops
+        plan = SplitPlan.from_placements(
+            [PLACE_DEVICE] + [PLACE_SERVER] * (n_ops - 1)
+        )
+        bound = BoundSegmentedReplay.from_own(
+            SegmentedReplayProgram(calls, plan)
+        )
+        pipe = PipelinedSegmentedReplay(
+            bound, sess.client_device, sess.server, sess.network
+        )
+        env = sess.server.context(sess.client_id).env
+        inputs = sess.replay_wire_inputs(sess.model.example_inputs)
+        pipe.submit(inputs, env, 1.0)
+        with pytest.raises(ValueError):
+            pipe.submit(inputs, env, 0.5)
+
+
+class TestPipelinedStreamSession:
+    def test_stream_outputs_match_sequential_session(self):
+        """End-to-end: an open-loop stream through a pipelined split session
+        produces bitwise the outputs of a plain sequential rrto session."""
+        name = "sensor_encoder"
+        model = ZOO[name](**REGISTRY_CASES[name])
+        plain = OffloadSession(model, "rrto", min_repeats=2, seed=0)
+        plain.load()
+        piped = OffloadSession(
+            model, "rrto", min_repeats=2, seed=0,
+            partition=PartitionConfig(objective="throughput", pipelined=True),
+        )
+        piped.load()
+        for _ in range(5):
+            plain.infer(*model.example_inputs)
+            piped.infer(*model.example_inputs)
+        assert piped.client.mode == "replaying"
+        assert piped.client.pipelined_exec is not None
+
+        rng = np.random.default_rng(11)
+        xs = [
+            tuple(
+                np.asarray(x)
+                + rng.normal(0, 0.01, np.shape(x)).astype(np.float32)
+                for x in model.example_inputs
+            )
+            for _ in range(6)
+        ]
+        t0 = piped.clock.t
+        results = piped.infer_stream(xs)
+        assert len(results) == len(xs)
+        assert all(
+            a.done_at <= b.done_at for a, b in zip(results, results[1:])
+        )
+        assert piped.clock.t == pytest.approx(results[-1].done_at)
+        assert piped.clock.t > t0
+        for r, ins in zip(results, xs):
+            want = plain.infer(*ins)
+            for a, b in zip(r.outputs, want.outputs):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_stream_falls_back_closed_loop_without_pipeline(self):
+        """A cold (recording-phase) session streams via sequential infer()
+        and still warms itself into the replay phase."""
+        name = "sensor_encoder"
+        model = ZOO[name](**REGISTRY_CASES[name])
+        sess = OffloadSession(model, "rrto", min_repeats=2, seed=0)
+        sess.load()
+        xs = [tuple(model.example_inputs) for _ in range(5)]
+        results = sess.infer_stream(xs, arrivals=[0.01 * k for k in range(5)])
+        assert len(results) == 5
+        assert sess.client.mode == "replaying"
+        assert all(
+            a.done_at <= b.done_at for a, b in zip(results, results[1:])
+        )
+
+    def test_dam_fallback_drops_pipelined_exec(self):
+        """A mid-replay op-stream deviation (DAM) must drop the stream
+        executor with the plan: streaming a deviated session falls back to
+        closed-loop recording instead of replaying the stale IOS."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.costmodel import GTX_2080TI
+        from repro.core.energy import EnergyMeter
+        from repro.core.engine import OffloadServer, RRTOClient, SimClock
+        from repro.core.flatten import flatten_closed_jaxpr
+        from repro.core.intercept import NO_NOISE, JaxprInterceptor
+        from repro.core.netsim import indoor_network
+
+        rng = np.random.default_rng(0)
+        w = rng.normal(0, 0.1, (8, 8)).astype(np.float32)
+        x = rng.normal(0, 1, (2, 8)).astype(np.float32)
+        ja = flatten_closed_jaxpr(
+            jax.make_jaxpr(lambda xx: [jnp.tanh(xx @ w) @ w])(x)
+        )
+        jb = flatten_closed_jaxpr(
+            jax.make_jaxpr(lambda xx: [jax.nn.relu(xx @ w)])(x)
+        )
+        client = RRTOClient(
+            OffloadServer(GTX_2080TI, execute=True),
+            indoor_network(), SimClock(), EnergyMeter(),
+            variant="rrto", min_repeats=2,
+            partition=PartitionConfig(pipelined=True),
+        )
+        icp = JaxprInterceptor(client, NO_NOISE)
+        addrs_a = icp.upload_params([np.asarray(c) for c in ja.consts])
+        addrs_b = icp.upload_params([np.asarray(c) for c in jb.consts])
+        for _ in range(4):
+            icp.run(ja, addrs_a, [x])
+        assert client.mode == "replaying"
+        assert client.pipelined_exec is not None  # tiny graph: device plan
+        icp.run(jb, addrs_b, [x])                 # deviate
+        assert client.fallbacks >= 1 and client.mode == "recording"
+        assert client.pipelined_exec is None
+
+    def test_stream_validates_inputs(self):
+        model = ZOO["sensor_encoder"](**REGISTRY_CASES["sensor_encoder"])
+        sess = OffloadSession(model, "rrto", min_repeats=2)
+        with pytest.raises(ValueError, match="arrival"):
+            sess.infer_stream(
+                [tuple(model.example_inputs)] * 2, arrivals=[0.2, 0.1]
+            )
+        nn = OffloadSession(model, "nnto")
+        with pytest.raises(ValueError, match="rrto"):
+            nn.infer_stream([tuple(model.example_inputs)])
+
+
+class TestThroughputObjective:
+    def test_config_accepts_throughput(self):
+        cfg = PartitionConfig(objective="throughput", pipelined=True)
+        assert cfg.objective == "throughput"
+        with pytest.raises(ValueError):
+            PartitionConfig(objective="bandwidth")
+
+    def test_throughput_planner_never_worse_on_period(self, recorded):
+        """The pipeline-aware planner's period is <= the one-shot planner's
+        plan evaluated under the same throughput objective — and <= both
+        binary endpoints."""
+        for name, (sess, _) in recorded.items():
+            graph = SegmentGraph(sess.client._ios_calls)
+            div = sess.model.input_wire_divisor
+            n = graph.n_ops
+            for mbps in (2.0, 16.0, 64.0, 256.0):
+                bw = mbps * MBPS
+                tp = plan_partition(
+                    graph, sess.client_device, sess.server_device, bw,
+                    input_wire_divisor=div,
+                    config=PartitionConfig(objective="throughput"),
+                )
+                lat = plan_partition(
+                    graph, sess.client_device, sess.server_device, bw,
+                    input_wire_divisor=div,
+                )
+                assert tp.period_seconds <= lat.period_seconds + 1e-12
+                for endpoint in (
+                    SplitPlan.full_server(n), SplitPlan.full_device(n)
+                ):
+                    ev = evaluate_plan(
+                        graph, endpoint, sess.client_device,
+                        sess.server_device, bw, input_wire_divisor=div,
+                    )
+                    assert tp.period_seconds <= ev.period_seconds + 1e-12, (
+                        f"{name}@{mbps}Mbps: throughput planner worse than "
+                        f"{endpoint.signature()}"
+                    )
+
+    def test_period_never_exceeds_latency(self, recorded):
+        """max(stage) <= sum(stages): a plan's pipeline period can never
+        exceed its own fill latency."""
+        sess, _ = recorded["vgg16"]
+        graph = SegmentGraph(sess.client._ios_calls)
+        n = graph.n_ops
+        link = ConstantLink(16 * MBPS)
+        for plan in (
+            SplitPlan.full_server(n),
+            SplitPlan.full_device(n),
+            SplitPlan.from_placements(
+                [PLACE_DEVICE] * (n // 2) + [PLACE_SERVER] * (n - n // 2)
+            ),
+        ):
+            pipe = pipeline_schedule(
+                graph, plan, sess.client_device, sess.server_device, link
+            )
+            assert pipe.period_seconds <= pipe.latency_seconds + 1e-15
+            assert pipe.overlap_ratio <= 1.0 + 1e-12
+
+    def test_event_driven_overlap_beats_closed_loop(self, recorded):
+        """For a genuine split, the saturated event-driven stream sustains a
+        shorter per-inference interval than the closed-loop sequential walk
+        of the same chain."""
+        sess, _ = recorded["sensor_encoder"]
+        graph = SegmentGraph(sess.client._ios_calls)
+        n = graph.n_ops
+        plan = SplitPlan.from_placements(
+            [PLACE_DEVICE] * 2 + [PLACE_SERVER] * (n - 2)
+        )
+        link = ConstantLink(64 * MBPS)
+        chain = stage_chain(
+            graph, plan, sess.client_device, sess.server_device
+        )
+        pipe = pipeline_schedule(
+            graph, plan, sess.client_device, sess.server_device, link
+        )
+        arrivals = [k * pipe.period_seconds for k in range(24)]
+        open_sim = simulate_pipeline(chain, link, arrivals)
+        closed_sim = simulate_pipeline(
+            chain, link, [0.0] * 24, closed_loop=True
+        )
+        assert open_sim.steady_period() < 0.95 * closed_sim.steady_period()
+        # and the measured steady period matches the analytic bound
+        assert open_sim.steady_period() == pytest.approx(
+            pipe.period_seconds, rel=0.15
+        )
