@@ -26,6 +26,7 @@ def smoke() -> None:
         decode_scaling,
         partition_sweep,
         pipeline_overlap,
+        stateful_split,
         tab4_rpc_gpu_util,
     )
 
@@ -97,6 +98,29 @@ def smoke() -> None:
     except Exception as e:  # noqa: BLE001
         failures.append(("pipeline_overlap", "crashed", repr(e)))
 
+    print("== stateful_split (smoke) ==", file=sys.stderr, flush=True)
+    try:
+        # the carried-pinning guard: the feasible split of a stateful
+        # (KV-cached) IOS must stay <= min(full-offload, device-only)
+        # across the sweep, strictly better at >= 1 interior point, with
+        # the carried state never billed on the wire
+        ss_rows, ss_checks = stateful_split.run()
+        record("stateful_split", ss_checks)
+        interior = min(
+            ss_rows[1:-1],
+            key=lambda r: r.planner_s
+            / min(r.full_offload_s, r.device_only_s),
+        )
+        csv_rows.append((
+            "smoke_stateful_split",
+            interior.planner_s * 1e6,
+            f"bw={interior.bandwidth_mbps:g}Mbps;"
+            f"vs_binary={interior.planner_s / min(interior.full_offload_s, interior.device_only_s):.2f}x;"
+            f"plan={interior.plan_signature}",
+        ))
+    except Exception as e:  # noqa: BLE001
+        failures.append(("stateful_split", "crashed", repr(e)))
+
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.2f},{derived}")
@@ -104,7 +128,7 @@ def smoke() -> None:
     print("== smoke summary ==", file=sys.stderr, flush=True)
     benchmarks_run = (
         "partition_sweep", "tab4_rpc_gpu_util", "decode_scaling",
-        "pipeline_overlap",
+        "pipeline_overlap", "stateful_split",
     )
     failed_names = {b for b, _, _ in failures}
     for b in benchmarks_run:
@@ -133,6 +157,7 @@ def main() -> None:
         partition_sweep,
         pipeline_overlap,
         roofline,
+        stateful_split,
         tab3_rpc_composition,
         tab4_rpc_gpu_util,
     )
@@ -253,6 +278,20 @@ def main() -> None:
         f"bw={best.bandwidth_mbps:g}Mbps;"
         f"vs_sequential={best.overlap_ratio:.2f}x;"
         f"guards={all(pipe_checks.values())}",
+    ))
+
+    print("== stateful_split ==", file=sys.stderr, flush=True)
+    ss_rows, ss_checks = stateful_split.run()
+    interior = min(
+        ss_rows[1:-1],
+        key=lambda r: r.planner_s / min(r.full_offload_s, r.device_only_s),
+    )
+    rows.append((
+        "stateful_split",
+        interior.planner_s * 1e6,
+        f"bw={interior.bandwidth_mbps:g}Mbps;"
+        f"vs_binary={interior.planner_s / min(interior.full_offload_s, interior.device_only_s):.2f}x;"
+        f"guards={all(ss_checks.values())}",
     ))
 
     print("== roofline ==", file=sys.stderr, flush=True)

@@ -1,0 +1,188 @@
+"""Stateful split sweep — carried-pinned partitioning of a KV-cached decode
+workload vs the two binary-offloading endpoints.
+
+Until this sweep's feature landed, any *stateful* IOS (loop-carried KV
+cache / hidden state kept server-resident by the donated step executable)
+disabled the split planner outright and replayed full-server.  Carried-pinned
+partitioning restores the adaptive cut: the carried tensors constrain
+feasibility (every state-touching op must land in the trailing server
+segment, which compiles as a donation-aware step), and the planner
+enumerates exactly the feasible device-prefix/server-suffix cuts plus the
+full-server endpoint.
+
+The workload is the recurrent sensor decoder
+(``make_recurrent_sensor_decoder``): a raw multi-channel frame through a
+cheap stride-4 stem (the stateless prologue), then a state-conditioned heavy
+trunk folding into the carried hidden state (the KV-touching core).  Per
+bandwidth point the sweep records:
+
+* ``planner`` — the carried-feasible planner's best plan (modeled);
+* ``full-offload`` — the stateful full-server endpoint (state off the wire,
+  raw frame shipped every step);
+* ``device-only`` — the honest local baseline: the *stateless* view of the
+  same graph executed entirely on the device (state local, no network).
+
+Guards (the ``--smoke`` gate):
+
+* ``split_never_worse`` — planner <= min(full-offload, device-only) at every
+  sweep point;
+* ``interior_strictly_better`` — strictly better than both at >= 1 interior
+  point (the partial-offloading regime binary offloading cannot reach);
+* ``plans_carried_feasible`` — every chosen plan keeps the carried state
+  server-resident (trailing server segment covering all state-touching ops);
+* ``state_off_the_wire`` — no chosen plan's modeled transfer volume includes
+  the carried state bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+SWEEP_MBPS = (8.0, 16.0, 48.0, 96.0, 192.0, 384.0)
+MBPS = 1e6 / 8.0
+
+
+@dataclasses.dataclass
+class StatefulSweepRow:
+    bandwidth_mbps: float
+    planner_s: float
+    full_offload_s: float
+    device_only_s: float
+    plan_signature: str
+    n_device_ops: int
+    n_ops: int
+    carried_feasible: bool
+    comm_bytes: float            # modeled body transfer volume of the plan
+    state_bytes_saved: float     # wire bytes the stateless view would add
+
+
+def record_stateful_graph(model=None, n_infer: int = 5):
+    """Record the decode workload's stateful IOS once (analytic server) and
+    return the carried-aware graph, its stateless view (the device-only
+    reference: a local app keeps its state local), device specs and model."""
+    from repro.core.offload import OffloadSession
+    from repro.models.cnn_zoo import make_recurrent_sensor_decoder
+    from repro.partition import SegmentGraph
+
+    model = model or make_recurrent_sensor_decoder(scale=1.0, input_size=96)
+    sess = OffloadSession(model, "rrto", environment="indoor", execute=False)
+    sess.load()
+    state = model.example_inputs[1]
+    for _ in range(n_infer):
+        res = sess.infer(model.example_inputs[0], state)
+        state = res.outputs[1]
+    ios = sess.client.ios
+    if ios is None:
+        raise RuntimeError("IOS not identified during the recording sweep")
+    if not ios.carried_pairs:
+        raise RuntimeError("loop-carried state not detected — not a stateful IOS")
+    calls = sess.client._ios_calls
+    graph = SegmentGraph(calls, carried_pairs=ios.carried_pairs)
+    stateless = SegmentGraph(calls)
+    return graph, stateless, sess.client_device, sess.server_device, model
+
+
+def run(
+    sweep_mbps: Tuple[float, ...] = SWEEP_MBPS,
+    model=None,
+) -> Tuple[List[StatefulSweepRow], Dict[str, bool]]:
+    from repro.partition import SplitPlan, evaluate_plan, plan_partition
+
+    graph, stateless, device, server, model = record_stateful_graph(model)
+    wire_div = model.input_wire_divisor
+    n = graph.n_ops
+    state_bytes = float(
+        sum(graph.tensors[t].nbytes for t in graph.carried_in_tids)
+    )
+    rows: List[StatefulSweepRow] = []
+    for mbps in sweep_mbps:
+        bw = mbps * MBPS
+        best = plan_partition(
+            graph, device, server, bw, input_wire_divisor=wire_div
+        )
+        full = evaluate_plan(
+            graph, SplitPlan.full_server(n), device, server, bw,
+            input_wire_divisor=wire_div,
+        )
+        # the device-only endpoint runs the *whole* app locally, state
+        # included — evaluated on the stateless view of the same graph
+        dev = evaluate_plan(
+            stateless, SplitPlan.full_device(n), device, server, bw,
+            input_wire_divisor=wire_div,
+        )
+        # the same plan on the *stateless* view of the graph bills the state
+        # upload (and its downlink) on the wire — the stateful schedule must
+        # be cheaper by at least those bytes, proving the carried state
+        # really stayed off the wire
+        naive = evaluate_plan(
+            stateless, best.plan, device, server, bw,
+            input_wire_divisor=wire_div,
+        )
+        plan_bytes = (
+            best.schedule.comm_bytes + best.schedule.output_downlink_bytes
+        )
+        naive_bytes = (
+            naive.schedule.comm_bytes + naive.schedule.output_downlink_bytes
+        )
+        rows.append(
+            StatefulSweepRow(
+                bandwidth_mbps=mbps,
+                planner_s=best.seconds,
+                full_offload_s=full.seconds,
+                device_only_s=dev.seconds,
+                plan_signature=best.plan.signature(),
+                n_device_ops=best.plan.n_device_ops,
+                n_ops=n,
+                carried_feasible=graph.plan_carried_feasible(best.plan),
+                comm_bytes=plan_bytes,
+                state_bytes_saved=naive_bytes - plan_bytes,
+            )
+        )
+    eps = 1e-12
+    checks = {
+        "split_never_worse": all(
+            r.planner_s <= min(r.full_offload_s, r.device_only_s) + eps
+            for r in rows
+        ),
+        "interior_strictly_better": any(
+            r.planner_s < min(r.full_offload_s, r.device_only_s) * (1 - 1e-6)
+            for r in rows[1:-1]
+        ),
+        "plans_carried_feasible": all(r.carried_feasible for r in rows),
+        # the stateless view of the same plan pays the state on the wire
+        # (upload + paired downlink); the stateful schedule must not
+        "state_off_the_wire": all(
+            r.state_bytes_saved >= state_bytes - 1.0 for r in rows
+        ),
+    }
+    return rows, checks
+
+
+def main(sweep_mbps: Optional[Tuple[float, ...]] = None):
+    rows, checks = run(sweep_mbps or SWEEP_MBPS)
+    print(
+        f"{'bw (Mbps)':>10s} {'planner':>12s} {'full-offload':>13s} "
+        f"{'device-only':>12s} {'dev-ops':>8s} {'commKB':>7s}  plan"
+    )
+    for r in rows:
+        print(
+            f"{r.bandwidth_mbps:10.1f} {r.planner_s * 1e3:10.2f}ms "
+            f"{r.full_offload_s * 1e3:11.2f}ms {r.device_only_s * 1e3:10.2f}ms "
+            f"{r.n_device_ops:5d}/{r.n_ops:<3d} {r.comm_bytes / 1e3:7.1f} "
+            f"{r.plan_signature[:36]}"
+        )
+    print()
+    for name, ok in checks.items():
+        print(f"{name}: {'OK' if ok else 'FAILED'}")
+    if not all(checks.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

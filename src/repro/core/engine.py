@@ -80,6 +80,12 @@ EXEC_BYTES_PER_KERNEL = 2048
 # dropped so a client whose search never succeeds (dynamic-sequence apps,
 # cricket mode) does not pin every tensor it ever transferred
 PAYLOAD_RETENTION_CALLS = 4096
+# ...but the trailing transfer calls keep their payloads regardless of log
+# depth: a framework-noise-heavy app can emit thousands of records per
+# inference, and a call-count horizon alone would cut the loop-carried
+# detection window (~3 repeats of h2d/d2h payloads) out from under the
+# search.  Bounded by transfer count, so the pinned-tensor set stays small.
+PAYLOAD_RETENTION_TRANSFERS = 64
 
 
 @contextlib.contextmanager
@@ -388,17 +394,33 @@ class SegmentedReplayProgram:
     and shareable across clients: segment functions take
     ``(params_flat, carried_flat)`` positionally, in the canonical
     tid/first-read order both endpoints derive from their own recorded calls.
+
+    With ``carried_pairs`` the program is *stateful*: the plan must be
+    carried-feasible (every op touching loop-carried state inside the
+    trailing server segment — see ``SegmentGraph.plan_carried_feasible``),
+    and that suffix compiles as a donation-aware **step** executable
+    ``step(params_flat, boundary_flat, carried_flat)`` with the carried
+    buffers donated, exactly like the whole-program ``ReplayProgram.step_fn``
+    — the KV cache stays server-resident across the cut, never on the wire.
     """
 
     def __init__(self, calls: List[InterceptedCall], plan: "SplitPlan", *,
-                 execute: bool = True):
+                 execute: bool = True,
+                 carried_pairs: Tuple[Tuple[int, int], ...] = ()):
         from repro.partition.segments import SegmentGraph
 
         t0 = _time.perf_counter()
-        graph = SegmentGraph(calls)
+        self.carried_pairs = tuple((int(i), int(j)) for i, j in carried_pairs)
+        graph = SegmentGraph(calls, carried_pairs=self.carried_pairs)
         if plan.n_ops != graph.n_ops:
             raise ValueError(
                 f"plan covers {plan.n_ops} ops, IOS has {graph.n_ops}"
+            )
+        if not graph.plan_carried_feasible(plan):
+            raise ValueError(
+                f"plan {plan.signature()} is not carried-feasible: a "
+                "stateful IOS needs every carried-touching op in the "
+                "trailing server segment"
             )
         self.plan = plan
         self.graph = graph            # the compiling client's binding
@@ -406,8 +428,15 @@ class SegmentedReplayProgram:
         self.d2h_avals = [
             c.out_avals[0] for c in calls if c.record.func == FUNC_D2H
         ]
+        carried_out = {j for _, j in self.carried_pairs}
+        # d2h ordinals still on the wire, in wire order (mirrors ReplayProgram)
+        self.wire_out = [
+            j for j in range(len(self.d2h_avals)) if j not in carried_out
+        ]
+        carried_in_tids = set(graph.carried_in_tids)
+        carried_out_tids = set(graph.carried_out_tids)
         self.segments: List[dict] = []
-        for seg in plan.segments:
+        for si, seg in enumerate(plan.segments):
             in_tids = graph.segment_inputs(seg)
             out_tids = graph.segment_outputs(seg)
             param_tids = [
@@ -416,29 +445,50 @@ class SegmentedReplayProgram:
                 if t.is_param
                 and any(seg.start <= c < seg.end for c in t.consumers)
             ]
-            fn = (
-                self._compile_segment(
+            # the trailing server segment of a stateful plan is the step
+            # segment: carried inputs arrive via the donated state argument,
+            # carried outputs return separately so the binding can thread them
+            stateful = (
+                bool(self.carried_pairs) and si == len(plan.segments) - 1
+            )
+            spec = dict(
+                segment=seg,
+                in_tids=in_tids,
+                out_tids=out_tids,
+                param_tids=param_tids,
+                stateful=stateful,
+                fn=None,
+            )
+            if stateful:
+                spec["boundary_tids"] = [
+                    t for t in in_tids if t not in carried_in_tids
+                ]
+                spec["out_tids"] = [
+                    t for t in out_tids if t not in carried_out_tids
+                ]
+                if execute:
+                    spec["fn"] = self._compile_step_segment(
+                        ops[seg.start : seg.end], graph,
+                        spec["boundary_tids"], list(graph.carried_in_tids),
+                        spec["out_tids"], list(graph.carried_out_tids),
+                        param_tids,
+                    )
+            elif execute:
+                spec["fn"] = self._compile_segment(
                     ops[seg.start : seg.end], graph, in_tids, out_tids,
                     param_tids,
                 )
-                if execute
-                else None
-            )
-            self.segments.append(
-                dict(
-                    segment=seg,
-                    in_tids=in_tids,
-                    out_tids=out_tids,
-                    param_tids=param_tids,
-                    fn=fn,
-                )
-            )
+            self.segments.append(spec)
         self.compile_seconds = _time.perf_counter() - t0
         self.n_kernels = len(ops)
         self.nbytes_estimate = (
             EXEC_BYTES_PER_KERNEL * max(1, len(ops))
             + _avals_nbytes(self.d2h_avals)
         )
+
+    @property
+    def is_stateful(self) -> bool:
+        return bool(self.carried_pairs)
 
     @staticmethod
     def _compile_segment(kernel_calls, graph, in_tids, out_tids, param_tids):
@@ -462,15 +512,52 @@ class SegmentedReplayProgram:
 
         return jax.jit(run)
 
+    @staticmethod
+    def _compile_step_segment(
+        kernel_calls, graph, boundary_tids, carried_in_tids, out_tids,
+        carried_out_tids, param_tids,
+    ):
+        boundary_addrs = [graph.tensors[t].addr for t in boundary_tids]
+        carried_in_addrs = [graph.tensors[t].addr for t in carried_in_tids]
+        out_addrs = [graph.tensors[t].addr for t in out_tids]
+        carried_out_addrs = [graph.tensors[t].addr for t in carried_out_tids]
+        param_addrs = [graph.tensors[t].addr for t in param_tids]
+
+        def step(params_flat, boundary_flat, carried_flat):
+            env: Dict[int, Any] = dict(zip(param_addrs, params_flat))
+            env.update(zip(boundary_addrs, boundary_flat))
+            env.update(zip(carried_in_addrs, carried_flat))
+            for c in kernel_calls:
+                invals = [
+                    env[v] if tag == "a" else v for tag, v in c.in_operands
+                ]
+                outs = c.prim.bind(*invals, **c.params)
+                if not c.prim.multiple_results:
+                    outs = [outs]
+                for addr, val in zip(c.out_addrs, outs):
+                    env[addr] = val
+            return (
+                [env[a] for a in out_addrs],
+                [env[a] for a in carried_out_addrs],
+            )
+
+        return jax.jit(step, donate_argnums=(2,))
+
 
 @dataclasses.dataclass
 class BoundSegmentedReplay:
     """A shared :class:`SegmentedReplayProgram` bound to one client's address
     space: the client's own :class:`SegmentGraph` supplies the concrete
-    parameter/input addresses; the structural tid order is shared."""
+    parameter/input addresses; the structural tid order is shared.
+
+    For a stateful program the binding also owns this client's
+    server-resident ``carried_state`` — exactly like :class:`BoundReplay`,
+    advanced in place by the donated step suffix and never revisiting the
+    host."""
 
     program: SegmentedReplayProgram
     graph: SegmentGraph
+    carried_state: Optional[List[Any]] = None
 
     @classmethod
     def from_own(cls, program: SegmentedReplayProgram) -> "BoundSegmentedReplay":
@@ -482,26 +569,61 @@ class BoundSegmentedReplay:
     ) -> "BoundSegmentedReplay":
         from repro.partition.segments import SegmentGraph
 
-        return cls(program=program, graph=SegmentGraph(calls))
+        return cls(
+            program=program,
+            graph=SegmentGraph(calls, carried_pairs=program.carried_pairs),
+        )
 
     @property
     def plan(self) -> "SplitPlan":
         return self.program.plan
 
+    def seed_carried(self, env: Dict[int, Any]) -> None:
+        """Adopt the carried state this client's device memory holds (left by
+        the last recorded round, or refreshed by the previously-active
+        stateful executable): split replay starts exactly where the previous
+        phase stopped, with the state already server-resident."""
+        if not self.program.carried_pairs:
+            return
+        vals = [
+            env.get(self.graph.tensors[t].addr)
+            for t in self.graph.carried_out_tids
+        ]
+        if any(v is None for v in vals):
+            return
+        self.carried_state = [jnp.asarray(v) for v in vals]
+
+    def _wire_in_tids(self) -> List[int]:
+        carried = set(self.graph.carried_in_tids)
+        return [t for t in self.graph.input_tids if t not in carried]
+
     def execute(
         self, inputs: List[np.ndarray], env: Dict[int, Any], *,
         execute: bool = True,
+        fresh_carried: Optional[Dict[int, np.ndarray]] = None,
     ) -> List[Any]:
         """Run every segment functionally (no timing), threading the
         cut-crossing tensors; parameters come from ``env`` (this client's
-        server-side memory namespace, which mirrors its on-device weights)."""
+        server-side memory namespace, which mirrors its on-device weights).
+
+        For a stateless program ``inputs`` are all H2D uploads and the full
+        D2H output list is returned.  For a stateful program ``inputs`` are
+        the *wire* inputs only and the wire outputs are returned; the carried
+        state lives in the binding, is advanced in place by the donated step
+        suffix, and ``fresh_carried`` (pair index -> value) overwrites it
+        first — the same contract as ``OffloadServer.replay_values``."""
+        program = self.program
+        if program.is_stateful:
+            return self._execute_stateful(
+                inputs, env, execute=execute, fresh_carried=fresh_carried
+            )
         if not execute:
-            return [np.zeros(s, d) for s, d in self.program.d2h_avals]
+            return [np.zeros(s, d) for s, d in program.d2h_avals]
         val: Dict[int, Any] = {
             tid: np.asarray(v)
             for tid, v in zip(self.graph.input_tids, inputs)
         }
-        for spec in self.program.segments:
+        for spec in program.segments:
             params = [
                 env[self.graph.tensors[t].addr] for t in spec["param_tids"]
             ]
@@ -517,6 +639,68 @@ class BoundSegmentedReplay:
         # refresh the env so a post-fallback recording phase sees the outputs
         for tid, v in zip(self.graph.output_tids, results):
             env[self.graph.tensors[tid].addr] = v
+        return results
+
+    def _execute_stateful(
+        self, inputs: List[np.ndarray], env: Dict[int, Any], *,
+        execute: bool = True,
+        fresh_carried: Optional[Dict[int, np.ndarray]] = None,
+    ) -> List[Any]:
+        program = self.program
+        graph = self.graph
+        if not execute:
+            return [np.zeros(*program.d2h_avals[j]) for j in program.wire_out]
+        if self.carried_state is None:
+            raise RuntimeError(
+                "stateful split replay has no seeded carried state"
+            )
+        if fresh_carried:
+            for idx, v in fresh_carried.items():
+                self.carried_state[idx] = jnp.asarray(v)
+        wire_in_tids = self._wire_in_tids()
+        val: Dict[int, Any] = {
+            tid: np.asarray(v) for tid, v in zip(wire_in_tids, inputs)
+        }
+        for spec in program.segments:
+            params = [
+                env[graph.tensors[t].addr] for t in spec["param_tids"]
+            ]
+            if spec["stateful"]:
+                boundary = [val[t] for t in spec["boundary_tids"]]
+                with _quiet_donation():
+                    outs, new_carried = spec["fn"](
+                        params, boundary, self.carried_state
+                    )
+                self.carried_state = list(new_carried)
+                val.update(zip(spec["out_tids"], outs))
+                # publish the carried outputs too: a wire D2H that reads the
+                # *same* buffer as a carried download (aliased output) must
+                # see the live value, not the env's pre-step snapshot
+                val.update(zip(graph.carried_out_tids, self.carried_state))
+            else:
+                carried = [val[t] for t in spec["in_tids"]]
+                outs = spec["fn"](params, carried)
+                val.update(zip(spec["out_tids"], outs))
+        results: List[Any] = []
+        wire_out_tids = [graph.output_tids[j] for j in program.wire_out]
+        for tid in wire_out_tids:
+            if tid in val:
+                results.append(np.asarray(val[tid]))
+            else:  # an output aliasing a parameter buffer
+                results.append(np.asarray(env[graph.tensors[tid].addr]))
+        # env refresh mirrors OffloadServer._refresh_env: wire buffers get
+        # this round's values, carried buffers alias the live resident state
+        # — a post-fallback catch-up (or a plan swap's re-seeding) sees the
+        # true current state
+        for tid, v in zip(wire_in_tids, inputs):
+            env[graph.tensors[tid].addr] = np.asarray(v)
+        for tid, v in zip(wire_out_tids, results):
+            env[graph.tensors[tid].addr] = v
+        for in_tid, out_tid, state in zip(
+            graph.carried_in_tids, graph.carried_out_tids, self.carried_state
+        ):
+            env[graph.tensors[in_tid].addr] = state
+            env[graph.tensors[out_tid].addr] = state
         return results
 
 
@@ -605,16 +789,23 @@ class PipelinedSegmentedReplay:
         inputs: List[np.ndarray],
         env: Dict[int, Any],
         t_arrival: float,
+        fresh_carried: Optional[Dict[int, np.ndarray]] = None,
     ) -> List[Any]:
         """Queue one inference at ``t_arrival`` and return its outputs (the
         functional walk runs now, in submission order).  Arrivals must be
-        nondecreasing within a flush window."""
+        nondecreasing within a flush window.  ``fresh_carried`` overwrites
+        the stateful suffix's server-resident state before this submission
+        executes — the stream analogue of the sequential fresh-state
+        override."""
         if self._queued and t_arrival < self._queued[-1]:
             raise ValueError(
                 f"arrival {t_arrival} precedes queued arrival "
                 f"{self._queued[-1]}"
             )
-        outs = self.bound.execute(inputs, env, execute=self.server.execute)
+        outs = self.bound.execute(
+            inputs, env, execute=self.server.execute,
+            fresh_carried=fresh_carried,
+        )
         self._queued.append(float(t_arrival))
         self.submitted += 1
         self.crossings += self._per_inference_crossings
@@ -801,13 +992,18 @@ class OffloadServer:
         plan: "SplitPlan",
         client_id: str = DEFAULT_CLIENT,
         fingerprint: Optional[str] = None,
+        carried_pairs: Tuple[Tuple[int, int], ...] = (),
     ) -> bool:
         """Install per-segment replay executables for ``client_id``.
 
         Segmented programs are cached under the composite key
         ``(fingerprint, plan signature)`` — co-tenants on different networks
         plan different cuts of the same shared IOS, and each cut is compiled
-        exactly once.  Returns True iff the program came from the cache."""
+        exactly once.  ``carried_pairs`` makes the program stateful (donated
+        server suffix); a cache hit uses the cached program's pairs, and a
+        restart-persisted key recovers them from the cache metadata so the
+        rebuilt split is stateful again.  Returns True iff the program came
+        from the cache."""
         key = (
             f"{fingerprint}|{plan.signature()}"
             if fingerprint is not None
@@ -819,7 +1015,21 @@ class OffloadServer:
             program = self.replay_cache.get(key)
             from_cache = program is not None
         if program is None:
-            program = SegmentedReplayProgram(calls, plan, execute=self.execute)
+            pairs = tuple(carried_pairs)
+            if not pairs and self.replay_cache is not None:
+                for k in (key, fingerprint):
+                    if k is None:
+                        continue
+                    meta = self.replay_cache.known_metadata(k)
+                    if meta and meta.get("carried_pairs"):
+                        pairs = tuple(
+                            (int(i), int(j))
+                            for i, j in meta["carried_pairs"]
+                        )
+                        break
+            program = SegmentedReplayProgram(
+                calls, plan, execute=self.execute, carried_pairs=pairs
+            )
             self.compile_count += 1
             self.compile_seconds = program.compile_seconds
             if self.replay_cache is not None and key is not None:
@@ -827,6 +1037,8 @@ class OffloadServer:
             bound = BoundSegmentedReplay.from_own(program)
         else:
             bound = BoundSegmentedReplay.bind(program, calls)
+        if self.execute:
+            bound.seed_carried(self.context(client_id).env)
         self.context(client_id).split = bound
         return from_cache
 
@@ -1027,13 +1239,18 @@ class RRTOClient:
         # IOS batch on the GPU (set by the edge server, like replay_submit)
         self.split_submit: Optional[Any] = None
         # pipelined streaming executor (partition.pipelined=True): rebuilt on
-        # every plan install, consumed by OffloadSession.infer_stream
+        # every plan install, consumed by OffloadSession.infer_stream.  While
+        # installed it holds a cache *claim* on its derived fp|plan key so
+        # size-aware eviction cannot purge the base program (and with it the
+        # segmented executable the stream is driving) mid-stream.
         self.pipelined_exec: Optional[PipelinedSegmentedReplay] = None
+        self._stream_claim: Optional[str] = None
 
         self.mode = MODE_RECORDING
         self.logs: List[OperatorRecord] = []
         self.calls: List[InterceptedCall] = []
         self._payload_trimmed = 0   # calls below this index hold no payloads
+        self._transfer_log: List[int] = []  # indices of recent h2d/d2h calls
         self.ios: Optional[InferenceSequence] = None
         self._ios_calls: List[InterceptedCall] = []
         self._replay_pos = 0
@@ -1084,6 +1301,55 @@ class RRTOClient:
     def stateful_replay(self) -> bool:
         return bool(self._carried_in_map)
 
+    def expand_stream_outputs(self, wire_outs: List[Any]) -> List[Any]:
+        """Rebuild the app-visible output list from a stream executor's wire
+        outputs: carried D2H ordinals get the stable placeholder handle,
+        wire ordinals their computed value — so a ``StreamResult``'s outputs
+        have the same arity and meaning as sequential ``infer()``, whether
+        the arrival was served by the pipelined executor or the closed-loop
+        fallback."""
+        if not self._carried_out_map:
+            return list(wire_outs)
+        n_out = len(wire_outs) + len(self._carried_out_map)
+        outs: List[Any] = []
+        for cursor in range(n_out):
+            idx = self._carried_out_map.get(cursor)
+            if idx is not None:
+                outs.append(self._carried_placeholders.get(idx))
+            else:
+                outs.append(wire_outs[self._wire_out_index[cursor]])
+        return outs
+
+    def extract_fresh_carried(
+        self, uploads: List[Any]
+    ) -> Tuple[List[np.ndarray], Optional[Dict[int, np.ndarray]]]:
+        """Split one arrival's uploads into (wire inputs, fresh-state
+        overrides), mirroring the sequential H2D walk: a carried position
+        holding the threaded placeholder handle costs nothing; any other
+        value is genuinely new state and must overwrite the server-resident
+        suffix state before the submission executes."""
+        if not self._carried_in_map:
+            return [np.asarray(v) for v in uploads], None
+        wire: List[np.ndarray] = []
+        fresh: Dict[int, np.ndarray] = {}
+        for ordinal, v in enumerate(uploads):
+            idx = self._carried_in_map.get(ordinal)
+            if idx is None:
+                wire.append(np.asarray(v))
+                continue
+            ph = self._carried_placeholders.get(idx)
+            if ph is not None and (
+                v is ph or getattr(v, "base", None) is ph
+            ):
+                continue
+            arr = np.asarray(v)
+            fresh[idx] = arr
+            # the handle the app threads from now on is a writable copy, so
+            # a DAM fallback can refresh it in place (same contract as the
+            # sequential carried-upload path)
+            self._carried_placeholders[idx] = np.array(arr, copy=True)
+        return wire, (fresh or None)
+
     def _rpc(self, payload: float, response: float) -> None:
         dt = self.network.rpc_time(payload, response, self.clock.t)
         self.clock.advance(dt)
@@ -1128,11 +1394,23 @@ class RRTOClient:
 
         self.logs.append(rec)
         self.calls.append(call)
+        if rec.func in (FUNC_H2D, FUNC_D2H):
+            self._transfer_log.append(len(self.calls) - 1)
+            if len(self._transfer_log) > PAYLOAD_RETENTION_TRANSFERS:
+                old = self._transfer_log.pop(0)
+                if old < self._payload_trimmed:
+                    # it outlived the call-count horizon under protection;
+                    # the protection window has slid past it now
+                    self.calls[old].h2d_value = None
+                    self.calls[old].d2h_value = None
         n = len(self.calls)
         if n - self._payload_trimmed > PAYLOAD_RETENTION_CALLS:
-            for c in self.calls[self._payload_trimmed : n - PAYLOAD_RETENTION_CALLS]:
-                c.h2d_value = None
-                c.d2h_value = None
+            protected = set(self._transfer_log)
+            for i in range(self._payload_trimmed, n - PAYLOAD_RETENTION_CALLS):
+                if i in protected:
+                    continue
+                self.calls[i].h2d_value = None
+                self.calls[i].d2h_value = None
             self._payload_trimmed = n - PAYLOAD_RETENTION_CALLS
 
         if self.variant == "rrto" and self.search_on_d2h:
@@ -1211,20 +1489,21 @@ class RRTOClient:
             fingerprint=fp,
             carried_pairs=pairs,
         )
-        self._configure_carried(
-            self.server.context(self.client_id).replay.program
-        )
-        if self.stateful_replay and self.partition is not None:
-            # split-replay would have to ship the server-pinned carried state
-            # to device-resident segments every round, forfeiting the O(1)
-            # win — stateful IOSes replay full-server
-            self.partition = None
+        program = self.server.context(self.client_id).replay.program
+        self._configure_carried(program)
         if self.partition is not None:
             from repro.partition.adaptive import AdaptiveReplanner
             from repro.partition.segments import SegmentGraph
 
+            # a stateful IOS partitions too: building the graph with the
+            # carried pairs constrains the planner to carried-feasible cuts
+            # (device prefix = the stateless prologue, server suffix = the
+            # KV-touching core with donated carried buffers), so the state
+            # stays server-resident across any plan it ever returns
             self.replanner = AdaptiveReplanner(
-                SegmentGraph(self._ios_calls),
+                SegmentGraph(
+                    self._ios_calls, carried_pairs=program.carried_pairs
+                ),
                 self.client_device,
                 self.server.device,
                 rtt_s=self.network.base_rtt_s,
@@ -1268,16 +1547,48 @@ class RRTOClient:
                 # refreshes the app-held handle in place
                 self._carried_placeholders[idx] = np.array(v, copy=True)
 
+    def _claim_stream_key(self, key: Optional[str]) -> None:
+        """Swap the stream executor's cache claim: release the previous
+        derived-key claim (if any) and claim ``key`` — so the base program
+        behind an installed :class:`PipelinedSegmentedReplay` stays pinned
+        for exactly the executor's lifetime."""
+        cache = self.server.replay_cache
+        if cache is None or not hasattr(cache, "claim"):
+            self._stream_claim = None
+            return
+        if self._stream_claim is not None:
+            cache.release(self._stream_claim)
+            self._stream_claim = None
+        if key is not None:
+            cache.claim(key)
+            self._stream_claim = key
+
     def _install_plan(self, plan: "SplitPlan") -> None:
-        """Adopt a split plan; a full-server plan reverts to classic replay."""
+        """Adopt a split plan; a full-server plan reverts to classic replay.
+
+        Carried state survives every swap: the stateful executables refresh
+        the env's carried buffers after each step, and each install re-seeds
+        the adopting binding from the env — so the live KV cache migrates
+        between the whole-program and the segmented executable without ever
+        visiting the host."""
         if plan.is_full_server:
+            if self.split_plan is not None and self.stateful_replay:
+                # the split suffix held the live state; hand it back to the
+                # whole-program binding before classic replay resumes
+                ctx = self.server.context(self.client_id)
+                if ctx.replay is not None and self.server.execute:
+                    ctx.replay.seed_carried(ctx.env)
             self.split_plan = None
             self.pipelined_exec = None
+            self._claim_stream_key(None)
             return
         self.split_plan = plan
         self.server.prepare_split(
             self._ios_calls, plan, client_id=self.client_id,
             fingerprint=self.ios_fp,
+            carried_pairs=(
+                self.ios.carried_pairs if self.ios is not None else ()
+            ),
         )
         if self.partition is not None and self.partition.pipelined:
             self.pipelined_exec = PipelinedSegmentedReplay(
@@ -1288,8 +1599,14 @@ class RRTOClient:
                 input_wire_divisor=self.input_wire_divisor,
                 t0=self.clock.t,
             )
+            self._claim_stream_key(
+                f"{self.ios_fp}|{plan.signature()}"
+                if self.ios_fp is not None
+                else None
+            )
         else:
             self.pipelined_exec = None
+            self._claim_stream_key(None)
 
     # -- replaying-phase handling ----------------------------------------------
     def _replay_call(self, call: InterceptedCall) -> Any:
@@ -1314,16 +1631,10 @@ class RRTOClient:
         if rec.category == CAT_H2D:
             ordinal = self._h2d_seen
             self._h2d_seen += 1
-            if self.split_plan is not None:
-                # split replay: inputs stay on the device until a segment
-                # schedule actually needs them on the wire
-                self._local()
-                self._replay_inputs.append(np.asarray(call.h2d_value))
-                if self._h2d_seen == len(self.ios.h2d_positions):
-                    self._run_split_replay()
-                return "cudaSuccess"
             if ordinal in self._carried_in_map:
-                # loop-carried state: the server already holds it.  The app
+                # loop-carried state: the server already holds it — in the
+                # whole-program step executable or in the split plan's
+                # donated server suffix, either way it never ships.  The app
                 # threading back the handle we gave it costs nothing; any
                 # other value is genuinely new state and ships as override.
                 idx = self._carried_in_map[ordinal]
@@ -1343,29 +1654,38 @@ class RRTOClient:
                     self._carried_placeholders[idx] = np.array(
                         arr, copy=True
                     )
+            elif self.split_plan is not None:
+                # split replay: wire inputs stay on the device until a
+                # segment schedule actually needs them on the wire
+                self._local()
+                self._replay_inputs.append(np.asarray(call.h2d_value))
             else:
                 # the only client->server RPC left: ship the raw input
                 self._rpc(rec.payload_bytes, 32)
                 self._inputs_uploaded = True
                 self._replay_inputs.append(np.asarray(call.h2d_value))
             if self._h2d_seen == len(self.ios.h2d_positions):
-                fresh = self._fresh_carried or None
-                self._fresh_carried = {}
-                if self.replay_submit is not None:
-                    # cross-client batched backend (multi-tenant serving)
-                    outs, done_at = self.replay_submit(
-                        self._replay_inputs, self.clock.t, fresh_carried=fresh
-                    )
+                if self.split_plan is not None:
+                    self._run_split_replay()
                 else:
-                    outs, done_at = self.server.run_replay(
-                        self._replay_inputs, self.clock.t, self.client_id,
-                        fresh_carried=fresh,
-                    )
-                self._replay_outputs = outs
-                self._replay_done_at = done_at
-                # a full-server plan must keep watching the link, or a
-                # bandwidth collapse could never swap it back to a split
-                self._maybe_replan()
+                    fresh = self._fresh_carried or None
+                    self._fresh_carried = {}
+                    if self.replay_submit is not None:
+                        # cross-client batched backend (multi-tenant serving)
+                        outs, done_at = self.replay_submit(
+                            self._replay_inputs, self.clock.t,
+                            fresh_carried=fresh,
+                        )
+                    else:
+                        outs, done_at = self.server.run_replay(
+                            self._replay_inputs, self.clock.t, self.client_id,
+                            fresh_carried=fresh,
+                        )
+                    self._replay_outputs = outs
+                    self._replay_done_at = done_at
+                    # a full-server plan must keep watching the link, or a
+                    # bandwidth collapse could never swap it back to a split
+                    self._maybe_replan()
             return "cudaSuccess"
 
         if rec.category == CAT_D2H:
@@ -1392,7 +1712,9 @@ class RRTOClient:
                 # this output was produced by a device-resident segment: the
                 # download is a local memcpy, no network round trip
                 self._local()
-                return self._replay_outputs[cursor]
+                return self._replay_outputs[
+                    self._wire_out_index.get(cursor, cursor)
+                ]
             dt = (
                 self.network._rtt_at(self.clock.t)
                 + self.network.transfer_time(rec.response_bytes, self.clock.t)
@@ -1433,8 +1755,11 @@ class RRTOClient:
             # would double-charge the shared ingress
             include_output_downlink=False,
         )
+        fresh = self._fresh_carried or None
+        self._fresh_carried = {}
         outs = bound.execute(
-            self._replay_inputs, ctx.env, execute=self.server.execute
+            self._replay_inputs, ctx.env, execute=self.server.execute,
+            fresh_carried=fresh,
         )
         # server segments occupy the shared GPU — through the co-tenant
         # segment batcher when the edge server installed one (same-segment
@@ -1490,12 +1815,15 @@ class RRTOClient:
         server for catch-up, revert to recording, re-search later."""
         self.fallbacks += 1
         self.mode = MODE_RECORDING
-        # the stream executor replays the now-deviated IOS: drop it so
-        # infer_stream falls back to closed-loop recording until a fresh
-        # lock reinstalls a plan (and with it a fresh executor)
-        self.pipelined_exec = None
+        # download + refresh the app-held carried-state handle from the live
+        # stateful executable FIRST — while the binding that owns the true
+        # state (split suffix or whole program) is still installed — then
+        # drop the stream executor: infer_stream falls back to closed-loop
+        # recording until a fresh lock reinstalls a plan (and an executor)
         if self._carried_in_map:
             self._materialize_carried_prefix()
+        self.pipelined_exec = None
+        self._claim_stream_key(None)
         # when the inputs never reached the server this inference (split mode
         # holds them back for the segment schedule), the catch-up batch must
         # carry the H2D calls too or the server replays against stale buffers
@@ -1515,13 +1843,32 @@ class RRTOClient:
         self._h2d_seen = 0
         return self._record_call(call)
 
+    def _carried_state_source(self) -> Optional[List[Any]]:
+        """The live server-resident carried state: the split suffix's binding
+        when a split plan is active (it advanced the state last), otherwise
+        the whole-program binding's."""
+        ctx = self.server.context(self.client_id)
+        if (
+            self.split_plan is not None
+            and ctx.split is not None
+            and ctx.split.carried_state is not None
+        ):
+            return ctx.split.carried_state
+        if ctx.replay is not None:
+            return ctx.replay.carried_state
+        return None
+
     def _materialize_carried_prefix(self) -> None:
         """Before a catch-up after a mid-round deviation, turn the carried
         placeholder uploads in the prefix into the real server-resident
         values (the app only ever held handles).  The download is a real RPC
-        — this is the price of deviating from a stateful IOS."""
-        bound = self.server.context(self.client_id).replay
-        if bound is None:
+        — this is the price of deviating from a stateful IOS.  The state
+        comes from whichever stateful executable ran last (the split plan's
+        donated suffix or the whole program), so a pipelined split stream
+        that deviates mid-stream refreshes the app's handle with the truth,
+        not the lock-time snapshot."""
+        state = self._carried_state_source()
+        if state is None:
             return
         ordinal = 0
         for c in self._replay_prefix:
@@ -1536,18 +1883,17 @@ class RRTOClient:
                 c.h2d_value is ph or getattr(c.h2d_value, "base", None) is ph
             ):
                 continue  # the app supplied real state itself
-            if bound.carried_state is not None:
-                arr = np.asarray(bound.carried_state[idx])
-                self._rpc(64, arr.nbytes + 64)  # state download for catch-up
-                c.h2d_value = arr
-                if ph is not None and ph.shape == arr.shape:
-                    try:
-                        # the app keeps threading its handle through the
-                        # post-fallback recording rounds — give it the truth
-                        ph[...] = arr
-                    except ValueError:  # read-only handle
-                        pass
-                self._carried_placeholders[idx] = arr
+            arr = np.asarray(state[idx])
+            self._rpc(64, arr.nbytes + 64)  # state download for catch-up
+            c.h2d_value = arr
+            if ph is not None and ph.shape == arr.shape:
+                try:
+                    # the app keeps threading its handle through the
+                    # post-fallback recording rounds — give it the truth
+                    ph[...] = arr
+                except ValueError:  # read-only handle
+                    pass
+            self._carried_placeholders[idx] = arr
 
     # -- the sink ------------------------------------------------------------
     def __call__(self, call: InterceptedCall) -> Any:

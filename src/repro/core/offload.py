@@ -411,10 +411,25 @@ class OffloadSession:
         env = self.server.context(self.client_id).env
         dev0, link0 = pipe.busy_snapshot()
         bytes0, cross0 = pipe.comm_bytes, pipe.crossings
-        outputs = [
-            pipe.submit(self.replay_wire_inputs(ins), env, base + off)
-            for off, ins in zip(offs, inputs_seq)
-        ]
+        outputs = []
+        for off, ins in zip(offs, inputs_seq):
+            values, resident = self._steady_invars(ins)
+            uploads = [v for i, v in enumerate(values) if i not in resident]
+            wire, fresh = self.client.extract_fresh_carried(uploads)
+            if fresh:
+                # a fresh-state override ships once, like the sequential
+                # path (billed on the aggregate stream counters; its bytes
+                # are not modeled in the pipeline chain's steady state)
+                self.client.stats.rpcs += 1
+                self.client.stats.network_bytes += float(
+                    sum(a.nbytes for a in fresh.values())
+                )
+            wire_outs = pipe.submit(
+                wire, env, base + off, fresh_carried=fresh
+            )
+            # carried ordinals are answered with the stable handle, so a
+            # StreamResult's outputs match sequential infer()'s arity
+            outputs.append(self.client.expand_stream_outputs(wire_outs))
         dones = pipe.flush()
         results = [
             StreamResult(outputs=o, arrival_t=base + off, done_at=done)

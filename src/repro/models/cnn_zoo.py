@@ -305,6 +305,73 @@ def make_sensor_encoder(
     )
 
 
+def make_recurrent_sensor_decoder(
+    scale: float = 1.0, input_size: int = 96, seed: int = 0,
+    n_blocks: int = 16, d_state: int = 256,
+):
+    """Sensor-conditioned autoregressive decoder — the *stateful* sibling of
+    :func:`make_sensor_encoder`, shaped for carried-pinned split replay.
+
+    Each step the app uploads a raw multi-channel frame and its recurrent
+    hidden state (``apply(p, frame, h) -> [y, h']``).  A cheap stride-4 stem
+    encodes the frame — the *stateless prologue* a split plan can keep on
+    the device, shipping ~8x fewer bytes than the raw frame.  Everything
+    after it is state-conditioned: the carried hidden state FiLM-modulates
+    the expanded features before a heavy residual trunk, and a GRU-style
+    cell folds the pooled trunk output back into the new state — so the
+    whole trunk is the *KV-touching core* that carried-pinned partitioning
+    keeps server-resident with the donated state.  Full offload re-ships
+    the raw frame every step; device-only pays the trunk on the slow
+    device; the carried-feasible cut after the stem beats both at interior
+    bandwidths while the state never touches the wire."""
+    rng = np.random.default_rng(seed)
+    c_in = 8
+    c_stem = _c(16, scale)
+    c_trunk = _c(256, scale)
+    params: Dict[str, Any] = {}
+    _conv_params(rng, 5, c_in, c_stem, "stem", params)
+    _conv_params(rng, 1, c_stem, c_trunk, "expand", params)
+    params["cond_w"] = rng.normal(
+        0, (1.0 / d_state) ** 0.5, (d_state, c_trunk)
+    ).astype(np.float32)
+    for i in range(n_blocks):
+        _conv_params(rng, 3, c_trunk, c_trunk, f"b{i}_1", params)
+        _conv_params(rng, 3, c_trunk, c_trunk, f"b{i}_2", params)
+    params["mix_w"] = rng.normal(
+        0, (1.0 / c_trunk) ** 0.5, (c_trunk, d_state)
+    ).astype(np.float32)
+    params["rec_w"] = rng.normal(
+        0, (1.0 / d_state) ** 0.5, (d_state, d_state)
+    ).astype(np.float32)
+    params["out_w"] = rng.normal(0, 0.01, (d_state, 64)).astype(np.float32)
+
+    def apply(params, frame, h):
+        # stateless prologue: the input encoder (device-feasible prefix)
+        z = _conv_bn_act(params, "stem", frame, stride=4)
+        z = _conv_bn_act(params, "expand", z)
+        # the carried state conditions everything downstream: FiLM-modulate
+        # the features, so the trunk is pinned into the server suffix
+        gate = jnp.tanh(h @ params["cond_w"])
+        z = z * (1.0 + gate[:, None, None, :])
+        for i in range(n_blocks):
+            y = _conv_bn_act(params, f"b{i}_1", z)
+            y = _conv_bn_act(params, f"b{i}_2", y, act="none")
+            z = jax.nn.relu(z + y)
+        feats = jnp.mean(z, axis=(1, 2))
+        h_new = jnp.tanh(feats @ params["mix_w"] + h @ params["rec_w"])
+        return [h_new @ params["out_w"], h_new]
+
+    frame = rng.normal(0, 1, (1, input_size, input_size, c_in)).astype(
+        np.float32
+    )
+    h0 = np.zeros((1, d_state), np.float32)
+    # raw sensor planes: no camera-style wire compression
+    return OffloadableModel(
+        "recurrent_sensor_decoder", apply, params, (frame, h0),
+        input_wire_divisor=1.0,
+    )
+
+
 # ---------------------------------------------------------------------------
 # detection: FPN + RetinaNet / Faster-RCNN (static-shape variants)
 # ---------------------------------------------------------------------------
@@ -607,6 +674,7 @@ ZOO = {
     "vgg16": make_vgg16,
     "resnet50": make_resnet50,
     "sensor_encoder": make_sensor_encoder,
+    "recurrent_sensor_decoder": make_recurrent_sensor_decoder,
     "convnext_tiny": make_convnext_tiny,
     "fcn_resnet50": make_fcn_resnet50,
     "deeplabv3_resnet50": make_deeplabv3_resnet50,

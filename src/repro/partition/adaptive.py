@@ -16,6 +16,14 @@ server.  The re-planner therefore:
 The re-planner is deliberately engine-agnostic: it sees bandwidth samples
 and returns plans; the replay engine owns plan installation (per-segment
 executable compilation and cache interaction).
+
+Stateful IOSes re-plan too: a graph built with ``carried_pairs`` constrains
+``plan_partition`` to carried-feasible cuts (device prefix inside the
+stateless prologue, donated server suffix), so every plan this class ever
+returns — initial or swapped — keeps the loop-carried state server-resident.
+A bandwidth collapse can therefore move the cut inside the prologue or fall
+back to full-server, but never strand the KV cache on the wrong side of the
+wire.
 """
 from __future__ import annotations
 
@@ -71,7 +79,7 @@ class AdaptiveReplanner:
     # ------------------------------------------------------------------
     def _plan_at(self, bandwidth: float) -> EvaluatedPlan:
         self.stats.plans_considered += 1
-        return plan_partition(
+        ev = plan_partition(
             self.graph,
             self.device,
             self.server,
@@ -81,6 +89,10 @@ class AdaptiveReplanner:
             config=self.config,
             input_wire_divisor=self.input_wire_divisor,
         )
+        # invariant: a stateful graph never yields a cut that would strand
+        # the donated carried buffers on the device side
+        assert self.graph.plan_carried_feasible(ev.plan), ev.plan.signature()
+        return ev
 
     def initial_plan(self, bandwidth: float, now: float = 0.0) -> SplitPlan:
         self.ema_bandwidth = bandwidth

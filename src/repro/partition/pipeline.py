@@ -139,11 +139,13 @@ def stage_chain(
                 )
             )
         here.update(graph.segment_outputs(seg))
-    # the app's outputs must end on the device
+    # the app's outputs must end on the device — except carried state, which
+    # the donated step keeps server-resident (its D2H is a local handle)
+    carried_out = set(getattr(graph, "carried_out_tids", ()))
     down = sum(
         float(tensors[t].nbytes)
         for t in graph.output_tids
-        if t not in at_device
+        if t not in at_device and t not in carried_out
     )
     if down > 0:
         chain.append(Stage(RES_LINK, nbytes=down, label="down@out"))

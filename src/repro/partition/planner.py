@@ -292,6 +292,38 @@ def _single_cut_boundaries(
     return picked
 
 
+# exact-evaluation budget for carried-feasible boundaries: a stateless
+# prologue longer than this is evenly subsampled (extremes always kept)
+MAX_CARRIED_CUTS = 48
+
+
+def _carried_candidates(graph: SegmentGraph) -> List[SplitPlan]:
+    """Candidate plans for a *stateful* graph: only carried-feasible cuts.
+
+    The carried tensors pin the KV-touching core to a trailing server
+    segment with donated buffers (see ``SegmentGraph.plan_carried_feasible``),
+    so the feasible cut space collapses to device-prefix/server-suffix plans
+    whose boundary sits inside the stateless prologue — plus the full-server
+    endpoint, which is always feasible (and is the whole answer when the very
+    first op touches carried state).  Full-device is never feasible: the
+    state is server-resident by construction."""
+    n = graph.n_ops
+    candidates = [SplitPlan.full_server(n)]
+    limit = graph.carried_cut_limit()
+    bmax = min(limit, n - 1)          # b == n would be full-device
+    boundaries = list(range(1, bmax + 1))
+    if len(boundaries) > MAX_CARRIED_CUTS:
+        step = (len(boundaries) + MAX_CARRIED_CUTS - 1) // MAX_CARRIED_CUTS
+        boundaries = sorted(set(boundaries[::step]) | {1, bmax})
+    for b in boundaries:
+        candidates.append(
+            SplitPlan.from_placements(
+                [PLACE_DEVICE] * b + [PLACE_SERVER] * (n - b)
+            )
+        )
+    return candidates
+
+
 def plan_partition(
     graph: SegmentGraph,
     device: DeviceSpec,
@@ -305,44 +337,52 @@ def plan_partition(
 ) -> EvaluatedPlan:
     """Pick the best split of ``graph`` at the given operating point.
 
-    Returns the winning plan with its modeled cost attached; the candidate
-    set always contains both binary-offloading endpoints, so the result is
-    never worse than full-offload or device-only under the shared model."""
+    For a stateless graph the candidate set always contains both
+    binary-offloading endpoints, so the result is never worse than
+    full-offload or device-only under the shared model.  For a *stateful*
+    graph (loop-carried tensors pinned server-side) only carried-feasible
+    cuts are enumerated — device prefix inside the stateless prologue,
+    server suffix holding the donated carried buffers — and full-server is
+    the guaranteed fallback (device-only is infeasible by construction)."""
     config = config or PartitionConfig()
     power = power or PowerModel()
     n = graph.n_ops
-    wire_live = _wire_live_bytes(graph, input_wire_divisor)
 
-    candidates: List[SplitPlan] = [
-        SplitPlan.full_server(n),
-        SplitPlan.full_device(n),
-    ]
-    # the DP generates candidate *shapes*; throughput shares latency's costs
-    # (a per-op "period" is not decomposable) — the exact re-evaluation below
-    # scores every candidate under the true objective either way
-    dp_objective = (
-        "latency" if config.objective == "throughput" else config.objective
-    )
-    candidates.append(
-        SplitPlan.from_placements(
-            _dp_placements(
-                graph, device, server, bandwidth_bytes_per_s, rtt_s, power,
-                dp_objective, wire_live,
-            )
-        )
-    )
-    for orient, b in _single_cut_boundaries(
-        graph, device, server, bandwidth_bytes_per_s, rtt_s, wire_live,
-        config.single_cut_candidates,
-    ):
-        first, second = (
-            (PLACE_DEVICE, PLACE_SERVER)
-            if orient == "DS"
-            else (PLACE_SERVER, PLACE_DEVICE)
+    if graph.is_stateful:
+        candidates = _carried_candidates(graph)
+    else:
+        wire_live = _wire_live_bytes(graph, input_wire_divisor)
+        candidates = [
+            SplitPlan.full_server(n),
+            SplitPlan.full_device(n),
+        ]
+        # the DP generates candidate *shapes*; throughput shares latency's
+        # costs (a per-op "period" is not decomposable) — the exact
+        # re-evaluation below scores every candidate under the true
+        # objective either way
+        dp_objective = (
+            "latency" if config.objective == "throughput" else config.objective
         )
         candidates.append(
-            SplitPlan.from_placements([first] * b + [second] * (n - b))
+            SplitPlan.from_placements(
+                _dp_placements(
+                    graph, device, server, bandwidth_bytes_per_s, rtt_s,
+                    power, dp_objective, wire_live,
+                )
+            )
         )
+        for orient, b in _single_cut_boundaries(
+            graph, device, server, bandwidth_bytes_per_s, rtt_s, wire_live,
+            config.single_cut_candidates,
+        ):
+            first, second = (
+                (PLACE_DEVICE, PLACE_SERVER)
+                if orient == "DS"
+                else (PLACE_SERVER, PLACE_DEVICE)
+            )
+            candidates.append(
+                SplitPlan.from_placements([first] * b + [second] * (n - b))
+            )
 
     best: Optional[EvaluatedPlan] = None
     seen: set = set()

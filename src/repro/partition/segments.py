@@ -29,7 +29,7 @@ so the modeled optimum and the simulated execution can never disagree.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -255,14 +255,44 @@ def tensor_versions(
 
 
 class SegmentGraph:
-    """The planner's view of one recorded IOS."""
+    """The planner's view of one recorded IOS.
 
-    def __init__(self, calls, carried_input_ordinals: Sequence[int] = ()):
+    ``carried_pairs`` (the ``(h2d_ordinal, d2h_ordinal)`` loop-carried pairs
+    from :func:`repro.core.opseq.detect_loop_carried`) makes the graph
+    *stateful*: the carried uploads are tagged ``PRODUCER_CARRIED`` (server-
+    pinned, never on the wire) and the paired downloads are tracked as
+    ``carried_out_tids`` — the tensors the donated step executable updates in
+    place, which therefore never downlink either.  A stateful graph also
+    constrains cut *feasibility*: every op touching carried state must land
+    in the trailing server segment (see :meth:`carried_cut_limit` /
+    :meth:`plan_carried_feasible`), because a device placement of a carried
+    consumer would have to download the server-resident state every round,
+    forfeiting the O(1) stateful-replay win."""
+
+    def __init__(
+        self,
+        calls,
+        carried_input_ordinals: Sequence[int] = (),
+        carried_pairs: Sequence[Tuple[int, int]] = (),
+    ):
+        self.carried_pairs = tuple(
+            (int(i), int(j)) for i, j in carried_pairs
+        )
+        if self.carried_pairs and not carried_input_ordinals:
+            carried_input_ordinals = [i for i, _ in self.carried_pairs]
         self.ops, self.tensors, self.input_tids, self.output_tids = (
             tensor_versions(calls, carried_input_ordinals)
         )
         self.carried_tids = frozenset(
             t.tid for t in self.tensors if t.is_carried
+        )
+        # pair-ordered carried endpoints: the h2d-side tids (state as the app
+        # uploads it) and the d2h-side tids (state as the step produces it)
+        self.carried_in_tids = tuple(
+            self.input_tids[i] for i, _ in self.carried_pairs
+        )
+        self.carried_out_tids = tuple(
+            self.output_tids[j] for _, j in self.carried_pairs
         )
         self.n_ops = len(self.ops)
         if self.n_ops == 0:
@@ -288,6 +318,42 @@ class SegmentGraph:
                 self.writes[t.producer] += (t.tid,)
 
     # ------------------------------------------------------------------
+    @property
+    def is_stateful(self) -> bool:
+        return bool(self.carried_tids)
+
+    def carried_cut_limit(self) -> Optional[int]:
+        """The largest boundary ``b`` such that a device-prefix [0, b) /
+        server-suffix [b, n) cut keeps every carried-touching op server-side:
+        the index of the first op that consumes carried state or produces the
+        updated state.  ``None`` for a stateless graph (unconstrained);
+        ``0`` when the very first op touches carried state (no feasible
+        device prefix — the planner then returns the full-server endpoint)."""
+        if not self.carried_tids:
+            return None
+        touching: List[int] = []
+        for tid in self.carried_tids:
+            touching.extend(
+                k for k in self.tensors[tid].consumers if k < self.n_ops
+            )
+        for tid in self.carried_out_tids:
+            p = self.tensors[tid].producer
+            if p >= 0:
+                touching.append(p)
+        return min(touching, default=0)
+
+    def plan_carried_feasible(self, plan: "SplitPlan") -> bool:
+        """A stateful graph admits a plan iff its trailing segment is
+        server-placed and starts at or before the first carried-touching op —
+        so the whole carried region lives inside one stateful server suffix
+        whose donated buffers hold the state.  Stateless graphs admit any
+        plan."""
+        limit = self.carried_cut_limit()
+        if limit is None:
+            return True
+        last = plan.segments[-1]
+        return last.placement == PLACE_SERVER and last.start <= limit
+
     def live_bytes(self) -> List[float]:
         """``live[b]`` = bytes of non-param tensors crossing boundary ``b``
         (between op ``b-1`` and op ``b``), for ``b`` in ``0..n_ops``.  This is
@@ -575,8 +641,14 @@ def compute_schedule(
     # The replay engine pays these at the actual D2H records (and its live
     # link accumulates the real ingress bytes there), so it asks us to model
     # the locality flags only — double-charging the shared ingress otherwise.
+    # Carried outputs never downlink: the donated step updates them in place
+    # server-side and the client answers their D2H with a stable local handle.
+    carried_out = set(getattr(graph, "carried_out_tids", ()))
     down = 0.0
     for tid in graph.output_tids:
+        if tid in carried_out:
+            sched.output_local.append(True)
+            continue
         local = tid in at_device
         sched.output_local.append(local)
         if not local and include_output_downlink:

@@ -168,6 +168,10 @@ class ReplayBatcher:
         self._digest_cache: Dict[str, Tuple[Any, Tuple]] = {}
         # padded-vmap bookkeeping: raw widths served per padded cache key
         self._vmap_widths_served: Dict[str, set] = {}
+        # cache claims held for the current round: derived-entry use pins the
+        # base program so size-aware eviction cannot purge it (and its
+        # derived executables) while the round is still executing/claiming
+        self._round_claims: List[str] = []
         self.batches_executed = 0
         self.batched_replays = 0     # submissions served from a batch
         self.solo_replays = 0        # submissions that fell back to solo
@@ -198,6 +202,36 @@ class ReplayBatcher:
             else {}
         )
         self._seg_groups = {}
+        # pin the bases behind this round's *derived* executions (``fp|plan``
+        # split groups, server-segment batches of segmented programs) for the
+        # round's duration — eviction must not purge a base whose derived
+        # executable an in-flight group is still claiming.  Plain whole-
+        # program fingerprints are not claimed: their groups hold direct
+        # references, and pinning every base would starve admission for
+        # co-tenants locking new models mid-round.  ``end_round`` releases
+        # the claims when the round completes (begin_round re-releases
+        # defensively for drivers that never call it); vmap batches add
+        # theirs at execution time.
+        cache = self.server.replay_cache
+        if cache is not None and hasattr(cache, "claim"):
+            self.end_round()
+            for key in self._pending:
+                if "|" in key or "#" in key:
+                    cache.claim(key)
+                    self._round_claims.append(key)
+            for key in self._seg_pending:
+                cache.claim(f"{key[0]}|seg")
+                self._round_claims.append(f"{key[0]}|seg")
+
+    def end_round(self) -> None:
+        """Release the current round's cache claims — the in-flight derived
+        executables have all been claimed by their members, so the bases are
+        fair eviction game again.  Idempotent."""
+        cache = self.server.replay_cache
+        if cache is not None and hasattr(cache, "release"):
+            for key in self._round_claims:
+                cache.release(key)
+        self._round_claims = []
 
     def _wire_digest(self, client_id: str) -> Optional[Tuple]:
         """The cached wire-input shape/dtype digest of one client's bound
@@ -365,16 +399,34 @@ class ReplayBatcher:
         if not members[0][1] and not program.is_stateful:
             return None  # no mapped axis to batch over
         width = len(members)
+        # every bail-out below must happen BEFORE the padded-lane/compile
+        # stats update: an aborted vmap batch falls back to the per-client
+        # loop, where no padded lane ever executes and no width was served —
+        # counting them would inflate the padding accounting
+        states: List[List[Any]] = []
+        if program.is_stateful:
+            for cl, _ in members:
+                st = self.server.context(cl.client_id).replay.carried_state
+                if st is None:
+                    return None
+                states.append(st)
         # pad to the next power of two: one compiled executable serves every
         # group width in (padded/2, padded], so a fingerprint needs O(log N)
         # batched executables instead of one per width.  Padded lanes
-        # replicate lane 0 (any valid data — their outputs are discarded).
+        # replicate lane 0 (any valid data — their outputs are discarded,
+        # and only the ``width`` real lanes are billed: the group's modeled
+        # occupancy is ``batched_compute_seconds(device, width)``).
         padded = _padded_width(width)
         key = f"{fp}#vmap{padded}"
         cache = self.server.replay_cache
         batched: Optional[BatchedReplayProgram] = (
             cache.get(key) if cache is not None else None
         )
+        if cache is not None and hasattr(cache, "claim"):
+            # the batch executes this derived entry now: its base must not be
+            # evicted (purging the derived executable with it) mid-round
+            cache.claim(key)
+            self._round_claims.append(key)
         compiled_now = batched is None or batched.base is not program
         if compiled_now:
             batched = program.build_batched(padded)
@@ -397,12 +449,6 @@ class ReplayBatcher:
             for k in range(len(members[0][1]))
         ]
         if program.is_stateful:
-            states = []
-            for cl, _ in members:
-                st = self.server.context(cl.client_id).replay.carried_state
-                if st is None:
-                    return None
-                states.append(st)
             stacked_state = [
                 jnp.stack([st[k] for st in states] + [states[0][k]] * pad)
                 for k in range(len(states[0]))
@@ -559,10 +605,15 @@ class RRTOEdgeServer:
                             (cl.ios_fp, seg.start, seg.end), []
                         ).append(cid)
         self.batcher.begin_round(entries, seg_entries)
-        return {
-            cid: self.sessions[cid].infer(*inputs)
-            for cid, inputs in inputs_by_client.items()
-        }
+        try:
+            return {
+                cid: self.sessions[cid].infer(*inputs)
+                for cid, inputs in inputs_by_client.items()
+            }
+        finally:
+            # the round is over: its claims must not outlive it, or the
+            # claimed bases would stay pinned through every idle gap
+            self.batcher.end_round()
 
     # ------------------------------------------------------------------
     def save_cache(self, path: str) -> int:

@@ -100,6 +100,14 @@ class ReplayCache:
         self._entries: "OrderedDict[str, ReplayProgram]" = OrderedDict()
         self._nbytes: Dict[str, int] = {}
         self._pinned: set = set()
+        # transient claims: base fingerprint -> refcount.  A claim on a
+        # *derived* key (``fp|plan`` segmented program, ``fp#vmap<n>``
+        # batched executable) pins its base program for the claim's lifetime
+        # — an in-flight batch round must not have its base evicted out from
+        # under a derived executable it is executing (the derived entry would
+        # be purged with it, and the next adopter would recompile and break
+        # program-identity sharing mid-round).
+        self._claims: Dict[str, int] = {}
         # fingerprints known from a persisted cache file but whose programs
         # have not been recompiled since the restart: metadata only
         self._known: Dict[str, Dict[str, Any]] = {}
@@ -195,8 +203,28 @@ class ReplayCache:
         self._pinned.discard(fingerprint)
         self._evict(keep="")
 
+    def claim(self, key: str) -> None:
+        """Pin ``key``'s *base* fingerprint for the duration of an in-flight
+        use (a batch round executing a derived ``fp|plan`` / ``fp#vmap``
+        executable, a pipelined stream executor driving a segmented program):
+        eviction skips the base — and therefore never purges the claimed
+        derived entry with it — until the matching :meth:`release`.  Claims
+        nest (refcounted)."""
+        base = base_fingerprint(key)
+        self._claims[base] = self._claims.get(base, 0) + 1
+
+    def release(self, key: str) -> None:
+        base = base_fingerprint(key)
+        n = self._claims.get(base, 0) - 1
+        if n <= 0:
+            self._claims.pop(base, None)
+        else:
+            self._claims[base] = n
+        self._evict(keep="")
+
     def is_pinned(self, key: str) -> bool:
-        return base_fingerprint(key) in self._pinned
+        base = base_fingerprint(key)
+        return base in self._pinned or self._claims.get(base, 0) > 0
 
     @property
     def bytes_total(self) -> int:

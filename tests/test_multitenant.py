@@ -240,6 +240,112 @@ class TestPaddedVmapWidths:
             2, 2, 4, 4, 8, 8, 16,
         ]
 
+    def test_padded_lanes_never_inflate_energy_or_occupancy(self):
+        """A width-3 group executes through a padded width-4 vmap
+        executable, but billing is by REAL lanes: per-client energy and the
+        group's GPU occupancy are identical to the unpadded per-client loop
+        of the same width."""
+        model, x = make_mlp()
+
+        def run(enable_vmap):
+            edge = RRTOEdgeServer(execute=True)
+            edge.batcher.enable_vmap = enable_vmap
+            for _ in range(3):
+                edge.connect(model)
+            ids = list(edge.sessions)
+            for _ in range(4):
+                edge.run_round({c: (x,) for c in ids})
+            assert all(
+                s.client.mode == "replaying"
+                for s in edge.sessions.values()
+            )
+            busy0 = edge.server.busy_seconds
+            results = edge.run_round({c: (x,) for c in ids})
+            return edge, results, edge.server.busy_seconds - busy0
+
+        vmap_edge, vmap_res, vmap_busy = run(True)
+        loop_edge, loop_res, loop_busy = run(False)
+        assert vmap_edge.batcher.vmap_padded_lanes >= 1  # width 3 -> 4
+        assert loop_edge.batcher.vmap_padded_lanes == 0
+        # occupancy billed at the real width on both paths
+        assert vmap_busy == pytest.approx(loop_busy, rel=1e-12)
+        program = vmap_edge.server.context("c0").replay.program
+        assert vmap_busy == pytest.approx(
+            program.batched_compute_seconds(vmap_edge.server.device, 3),
+            rel=1e-12,
+        )
+        # ...and per-client energy is identical: the masked lane exists only
+        # inside the compiled executable, never in the accounting
+        for cid in vmap_res:
+            assert vmap_res[cid].joules == pytest.approx(
+                loop_res[cid].joules, rel=1e-12
+            )
+
+    def test_aborted_vmap_batch_leaves_padding_stats_clean(self):
+        """A group that bails out of the vmap path (a stateful member whose
+        carried state is not seeded) falls back to the per-client loop: no
+        padded lanes or avoided compiles may be recorded for the aborted
+        batch — they would inflate the padding accounting for lanes that
+        never executed."""
+
+        def make_rnn():
+            rng = np.random.default_rng(0)
+            params = {"w": rng.normal(0, 0.1, (8, 8)).astype(np.float32)}
+
+            def apply(p, x, state):
+                new_state = jnp.tanh(state @ p["w"] + x)
+                return [new_state.sum(axis=1), new_state]
+
+            x = rng.normal(0, 1, (2, 8)).astype(np.float32)
+            state0 = np.zeros((2, 8), np.float32)
+            return OffloadableModel("rnn", apply, params, (x, state0)), x, state0
+
+        model, x, state0 = make_rnn()
+        edge = RRTOEdgeServer(execute=True)
+        for _ in range(3):
+            edge.connect(model)
+        ids = list(edge.sessions)
+        states = {c: state0 for c in ids}
+        for _ in range(5):
+            results = edge.run_round(
+                {c: (x, states[c]) for c in ids}
+            )
+            for c in ids:
+                states[c] = results[c].outputs[1]
+        assert all(
+            s.client.mode == "replaying" for s in edge.sessions.values()
+        )
+        padded0 = edge.batcher.vmap_padded_lanes
+        avoided0 = edge.batcher.vmap_compiles_avoided
+        batches0 = edge.batcher.vmap_batches
+        # sabotage one member's seeded state: the vmap path must bail before
+        # any padding accounting and fall back to the per-client loop
+        saved = edge.server.context(ids[-1]).replay.carried_state
+        edge.server.context(ids[-1]).replay.carried_state = None
+        try:
+            edge.batcher.begin_round(
+                {
+                    edge.sessions[ids[0]].client.replay_key: [
+                        (
+                            edge.sessions[c].client,
+                            edge.sessions[c].replay_wire_inputs(
+                                (x, states[c])
+                            ),
+                        )
+                        for c in ids
+                    ]
+                }
+            )
+            group = edge.batcher._execute_group(
+                edge.sessions[ids[0]].client.replay_key, edge.clock.t
+            )
+        finally:
+            edge.server.context(ids[-1]).replay.carried_state = saved
+        assert group is not None and group.outs is None  # loop fallback
+        assert edge.batcher.vmap_batches == batches0
+        assert edge.batcher.vmap_padded_lanes == padded0
+        assert edge.batcher.vmap_compiles_avoided == avoided0
+
 
 class TestDigestCache:
     def test_digest_cached_per_bound_replay(self):

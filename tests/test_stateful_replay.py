@@ -210,6 +210,25 @@ class TestPayloadRetention:
             for c in calls[-PAYLOAD_RETENTION_CALLS:]
         )
 
+    def test_long_ios_keeps_detection_horizon(self, monkeypatch):
+        """A framework-noise-heavy app can blow through the call-count
+        payload horizon inside ~2 inferences; the trailing *transfer*
+        payloads must survive anyway or loop-carried detection silently
+        fails (regression: detection needs ~3 repeats of h2d/d2h values)."""
+        import repro.core.engine as eng
+
+        monkeypatch.setattr(eng, "PAYLOAD_RETENTION_CALLS", 40)
+        monkeypatch.setattr(eng, "PAYLOAD_RETENTION_TRANSFERS", 16)
+        model, x, state0 = make_rnn()
+        sess = OffloadSession(model, "rrto", min_repeats=3)
+        sess.load()
+        drive(sess, x, state0, 5)
+        ios = sess.client.ios
+        assert ios is not None
+        # the IOS is longer than the call horizon, yet the pairs were found
+        assert len(ios) * 2 > 40
+        assert ios.carried_pairs == ((1, 1),)
+
     def test_detection_survives_in_place_mutation(self):
         """An app that mutates a downloaded output in place before
         re-uploading it must NOT be classified loop-carried (the recorded
@@ -296,7 +315,11 @@ class TestPartitionCarriedAccounting:
         assert any(a - b >= state_bytes for a, b in zip(lp, lc))
         assert all(a >= b for a, b in zip(lp, lc))
 
-    def test_stateful_client_skips_partition(self):
+    def test_stateful_client_keeps_carried_feasible_planner(self):
+        """A stateful IOS no longer disables the planner: the client plans
+        over a carried-aware graph, any installed plan is carried-feasible
+        (trailing server segment holding every state-touching op), and the
+        replayed outputs stay correct."""
         from repro.partition.planner import PartitionConfig
 
         model, x, state0 = make_rnn()
@@ -304,10 +327,21 @@ class TestPartitionCarriedAccounting:
             model, "rrto", min_repeats=3, partition=PartitionConfig()
         )
         sess.load()
-        hist, _ = drive(sess, x, state0, 8)
+        steps = 10
+        hist, _ = drive(sess, x, state0, steps)
         assert hist[-1].mode == "replaying"
-        assert sess.client.split_plan is None
-        assert sess.client.replanner is None
+        client = sess.client
+        assert client.replanner is not None
+        assert client.replanner.graph.is_stateful
+        plan = client.replanner.current.plan
+        assert client.replanner.graph.plan_carried_feasible(plan)
+        if client.split_plan is not None:
+            assert not client.split_plan.is_full_device
+        refs = reference_trajectory(model, x, state0, steps)
+        for res, ref in zip(hist, refs):
+            np.testing.assert_allclose(
+                np.asarray(res.outputs[0]), ref, rtol=1e-6, atol=1e-6
+            )
 
 
 class TestStatefulPersistence:
@@ -486,6 +520,59 @@ class TestSizeAwareCache:
         cache.put("fpB", self._P(80))   # evicts vmap first, then fpA
         assert "fpA" not in cache and "fpA#vmap2" not in cache
         assert "fpB" in cache
+
+    def test_claimed_derived_entry_pins_base(self):
+        """A claim on a derived key (an in-flight batch round executing a
+        vmap/segmented executable) pins the BASE entry: eviction pressure
+        must not purge the base — and the derived entry with it — until the
+        round releases the claim."""
+        cache = ReplayCache(capacity=8, capacity_bytes=1000)
+        cache.put("fp", self._P(400))
+        cache.claim("fp#vmap4")              # round starts executing
+        cache.put("fp#vmap4", self._P(300))
+        cache.put("other", self._P(400))     # over budget
+        assert "fp" in cache and "fp#vmap4" in cache  # base survived
+        cache.release("fp#vmap4")            # round over: fp evictable again
+        cache.put("other2", self._P(400))    # derived entries evict first
+        assert "fp#vmap4" not in cache and "fp" in cache
+        cache.put("other3", self._P(400))    # now the base is the LRU victim
+        assert "fp" not in cache
+
+    def test_claims_nest_and_cover_stream_executor_keys(self):
+        """Claims refcount, and the pipelined stream executor's derived
+        ``fp|plan`` key pins the same base as a vmap key would."""
+        cache = ReplayCache(capacity=8, capacity_bytes=800)
+        cache.put("fp", self._P(400))
+        cache.claim("fp|D0:1|S1:4")          # stream executor installed
+        cache.claim("fp#vmap2")              # plus an in-flight batch
+        cache.put("big", self._P(700))       # pressure
+        assert "fp" in cache                 # pinned by both claims
+        cache.release("fp#vmap2")
+        cache.put("big", self._P(700))
+        assert "fp" in cache                 # stream claim still held
+        cache.release("fp|D0:1|S1:4")
+        cache.put("big", self._P(700))
+        assert "fp" not in cache             # all claims gone
+
+    def test_batcher_round_claims_protect_in_flight_bases(self):
+        """Integration: while a round with a derived-key group is in flight,
+        cache pressure cannot evict the base; the next begin_round releases
+        the claims."""
+        from repro.core.costmodel import GTX_2080TI
+        from repro.core.engine import OffloadServer
+        from repro.serving.multitenant import ReplayBatcher
+
+        cache = ReplayCache(capacity=8, capacity_bytes=1000)
+        server = OffloadServer(GTX_2080TI, execute=False, replay_cache=cache)
+        batcher = ReplayBatcher(server)
+        cache.put("fp", self._P(400))
+        batcher.begin_round({"fp|D0:2|S2:9": []})
+        cache.put("other", self._P(400))
+        cache.put("other2", self._P(400))     # pressure: 1200 > 1000
+        assert "fp" in cache                  # claimed base survived
+        batcher.begin_round({})               # round over, claims released
+        cache.put("other3", self._P(400))
+        assert "fp" not in cache
 
 
 class TestBatcherInputDigest:
