@@ -24,6 +24,7 @@ def smoke() -> None:
     failed where, instead of dying on the first assert."""
     from benchmarks import (
         decode_scaling,
+        fleet_scaling,
         partition_sweep,
         pipeline_overlap,
         stateful_split,
@@ -121,6 +122,25 @@ def smoke() -> None:
     except Exception as e:  # noqa: BLE001
         failures.append(("stateful_split", "crashed", repr(e)))
 
+    print("== fleet_scaling (smoke) ==", file=sys.stderr, flush=True)
+    try:
+        # the tail guard: hedged dispatch must cut the injected-straggler
+        # p99 to <= 0.7x the no-hedge fleet at <= 1.1x its mean, with every
+        # hedge-created backup adopting the replicated fingerprint and a
+        # mid-stream migration staying bitwise-equal
+        fleet_points, fleet_checks = fleet_scaling.run(smoke=True)
+        record("fleet_scaling", fleet_checks)
+        hedged, plain = fleet_points
+        csv_rows.append((
+            "smoke_fleet_scaling",
+            hedged.p99_ms * 1e3,
+            f"p99_vs_nohedge={hedged.p99_ms / max(plain.p99_ms, 1e-9):.2f}x;"
+            f"mean_vs_nohedge={hedged.mean_ms / max(plain.mean_ms, 1e-9):.2f}x;"
+            f"backups_adopted={hedged.backups_adopted}/{hedged.backup_sessions}",
+        ))
+    except Exception as e:  # noqa: BLE001
+        failures.append(("fleet_scaling", "crashed", repr(e)))
+
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.2f},{derived}")
@@ -128,7 +148,7 @@ def smoke() -> None:
     print("== smoke summary ==", file=sys.stderr, flush=True)
     benchmarks_run = (
         "partition_sweep", "tab4_rpc_gpu_util", "decode_scaling",
-        "pipeline_overlap", "stateful_split",
+        "pipeline_overlap", "stateful_split", "fleet_scaling",
     )
     failed_names = {b for b, _, _ in failures}
     for b in benchmarks_run:
@@ -152,6 +172,7 @@ def main() -> None:
         fig10_kapao,
         fig11_semi_rrto,
         fig12_model_zoo,
+        fleet_scaling,
         multiclient_scaling,
         opseq_search_perf,
         partition_sweep,
@@ -292,6 +313,17 @@ def main() -> None:
         f"bw={interior.bandwidth_mbps:g}Mbps;"
         f"vs_binary={interior.planner_s / min(interior.full_offload_s, interior.device_only_s):.2f}x;"
         f"guards={all(ss_checks.values())}",
+    ))
+
+    print("== fleet_scaling ==", file=sys.stderr, flush=True)
+    fleet_points, fleet_checks = fleet_scaling.run()
+    hedged, plain = fleet_points
+    rows.append((
+        "fleet_scaling",
+        hedged.p99_ms * 1e3,
+        f"p99_vs_nohedge={hedged.p99_ms / max(plain.p99_ms, 1e-9):.2f}x;"
+        f"mean_vs_nohedge={hedged.mean_ms / max(plain.mean_ms, 1e-9):.2f}x;"
+        f"guards={all(fleet_checks.values())}",
     ))
 
     print("== roofline ==", file=sys.stderr, flush=True)

@@ -1154,6 +1154,60 @@ class OffloadServer:
         for addr, val in zip(bound.d2h_addrs, outs):
             ctx.env[addr] = val
 
+    # -- carried-state migration --------------------------------------------
+    def export_carried_state(
+        self, client_id: str = DEFAULT_CLIENT
+    ) -> Optional[List[np.ndarray]]:
+        """Snapshot one client's live server-resident carried state (the
+        donated KV cache advanced in place by the stateful step executable)
+        as host arrays — the wire format of a replica-to-replica session
+        migration.  The split binding takes precedence over the whole-program
+        one (when a split plan is active it owns the live state, the same
+        source order as ``RRTOClient._carried_state_source``).  Returns None
+        when the client has no stateful binding or no seeded state yet."""
+        ctx = self.contexts.get(client_id)
+        if ctx is None:
+            return None
+        bound = ctx.split or ctx.replay
+        if bound is None or bound.carried_state is None:
+            return None
+        return [np.asarray(v) for v in bound.carried_state]
+
+    def import_carried_state(
+        self, client_id: str, state: List[Any]
+    ) -> None:
+        """Install an exported carried-state snapshot into this client's
+        bound replay — the receiving half of a migration.  The binding's
+        resident state is replaced and the env's carried buffers re-aliased
+        (the in-process precedent is ``_install_plan``'s whole-program <->
+        segmented handoff, which re-seeds the adopting binding from the env),
+        so the next stateful step — and any post-fallback recording-phase
+        catch-up — runs from exactly the migrated state."""
+        ctx = self.context(client_id)
+        bound = ctx.split or ctx.replay
+        if bound is None or not bound.program.is_stateful:
+            raise ValueError(
+                f"client {client_id!r} has no stateful replay binding to "
+                "import carried state into"
+            )
+        pairs = bound.program.carried_pairs
+        if len(state) != len(pairs):
+            raise ValueError(
+                f"carried-state arity mismatch: {len(state)} tensors for "
+                f"{len(pairs)} carried pairs"
+            )
+        bound.carried_state = [jnp.asarray(v) for v in state]
+        if isinstance(bound, BoundSegmentedReplay):
+            # segmented binding: the carried buffers live at the graph's
+            # carried-output tensor addresses (what seed_carried reads back)
+            graph = bound.graph
+            for t, val in zip(graph.carried_out_tids, bound.carried_state):
+                ctx.env[graph.tensors[t].addr] = val
+        else:
+            for (i, j), val in zip(pairs, bound.carried_state):
+                ctx.env[bound.h2d_addrs[i]] = val
+                ctx.env[bound.d2h_addrs[j]] = val
+
     def occupy(self, compute_seconds: float, start_t: float) -> float:
         """Reserve the shared GPU queue; returns the completion time."""
         self.busy_until = max(self.busy_until, start_t) + compute_seconds

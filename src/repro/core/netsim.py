@@ -50,6 +50,25 @@ def synth_bandwidth_trace(
 
 
 @dataclasses.dataclass
+class SharedBackhaul:
+    """Aggregation-layer uplink shared by every edge node at one site.
+
+    A replicated fleet terminates each client radio at one of several edge
+    boxes, but the boxes themselves hang off a single site uplink; once
+    enough nodes serve concurrently, the *backhaul* — not any one node's
+    NIC — becomes the bottleneck.  Same fair-share model as
+    :class:`ServerIngress`, one level up: each of ``active_nodes`` nodes
+    gets ``capacity_bytes_per_s / active_nodes``."""
+
+    capacity_bytes_per_s: float = 10e9 / 8.0    # 10-gigabit site uplink
+    active_nodes: int = 1
+    bytes_total: float = 0.0
+
+    def share(self) -> float:
+        return self.capacity_bytes_per_s / max(1, self.active_nodes)
+
+
+@dataclasses.dataclass
 class ServerIngress:
     """Shared edge-server ingress capacity (AP backhaul / server NIC).
 
@@ -60,16 +79,51 @@ class ServerIngress:
     links gets ``capacity_bytes_per_s / active_clients``, and a client's
     effective bandwidth is the min of its own link and that share.  The
     multi-tenant harness updates ``active_clients`` as sessions join/leave.
-    """
+
+    ``backhaul`` optionally chains this node's ingress behind a site-level
+    :class:`SharedBackhaul`: the effective share is then additionally capped
+    by the backhaul's per-node fair share (multi-node fleets, see
+    :func:`multi_node_ingress`)."""
 
     capacity_bytes_per_s: float = 1e9 / 8.0     # gigabit backhaul
     active_clients: int = 1
     # aggregate traffic through the shared link, BOTH directions (every
     # transfer_time call on an attached client link accumulates here)
     bytes_total: float = 0.0
+    backhaul: Optional[SharedBackhaul] = None
 
     def share(self) -> float:
-        return self.capacity_bytes_per_s / max(1, self.active_clients)
+        share = self.capacity_bytes_per_s / max(1, self.active_clients)
+        if self.backhaul is not None:
+            share = min(share, self.backhaul.share())
+        return share
+
+    def account(self, nbytes: float) -> None:
+        """Bill a transfer through this node (and the site backhaul)."""
+        self.bytes_total += nbytes
+        if self.backhaul is not None:
+            self.backhaul.bytes_total += nbytes
+
+
+def multi_node_ingress(
+    n_nodes: int,
+    node_capacity_bytes_per_s: float = 1e9 / 8.0,
+    backhaul_bytes_per_s: float = 10e9 / 8.0,
+) -> List[ServerIngress]:
+    """Per-node ingress pipes for an ``n_nodes`` edge fleet behind one
+    shared site backhaul: each node fair-shares its own NIC among its
+    clients AND the site uplink among the nodes."""
+    if n_nodes < 1:
+        raise ValueError(f"need at least one node, got {n_nodes}")
+    backhaul = SharedBackhaul(
+        capacity_bytes_per_s=backhaul_bytes_per_s, active_nodes=n_nodes
+    )
+    return [
+        ServerIngress(
+            capacity_bytes_per_s=node_capacity_bytes_per_s, backhaul=backhaul
+        )
+        for _ in range(n_nodes)
+    ]
 
 
 @dataclasses.dataclass
@@ -110,7 +164,7 @@ class NetworkModel:
         bw = self.bandwidth_at(t)
         if self.ingress is not None:
             bw = min(bw, self.ingress.share())
-            self.ingress.bytes_total += nbytes
+            self.ingress.account(nbytes)
         # a zero-bandwidth interval (obstructed radio, saturated ingress)
         # stalls the transfer for a long-but-finite interval instead of
         # dividing by zero; the trace recovers on later samples

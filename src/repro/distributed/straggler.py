@@ -8,6 +8,14 @@ takes the first completion (cancelling the loser).  Classic hedged-requests
 (Dean & Barroso, "The Tail at Scale"), implemented against a simulated clock
 so tests are deterministic.
 
+The router is backend-agnostic: a *completion source* maps ``(replica,
+request index)`` to the completion latency (or ``None`` for a failure).  The
+default source calls :meth:`ReplicaModel.latency` — the standalone latency
+simulation — while the fleet layer (``repro.serving.fleet``) plugs in real
+:class:`~repro.core.engine.BoundReplay` execution on live edge replicas, so
+the same deadline/hedging math drives both the unit simulation and the
+full serving path.
+
 For the training path, ``SkipAndRescale`` implements the standard
 drop-straggler collective policy: a step proceeds when >= quorum of workers
 contributed; gradient contributions are rescaled by the participation count.
@@ -15,7 +23,23 @@ contributed; gradient contributions are rescaled by the participation count.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from collections import deque
+from typing import Callable, Deque, List, Optional, Tuple
+
+# adaptive-deadline estimation window: the deadline tracks the *recent*
+# latency distribution, so the observation buffer is bounded — an unbounded
+# history both leaks memory over a long-lived stream and freezes the deadline
+# on stale pre-warmup samples
+OBSERVATION_WINDOW = 256
+
+
+class NoHealthyReplicaError(RuntimeError):
+    """Every candidate replica is marked failed — nothing can serve."""
+
+
+class AllReplicasFailedError(NoHealthyReplicaError):
+    """A dispatched request produced no completion: the primary failed and
+    every hedge candidate failed too."""
 
 
 @dataclasses.dataclass
@@ -55,27 +79,53 @@ class HedgeStats:
 
 
 class HedgedRouter:
-    """Dispatch with speculative re-issue after an adaptive deadline."""
+    """Dispatch with speculative re-issue after an adaptive deadline.
+
+    ``replicas`` only need ``name`` and ``failed`` attributes; with the
+    default completion source they additionally need ``latency(req_idx)``
+    (the :class:`ReplicaModel` protocol).  ``completion_source(replica,
+    req_idx)`` returns the completion latency in seconds, or ``None`` when
+    the replica fails to complete the request."""
 
     def __init__(
         self,
         replicas: List[ReplicaModel],
         hedge_multiplier: float = 2.0,
         min_observations: int = 8,
+        window: int = OBSERVATION_WINDOW,
+        completion_source: Optional[
+            Callable[[ReplicaModel, int], Optional[float]]
+        ] = None,
     ):
+        if window < 1:
+            raise ValueError(f"observation window must be >= 1, got {window}")
         self.replicas = replicas
         self.hedge_multiplier = hedge_multiplier
         self.min_observations = min_observations
-        self._observed: List[float] = []
+        self.completion_source = completion_source
+        self._observed: Deque[float] = deque(maxlen=window)
         self.stats = HedgeStats()
         self._rr = 0
+
+    @property
+    def observed_count(self) -> int:
+        """Completions currently inside the deadline-estimation window
+        (bounded by ``window`` regardless of request count)."""
+        return len(self._observed)
+
+    def _complete(
+        self, replica: ReplicaModel, req_idx: int
+    ) -> Optional[float]:
+        if self.completion_source is not None:
+            return self.completion_source(replica, req_idx)
+        return replica.latency(req_idx)
 
     def _deadline(self) -> float:
         if len(self._observed) < self.min_observations:
             return float("inf") if not self._observed else (
                 self.hedge_multiplier * max(self._observed)
             )
-        xs = sorted(self._observed)[-256:]
+        xs = sorted(self._observed)
         median = xs[len(xs) // 2]
         return self.hedge_multiplier * median
 
@@ -84,35 +134,69 @@ class HedgedRouter:
             self._rr = (self._rr + 1) % len(self.replicas)
             if self._rr != exclude and not self.replicas[self._rr].failed:
                 return self._rr
-        raise RuntimeError("no healthy replica available")
+        raise NoHealthyReplicaError("no healthy replica available")
 
-    def dispatch(self, req_idx: int) -> Tuple[float, str]:
-        """Returns (completion latency, winner name)."""
-        primary_idx = self._pick(exclude=-1)
-        primary = self.replicas[primary_idx]
-        t_primary = primary.latency(req_idx)
+    def dispatch(
+        self,
+        req_idx: int,
+        *,
+        primary: Optional[int] = None,
+        completion: Optional[
+            Callable[[ReplicaModel, int], Optional[float]]
+        ] = None,
+        speculative: bool = True,
+    ) -> Tuple[float, str]:
+        """Returns (completion latency, winner name).
+
+        ``primary`` overrides round-robin primary selection (the fleet
+        router places by affinity); ``completion`` overrides the completion
+        source for this request.  ``speculative=False`` hedges only on
+        outright primary *failure*, never on a slow completion — the mode
+        for non-idempotent requests (a stateful replay step advances donated
+        server-resident state, so it must not execute twice)."""
+        complete = completion or self._complete
+        primary_idx = self._pick(exclude=-1) if primary is None else int(primary)
+        primary_rep = self.replicas[primary_idx]
+        t_primary = complete(primary_rep, req_idx)
         deadline = self._deadline()
         self.stats.requests += 1
 
-        hedged = t_primary is None or t_primary > deadline
+        hedged = t_primary is None or (speculative and t_primary > deadline)
         if not hedged:
             self._observed.append(t_primary)
             self.stats.primary_wins += 1
             self.stats.total_latency_s += t_primary
             self.stats.latencies.append(t_primary)
-            return t_primary, primary.name
+            return t_primary, primary_rep.name
+
+        try:
+            backup_idx = self._pick(exclude=primary_idx)
+        except NoHealthyReplicaError:
+            if t_primary is None:
+                raise AllReplicasFailedError(
+                    f"request {req_idx}: primary {primary_rep.name!r} failed "
+                    "and no healthy hedge candidate remains"
+                ) from None
+            # nowhere to hedge: the slow primary completion stands
+            self._observed.append(t_primary)
+            self.stats.primary_wins += 1
+            self.stats.total_latency_s += t_primary
+            self.stats.latencies.append(t_primary)
+            return t_primary, primary_rep.name
 
         self.stats.hedged += 1
-        backup_idx = self._pick(exclude=primary_idx)
         backup = self.replicas[backup_idx]
-        t_backup = backup.latency(req_idx)
+        t_backup = complete(backup, req_idx)
         candidates = []
         if t_primary is not None:
-            candidates.append((t_primary, primary.name))
+            candidates.append((t_primary, primary_rep.name))
         if t_backup is not None:
             candidates.append((deadline + t_backup, backup.name))
         if not candidates:
-            raise RuntimeError("both replicas failed")
+            raise AllReplicasFailedError(
+                f"request {req_idx}: both {primary_rep.name!r} and "
+                f"{backup.name!r} failed to complete"
+            )
         if t_primary is None:
             self.stats.failures_recovered += 1
         t, winner = min(candidates)

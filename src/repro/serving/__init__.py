@@ -11,6 +11,9 @@ Public API:
   state and cooperative round driver for arbitrary offloadable models.
 * :class:`~repro.serving.replay_cache.ReplayCache` — content-addressed LRU
   cache of compiled replay executables.
+* :class:`~repro.serving.fleet.EdgeFleet` — N replicated edge servers behind
+  a hedged, affinity-placing router with cache replication and carried-state
+  migration.
 """
 from repro.serving.engine import (
     GenerationResult,
@@ -18,11 +21,23 @@ from repro.serving.engine import (
     MultiClientServedLM,
     RRTOServedLM,
 )
+from repro.serving.fleet import (
+    EdgeFleet,
+    FleetClient,
+    FleetReplica,
+    FleetResult,
+    FleetStats,
+)
 from repro.serving.multitenant import ReplayBatcher, RRTOEdgeServer
 from repro.serving.replay_cache import CacheStats, ReplayCache
 
 __all__ = [
     "CacheStats",
+    "EdgeFleet",
+    "FleetClient",
+    "FleetReplica",
+    "FleetResult",
+    "FleetStats",
     "GenerationResult",
     "LocalServing",
     "MultiClientServedLM",

@@ -1,0 +1,539 @@
+"""Fleet-scale replicated serving: N edge replicas behind a hedged router.
+
+RRTO's record/replay serving has so far been grown against a single
+:class:`~repro.serving.multitenant.RRTOEdgeServer`; a real MEC deployment is
+multi-server, and at that scale user-visible behaviour is dominated by tail
+latency and replica failure, not steady-state throughput.  This module
+composes the existing single-box pieces into a replicated fleet:
+
+* **Placement** — :meth:`EdgeFleet.connect` places each client on a replica
+  by affinity (a replica already serving this model/fingerprint keeps
+  collecting its co-tenants, so the shared-cache and batched-replay wins
+  compound) with least-load as the tie-break.
+
+* **Hedged dispatch** — every request goes through a
+  :class:`~repro.distributed.straggler.HedgedRouter` whose completion source
+  executes the *real* replay on the chosen replica (the standalone
+  ``ReplicaModel`` latency simulation replaced by actual
+  :class:`~repro.core.engine.BoundReplay` /
+  :class:`~repro.core.engine.BoundSegmentedReplay` execution): if the
+  primary's completion latency exceeds the adaptive deadline — or the
+  primary is failed — the request re-dispatches to a backup replica and the
+  first completion wins.  Open-loop request streams ride the
+  :class:`~repro.core.netsim.EventTimeline` (:meth:`EdgeFleet.serve`).
+
+* **Cache replication** — validated IOS fingerprints travel between replicas
+  through the :meth:`~repro.serving.replay_cache.ReplayCache.save` /
+  :meth:`~repro.serving.replay_cache.ReplayCache.load` persistence layer
+  (the shared cache tier): a hedged request landing on a cold replica adopts
+  the replicated fingerprint after a *single* recorded inference instead of
+  re-running the full ``min_repeats`` Operator Sequence Search.
+
+* **Carried-state migration** — a stateful session's donated server-resident
+  state (the KV cache) migrates between replicas mid-stream on failure or
+  rebalance: the source exports the live state
+  (:meth:`~repro.core.engine.OffloadServer.export_carried_state`), the
+  device-memory namespace transfers over the site backhaul, the destination
+  rebinds the replay executable from the client's recorded calls (adopting
+  the replicated fingerprint) and imports the state — bitwise-identical
+  continuation, asserted by tests/test_fleet.py.  The in-process precedent
+  is ``RRTOClient._install_plan``'s whole-program <-> segmented state
+  handoff.
+
+Hedging discipline: a speculative re-dispatch re-executes the request, so it
+requires idempotence.  Stateless inference is idempotent (wire inputs fully
+determine outputs — the hedge winner's outputs are bitwise equal to the
+loser's).  A *stateful* replay step advances donated server-resident state
+and is not: stateful clients therefore hedge only on outright primary
+failure, where the step never executed, and the re-dispatch first migrates
+the session (with its carried state) to the backup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import GTX_2080TI, DeviceSpec
+from repro.core.engine import SimClock
+from repro.core.netsim import EventTimeline, SharedBackhaul, multi_node_ingress
+from repro.core.offload import InferenceResult, OffloadableModel, OffloadSession
+from repro.distributed.straggler import (
+    HedgedRouter,
+    NoHealthyReplicaError,
+)
+from repro.serving.multitenant import RRTOEdgeServer
+
+
+@dataclasses.dataclass
+class FleetReplica:
+    """One edge box in the fleet: a full multi-tenant edge server plus the
+    health / latency-injection knobs the fault-injection test layer drives.
+
+    ``slowdown`` adds injected completion latency (request index -> extra
+    seconds) on top of the measured inference wall time — modelling
+    preemptions and network hiccups on this box without perturbing the
+    underlying simulation.  ``failed=True`` makes the box stop completing
+    requests (dispatches observe ``None`` and hedge away)."""
+
+    name: str
+    edge: RRTOEdgeServer
+    failed: bool = False
+    slowdown: Callable[[int], float] = lambda i: 0.0
+
+    @property
+    def load(self) -> int:
+        return len(self.edge.sessions)
+
+
+@dataclasses.dataclass
+class FleetStats:
+    placements: int = 0
+    affinity_hits: int = 0
+    migrations: int = 0
+    migration_bytes: float = 0.0
+    cache_syncs: int = 0
+    replicated_fingerprints: int = 0
+    backup_sessions: int = 0
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """One completed request of an open-loop fleet stream."""
+
+    client_id: str
+    outputs: List[Any]
+    arrival_t: float
+    done_at: float
+    winner: str               # replica that served the winning completion
+
+    @property
+    def latency_seconds(self) -> float:
+        return self.done_at - self.arrival_t
+
+
+class FleetClient:
+    """One mobile client served by the fleet.
+
+    Holds the client's sessions per replica: a stateless client may hold a
+    primary session plus lazily-created backup sessions (hedge targets); a
+    stateful client holds exactly one session, which *migrates* between
+    replicas instead of forking — the donated carried state is single-home."""
+
+    def __init__(
+        self,
+        fleet: "EdgeFleet",
+        model: OffloadableModel,
+        client_id: str,
+        session: OffloadSession,
+        primary: str,
+        *,
+        min_repeats: int = 3,
+        stateful: bool = False,
+    ):
+        self.fleet = fleet
+        self.model = model
+        self.client_id = client_id
+        self.min_repeats = min_repeats
+        self.stateful = stateful
+        self.sessions: Dict[str, OffloadSession] = {primary: session}
+        self.primary = primary
+        self._req_idx = 0
+
+    @property
+    def session(self) -> OffloadSession:
+        """The session on the client's current primary replica."""
+        return self.sessions[self.primary]
+
+    def infer(self, *inputs) -> InferenceResult:
+        """Hedged inference; returns the winning replica's result."""
+        res, _, _ = self.dispatch(*inputs)
+        return res
+
+    def dispatch(self, *inputs) -> Tuple[InferenceResult, float, str]:
+        """One hedged request through the fleet router; returns
+        ``(winning result, completion latency, winner replica name)``.
+
+        The router's completion source runs the real replay on the chosen
+        replica and reports ``wall_seconds`` plus that replica's injected
+        slowdown; a failed replica reports no completion and the router
+        re-dispatches.  May raise
+        :class:`~repro.distributed.straggler.AllReplicasFailedError`."""
+        fleet = self.fleet
+        req = self._req_idx
+        self._req_idx += 1
+        results: Dict[str, InferenceResult] = {}
+
+        def complete(replica: FleetReplica, idx: int) -> Optional[float]:
+            res = self._execute_on(replica, inputs)
+            if res is None:
+                return None
+            results[replica.name] = res
+            return res.wall_seconds + max(0.0, replica.slowdown(idx))
+
+        # a live stateful session's replay step is non-idempotent (donated
+        # carried state advances server-side) — hedge it on failure only
+        latency, winner = fleet.router.dispatch(
+            req,
+            primary=fleet.replica_index(self.primary),
+            completion=complete,
+            speculative=not (self.stateful and self.session.client.stateful_replay),
+        )
+        if winner != self.primary and fleet.replica(self.primary).failed:
+            # the primary is dead: re-place this client on the winner for
+            # every future request (a stateful client already migrated
+            # inside the completion source)
+            self.primary = winner
+        self._note_lock()
+        return results[winner], latency, winner
+
+    # ------------------------------------------------------------------
+    def _execute_on(
+        self, replica: FleetReplica, inputs: Sequence[Any]
+    ) -> Optional[InferenceResult]:
+        if replica.failed:
+            return None
+        sess = self.sessions.get(replica.name)
+        if sess is None:
+            if self.stateful:
+                # failure re-dispatch of a stateful session: migrate it —
+                # carried state and all — then execute the step exactly once
+                self.fleet.migrate(self.client_id, replica.name)
+                sess = self.sessions[replica.name]
+            else:
+                sess = self.fleet._backup_session(self, replica)
+        return sess.infer(*inputs)
+
+    def _note_lock(self) -> None:
+        """Record fingerprint affinity once this client's IOS locks, so
+        future placements of the same sequence co-locate with it."""
+        cl = self.session.client
+        if cl.ios_fp is not None and cl.ios_fp not in self.fleet._affinity:
+            self.fleet._affinity[cl.ios_fp] = self.primary
+            # a freshly validated fingerprint immediately enters the shared
+            # cache tier: every replica knows it before any hedge lands there
+            self.fleet.replicate_caches()
+
+
+class EdgeFleet:
+    """N replicated edge servers behind a hedged, affinity-placing router.
+
+    All replicas share one :class:`~repro.core.engine.SimClock` (sessions
+    migrate between them without time jumps) and hang their per-node ingress
+    off one site :class:`~repro.core.netsim.SharedBackhaul`.  Request
+    streams are driven on a :class:`~repro.core.netsim.EventTimeline`
+    (:meth:`serve`)."""
+
+    def __init__(
+        self,
+        n_replicas: int = 2,
+        *,
+        server_device: DeviceSpec = GTX_2080TI,
+        execute: bool = True,
+        cache_capacity: int = 8,
+        cache_capacity_bytes: Optional[float] = None,
+        batch_window_s: float = 2e-3,
+        environment: str = "indoor",
+        node_capacity_bytes_per_s: float = 1e9 / 8.0,
+        backhaul_bytes_per_s: float = 10e9 / 8.0,
+        hedging: bool = True,
+        hedge_multiplier: float = 2.0,
+        min_observations: int = 8,
+    ):
+        if n_replicas < 1:
+            raise ValueError(f"need at least one replica, got {n_replicas}")
+        self.clock = SimClock()
+        self.timeline = EventTimeline()
+        ingresses = multi_node_ingress(
+            n_replicas,
+            node_capacity_bytes_per_s=node_capacity_bytes_per_s,
+            backhaul_bytes_per_s=backhaul_bytes_per_s,
+        )
+        self.backhaul: SharedBackhaul = ingresses[0].backhaul
+        self.replicas: List[FleetReplica] = [
+            FleetReplica(
+                name=f"r{i}",
+                edge=RRTOEdgeServer(
+                    server_device=server_device,
+                    execute=execute,
+                    cache_capacity=cache_capacity,
+                    cache_capacity_bytes=cache_capacity_bytes,
+                    batch_window_s=batch_window_s,
+                    environment=environment,
+                    ingress=ingresses[i],
+                    clock=self.clock,
+                ),
+            )
+            for i in range(n_replicas)
+        ]
+        self.hedging = hedging
+        self.router = HedgedRouter(
+            self.replicas,
+            # hedge_multiplier=inf never trips the speculative deadline, so
+            # a no-hedge fleet still recovers from outright failures
+            hedge_multiplier=hedge_multiplier if hedging else float("inf"),
+            min_observations=min_observations,
+        )
+        self.clients: Dict[str, FleetClient] = {}
+        self._affinity: Dict[str, str] = {}   # model name / IOS fp -> replica
+        self.stats = FleetStats()
+
+    # -- replica lookup -------------------------------------------------
+    def replica(self, name: str) -> FleetReplica:
+        for rep in self.replicas:
+            if rep.name == name:
+                return rep
+        raise KeyError(f"unknown replica {name!r}")
+
+    def replica_index(self, name: str) -> int:
+        for i, rep in enumerate(self.replicas):
+            if rep.name == name:
+                return i
+        raise KeyError(f"unknown replica {name!r}")
+
+    def locate(self, client_id: str) -> FleetReplica:
+        """The replica currently hosting ``client_id``'s session."""
+        for rep in self.replicas:
+            if client_id in rep.edge.sessions:
+                return rep
+        raise KeyError(f"client {client_id!r} not connected to any replica")
+
+    # -- placement ------------------------------------------------------
+    def place(
+        self, model: OffloadableModel, fingerprint: Optional[str] = None
+    ) -> FleetReplica:
+        """Pick a replica for a new client: affinity first (a replica
+        already serving this model — or, for a reconnecting client, its IOS
+        fingerprint — keeps collecting co-tenants so the shared-cache and
+        batched-replay wins compound), least load as the tie-break."""
+        healthy = [r for r in self.replicas if not r.failed]
+        if not healthy:
+            raise NoHealthyReplicaError("every fleet replica is failed")
+        self.stats.placements += 1
+        for key in (fingerprint, model.name):
+            if key is None:
+                continue
+            owner = self._affinity.get(key)
+            if owner is not None and not self.replica(owner).failed:
+                self.stats.affinity_hits += 1
+                return self.replica(owner)
+        rep = min(healthy, key=lambda r: r.load)
+        self._affinity.setdefault(model.name, rep.name)
+        return rep
+
+    def connect(
+        self,
+        model: OffloadableModel,
+        *,
+        client_id: Optional[str] = None,
+        min_repeats: int = 3,
+        stateful: bool = False,
+        fingerprint: Optional[str] = None,
+        **session_kwargs: Any,
+    ) -> FleetClient:
+        """Place and attach one client; ``stateful=True`` declares that the
+        model carries loop state (KV cache) so the fleet never forks its
+        session — hedging is failure-only and moves the session by
+        migration."""
+        cid = (
+            client_id
+            if client_id is not None
+            else f"u{sum(len(r.edge.sessions) for r in self.replicas)}"
+        )
+        if cid in self.clients:
+            raise ValueError(f"client id {cid!r} already connected")
+        rep = self.place(model, fingerprint)
+        sess = rep.edge.connect(
+            model, client_id=cid, min_repeats=min_repeats, **session_kwargs
+        )
+        client = FleetClient(
+            self, model, cid, sess, rep.name,
+            min_repeats=min_repeats, stateful=stateful,
+        )
+        self.clients[cid] = client
+        return client
+
+    def _backup_session(
+        self, client: FleetClient, replica: FleetReplica
+    ) -> OffloadSession:
+        """Create a hedge-target session on a replica the client has never
+        used.  The validated fingerprint reaches the cold replica through
+        the shared cache tier first, so the backup adopts the IOS after one
+        recorded inference instead of re-running the full ``min_repeats``
+        search."""
+        self.replicate_caches()
+        sess = replica.edge.connect(
+            client.model,
+            client_id=client.client_id,
+            min_repeats=client.min_repeats,
+        )
+        client.sessions[replica.name] = sess
+        self.stats.backup_sessions += 1
+        return sess
+
+    # -- cache replication ----------------------------------------------
+    def replicate_caches(self) -> int:
+        """Push every replica's validated fingerprints to every other
+        replica through the :class:`ReplayCache` persistence layer (each
+        replica publishes its metadata file to the shared cache tier, every
+        peer merges all of them).  A failed replica's file still replicates
+        — that is how its validated fingerprints survive the box.  Returns
+        the number of fingerprints known fleet-wide afterwards."""
+        self.stats.cache_syncs += 1
+        with tempfile.TemporaryDirectory() as tier:
+            paths = {}
+            for rep in self.replicas:
+                paths[rep.name] = os.path.join(tier, f"{rep.name}.json")
+                rep.edge.save_cache(paths[rep.name])
+            for rep in self.replicas:
+                for other, path in paths.items():
+                    if other != rep.name:
+                        rep.edge.load_cache(path)
+        known = set()
+        for rep in self.replicas:
+            known.update(rep.edge.cache.fingerprints)
+            known.update(rep.edge.cache.persisted_fingerprints)
+        self.stats.replicated_fingerprints = len(known)
+        return len(known)
+
+    # -- carried-state migration ----------------------------------------
+    def migrate(self, client_id: str, to: Optional[str] = None) -> str:
+        """Move one client's session — including its live donated carried
+        state — to another replica mid-stream; returns the destination name.
+
+        Steps: (1) the validated fingerprint travels through the shared
+        cache tier, (2) the live carried state is exported from the source
+        binding, (3) the device-memory namespace (parameters + staged
+        buffers) transfers over the site backhaul, (4) the destination
+        rebinds the replay executable from the client's recorded calls and
+        imports the carried state, (5) the session re-associates with the
+        destination box.  The continuation is bitwise-identical to never
+        having migrated (tests/test_fleet.py pins this per step and for the
+        final state).
+
+        The source box's memory is read directly even when it is marked
+        failed — the modelled deployment checkpoints carried state to the
+        shared tier, and the simulation's stand-in for that checkpoint is
+        the in-process context."""
+        src = self.locate(client_id)
+        if to is None:
+            candidates = [
+                r for r in self.replicas
+                if r.name != src.name and not r.failed
+            ]
+            if not candidates:
+                raise NoHealthyReplicaError(
+                    f"no healthy migration target for {client_id!r}"
+                )
+            dst = min(candidates, key=lambda r: r.load)
+        else:
+            dst = self.replica(to)
+        if dst.name == src.name:
+            return src.name
+
+        sess = src.edge.sessions[client_id]
+        cl = sess.client
+        self.replicate_caches()
+        state = src.edge.server.export_carried_state(client_id)
+        src_ctx = src.edge.server.contexts.get(client_id)
+
+        src.edge.disconnect(client_id)
+        dst.edge.adopt_session(sess)
+        if src_ctx is not None:
+            dst_ctx = dst.edge.server.context(client_id)
+            dst_ctx.env.update(src_ctx.env)
+            moved = float(
+                sum(np.asarray(v).nbytes for v in src_ctx.env.values())
+            )
+            self.stats.migration_bytes += moved
+            # replica-to-replica state transfer rides the site backhaul,
+            # not any client radio
+            self.backhaul.bytes_total += moved
+        if cl.ios is not None:
+            # rebind the replay executable(s) on the destination: the
+            # replicated fingerprint is already known there, so the rebuild
+            # is a single compile, and seeding reads the transferred env
+            dst.edge.server.prepare_replay(
+                cl._ios_calls,
+                client_id=client_id,
+                fingerprint=cl.ios_fp,
+                carried_pairs=cl.ios.carried_pairs,
+            )
+            if cl.split_plan is not None:
+                dst.edge.server.prepare_split(
+                    cl._ios_calls,
+                    cl.split_plan,
+                    client_id=client_id,
+                    fingerprint=cl.ios_fp,
+                    carried_pairs=cl.ios.carried_pairs,
+                )
+            if state is not None:
+                dst.edge.server.import_carried_state(client_id, state)
+            if cl.ios_fp is not None:
+                self._affinity[cl.ios_fp] = dst.name
+        src.edge.server.contexts.pop(client_id, None)
+
+        client = self.clients.get(client_id)
+        if client is not None:
+            client.sessions.pop(src.name, None)
+            client.sessions[dst.name] = sess
+            client.primary = dst.name
+        self.stats.migrations += 1
+        return dst.name
+
+    # -- open-loop serving on the event timeline -------------------------
+    def serve(
+        self,
+        requests: Sequence[Tuple[float, str, Tuple[Any, ...]]],
+        until: Optional[float] = None,
+    ) -> List[FleetResult]:
+        """Drive an open-loop request stream on the event timeline: each
+        ``(arrival_t, client_id, inputs)`` dispatches at its (absolute,
+        global-time, non-decreasing vs. the timeline's ``now``) arrival, and
+        a completion event fires at ``arrival + hedged latency`` — so
+        interleaving across clients and replicas is deterministic and
+        completions are first-class timeline events."""
+        results: List[Optional[FleetResult]] = [None] * len(requests)
+
+        def fire(k: int, cid: str, inputs: Tuple[Any, ...]) -> None:
+            client = self.clients[cid]
+            arrival = self.timeline.now
+            res, latency, winner = client.dispatch(*inputs)
+
+            def complete() -> None:
+                results[k] = FleetResult(
+                    client_id=cid,
+                    outputs=res.outputs,
+                    arrival_t=arrival,
+                    done_at=arrival + latency,
+                    winner=winner,
+                )
+
+            self.timeline.at(arrival + latency, complete)
+
+        for k, (t, cid, inputs) in enumerate(requests):
+            self.timeline.at(
+                float(t), lambda k=k, cid=cid, inputs=inputs: fire(k, cid, inputs)
+            )
+        self.timeline.run(until)
+        return [r for r in results if r is not None]
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict[str, Any]:
+        return dict(
+            replicas=len(self.replicas),
+            clients=len(self.clients),
+            hedging=self.hedging,
+            fleet=dataclasses.asdict(self.stats),
+            router=dataclasses.asdict(
+                dataclasses.replace(self.router.stats, latencies=[])
+            ),
+            backhaul_bytes=self.backhaul.bytes_total,
+            events_fired=self.timeline.fired,
+            per_replica={
+                rep.name: rep.edge.summary() for rep in self.replicas
+            },
+        )

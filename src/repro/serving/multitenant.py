@@ -528,6 +528,9 @@ class RRTOEdgeServer:
         self.batcher = ReplayBatcher(self.server, window_s=batch_window_s)
         self.environment = environment
         self.sessions: Dict[str, OffloadSession] = {}
+        # fleet bookkeeping: sessions migrated onto / off this box
+        self.sessions_adopted = 0
+        self.sessions_migrated_out = 0
 
     def connect(
         self,
@@ -616,6 +619,49 @@ class RRTOEdgeServer:
             self.batcher.end_round()
 
     # ------------------------------------------------------------------
+    def adopt_session(self, sess: OffloadSession) -> None:
+        """Attach an existing session migrated from another edge server.
+
+        The client re-associates with this box: the server handle, the
+        batcher submit hooks and the ingress binding move; client-side state
+        (mode, locked IOS, recorded calls, energy meter) rides along
+        untouched.  The server-side context (device-memory namespace, bound
+        replay, carried state) does NOT move here — the fleet layer
+        transfers it explicitly (see ``repro.serving.fleet.EdgeFleet
+        .migrate``).  Both edges must share one ``SimClock``: a migrated
+        session keeps its clock, and a disagreeing server clock would jump
+        simulated time."""
+        cid = sess.client_id
+        if cid in self.sessions:
+            raise ValueError(f"client id {cid!r} already connected")
+        if sess.clock is not self.clock:
+            raise ValueError(
+                "session migration requires edge servers sharing one SimClock"
+            )
+        if sess.execute != self.server.execute:
+            raise ValueError(
+                f"session execute={sess.execute} conflicts with this "
+                f"server's execute={self.server.execute}"
+            )
+        sess.server = self.server
+        sess.client.server = self.server
+        sess.network.ingress = self.ingress
+        sess.client.replay_submit = self.batcher.make_submit(sess.client)
+        sess.client.split_submit = self.batcher.make_split_submit(sess.client)
+        self.sessions[cid] = sess
+        self.ingress.active_clients = len(self.sessions)
+        self.sessions_adopted += 1
+
+    def disconnect(self, client_id: str) -> OffloadSession:
+        """Detach one client (the source half of a migration).  The
+        server-side context is left in place — the fleet layer reads it for
+        the state transfer and drops it once the destination adopted."""
+        sess = self.sessions.pop(client_id)
+        self.ingress.active_clients = max(1, len(self.sessions))
+        self.sessions_migrated_out += 1
+        return sess
+
+    # ------------------------------------------------------------------
     def save_cache(self, path: str) -> int:
         """Persist validated IOS fingerprints across server restarts."""
         return self.cache.save(path)
@@ -643,6 +689,8 @@ class RRTOEdgeServer:
     def summary(self) -> Dict[str, Any]:
         return dict(
             clients=len(self.sessions),
+            sessions_adopted=self.sessions_adopted,
+            sessions_migrated_out=self.sessions_migrated_out,
             cache=dataclasses.asdict(self.cache.stats),
             cached_programs=len(self.cache),
             compiles=self.compile_count,

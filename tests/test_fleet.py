@@ -1,0 +1,364 @@
+"""Fleet-scale replicated serving: hedged dispatch, cache replication, and
+carried-state migration — plus the fault-injection layer that hardens them.
+
+The load-bearing property is at the top: a stateful streaming session
+migrated between replicas mid-decode is *bitwise-identical* (emitted tokens
+AND the donated carried state) to the same session never migrating, across
+multiple registry model families and randomized migration points.
+"""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core.netsim import multi_node_ingress
+from repro.core.offload import OffloadableModel
+from repro.distributed.straggler import (
+    OBSERVATION_WINDOW,
+    AllReplicasFailedError,
+    HedgedRouter,
+    NoHealthyReplicaError,
+    ReplicaModel,
+)
+from repro.serving import EdgeFleet, FleetClient, ReplayCache, RRTOServedLM
+
+DENSE = ArchConfig(
+    name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_head=16, d_ff=128, vocab=256, dtype="float32",
+    rope_theta=1e4,
+)
+# second registry family: sLSTM/mLSTM hybrid — a different carried-state
+# layout (recurrent cell state, not a KV ring) through the same migration
+XLSTM = ArchConfig(
+    name="x", family="ssm", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=2, d_head=16, d_ff=0, vocab=128, dtype="float32",
+    ssm_chunk=16, slstm_every=2, slstm_ff=48,
+)
+PROMPT = np.array([[3, 7, 11, 13]], np.int32)
+
+
+def make_mlp(seed=0, d_in=16, d_hidden=32, d_out=8):
+    rng = np.random.default_rng(seed)
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(d_in, d_hidden)), jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(d_hidden, d_out)), jnp.float32),
+    }
+
+    def apply(p, x):
+        return [jnp.tanh(x @ p["w1"]) @ p["w2"]]
+
+    x = jnp.asarray(rng.normal(size=(1, d_in)), jnp.float32)
+    return OffloadableModel(f"mlp{seed}", apply, params, (x,)), np.asarray(x)
+
+
+def decode_stream(cfg, migrate_at=None, max_new=8):
+    """Run one stateful decode stream on a 2-replica fleet, optionally
+    migrating the session r0 -> r1 before step ``migrate_at``; returns
+    (tokens, final carried state, fleet)."""
+    fleet = EdgeFleet(2, min_observations=4)
+    lm = RRTOServedLM(
+        cfg, edge=fleet.replicas[0].edge, client_id="u0", seed=0,
+        min_repeats=2,
+    )
+    g = lm.start_generation(PROMPT, max_new_tokens=max_new)
+    for step in range(lm.steps_total(g)):
+        if migrate_at is not None and step == migrate_at:
+            assert fleet.migrate("u0", "r1") == "r1"
+        outs = lm.session.infer(*lm.step_inputs(g)).outputs
+        lm.absorb_step(g, outs)
+    tokens = np.concatenate(g["out"], axis=1)
+    state = fleet.locate("u0").edge.server.export_carried_state("u0")
+    return tokens, state, fleet
+
+
+class TestMigrationEquivalence:
+    """Property: mid-stream migration is invisible to the decode."""
+
+    @pytest.mark.parametrize("cfg", [DENSE, XLSTM], ids=lambda c: c.family)
+    def test_migrated_stream_bitwise_identical(self, cfg, rng):
+        base_tokens, base_state, _ = decode_stream(cfg)
+        assert base_state is not None, "stream never turned stateful"
+        n_steps = PROMPT.shape[1] + 8 - 1
+        # randomized migration points covering the recording phase, the
+        # record->replay boundary, and deep into stateful replay
+        points = sorted(
+            set(rng.integers(0, n_steps, size=3).tolist()) | {n_steps - 1}
+        )
+        for at in points:
+            tokens, state, fleet = decode_stream(cfg, migrate_at=at)
+            assert np.array_equal(tokens, base_tokens), f"tokens @ step {at}"
+            assert state is not None and len(state) == len(base_state)
+            for got, want in zip(state, base_state):
+                assert np.array_equal(got, want), f"carried state @ step {at}"
+            assert fleet.stats.migrations == 1
+            assert fleet.locate("u0").name == "r1"
+            assert fleet.replicas[1].edge.sessions_adopted == 1
+            assert fleet.replicas[0].edge.sessions_migrated_out == 1
+
+    def test_migration_transfers_env_over_backhaul(self):
+        _, _, fleet = decode_stream(DENSE, migrate_at=6)
+        assert fleet.stats.migration_bytes > 0
+        assert fleet.backhaul.bytes_total >= fleet.stats.migration_bytes
+        # the source box no longer holds the client's device memory
+        assert "u0" not in fleet.replicas[0].edge.server.contexts
+
+    def test_migration_to_self_is_noop(self):
+        fleet = EdgeFleet(2)
+        model, x = make_mlp()
+        c = fleet.connect(model, client_id="u0", min_repeats=2)
+        c.infer(x)
+        assert fleet.migrate("u0", "r0") == "r0"
+        assert fleet.stats.migrations == 0
+
+
+class TestFaultInjection:
+    def _warm_fleet(self, n=2, min_observations=4, **kw):
+        fleet = EdgeFleet(n, min_observations=min_observations, **kw)
+        model, x = make_mlp()
+        client = fleet.connect(model, client_id="u0", min_repeats=3)
+        for _ in range(6):   # past min_repeats AND min_observations
+            client.infer(x)
+        assert client.session.client.mode == "replaying"
+        return fleet, client, x
+
+    def test_failed_replica_recovered_by_hedge(self):
+        fleet, client, x = self._warm_fleet()
+        fleet.replica("r0").failed = True
+        res = client.infer(x)
+        assert res is not None
+        assert fleet.router.stats.failures_recovered == 1
+        # the client is permanently re-homed off the dead box
+        assert client.primary == "r1"
+        fleet.replica("r0").failed = False
+        client.infer(x)
+        assert client.primary == "r1", "no flap back after recovery"
+
+    def test_all_replicas_failed_is_typed(self):
+        fleet, client, x = self._warm_fleet()
+        for rep in fleet.replicas:
+            rep.failed = True
+        with pytest.raises(AllReplicasFailedError):
+            client.infer(x)
+        # typed for callers that catch the broader placement error too
+        assert issubclass(AllReplicasFailedError, NoHealthyReplicaError)
+        assert issubclass(AllReplicasFailedError, RuntimeError)
+        with pytest.raises(NoHealthyReplicaError):
+            fleet.connect(make_mlp(seed=1)[0], client_id="u1")
+
+    def test_cold_replica_adopts_replicated_fingerprint(self):
+        """A hedge landing on a cold replica must not pay the full
+        ``min_repeats`` Operator Sequence Search again: the fingerprint
+        arrives through cache replication and one recorded inference locks
+        the backup session straight into replay."""
+        fleet, client, x = self._warm_fleet()
+        fleet.replica("r0").slowdown = lambda i: 10.0   # force the hedge
+        res, _, winner = client.dispatch(x)
+        assert winner == "r1"
+        backup = client.sessions["r1"]
+        assert backup.client.cache_adopted is True
+        assert backup.client.mode == "replaying"
+        assert len(backup.history) == 1                 # one recorded call
+        assert backup.history[0].mode == "recording"
+        # hedged execution of a stateless request is bitwise-reproducible
+        m = client.model
+        want = np.asarray(m.apply(m.params, x)[0])
+        assert np.array_equal(np.asarray(res.outputs[0]), want)
+
+    def test_stateful_sessions_never_fork(self):
+        """A live stateful replay step is non-idempotent (it advances the
+        donated carried state) — a slow primary must NOT trigger a
+        speculative duplicate; only outright failure moves it (by
+        migration, which keeps the single home)."""
+        fleet = EdgeFleet(2, min_observations=2)
+        lm = RRTOServedLM(
+            DENSE, edge=fleet.replicas[0].edge, client_id="u0", seed=0,
+            min_repeats=2,
+        )
+        client = fleet.clients["u0"] = FleetClient(
+            fleet, lm.session.model, "u0", lm.session, "r0", stateful=True,
+        )
+        g = lm.start_generation(PROMPT, max_new_tokens=6)
+        for _ in range(4):   # lock replay, warm the deadline estimator
+            client.infer(*lm.step_inputs(g))
+            lm.absorb_step(g, client.session.history[-1].outputs)
+        assert lm.session.client.stateful_replay
+        fleet.replica("r0").slowdown = lambda i: 100.0
+        _, _, winner = client.dispatch(*lm.step_inputs(g))
+        assert winner == "r0", "slow stateful primary must not be hedged"
+        assert len(client.sessions) == 1
+        # outright failure DOES move it — via migration, not a fork
+        fleet.replica("r0").failed = True
+        _, _, winner = client.dispatch(*lm.step_inputs(g))
+        assert winner == "r1"
+        assert fleet.stats.migrations == 1
+        assert len(client.sessions) == 1
+        assert fleet.router.stats.failures_recovered == 1
+
+
+class TestHedgedRouterWindow:
+    def test_observation_window_bounded_over_10k_dispatches(self):
+        replicas = [
+            ReplicaModel("a", 0.010, lambda i: 0.0),
+            ReplicaModel("b", 0.012, lambda i: 0.0),
+        ]
+        router = HedgedRouter(replicas, window=64)
+        for i in range(10_000):
+            router.dispatch(i)
+        assert router.stats.requests == 10_000
+        # the regression this pins: _observed grew one entry per dispatch
+        assert router.observed_count == 64
+        assert len(router._observed) <= 64
+        # default-constructed routers get the module-level bound
+        default = HedgedRouter(replicas)
+        for i in range(OBSERVATION_WINDOW + 50):
+            default.dispatch(i)
+        assert default.observed_count == OBSERVATION_WINDOW
+
+    def test_deadline_tracks_recent_distribution(self):
+        """The bounded window must also keep the deadline *adaptive*: after
+        a latency regime shift, old samples age out instead of freezing the
+        deadline on stale history."""
+        shift = 3_000
+        replicas = [
+            ReplicaModel("a", 0.0, lambda i: 0.01 if i < shift else 0.1),
+        ]
+        router = HedgedRouter(replicas, window=64)
+        for i in range(shift + 200):
+            router.dispatch(i)
+        assert router._deadline() == pytest.approx(2.0 * 0.1)
+
+    def test_window_validation(self):
+        with pytest.raises(ValueError):
+            HedgedRouter([ReplicaModel("a", 0.01, lambda i: 0.0)], window=0)
+
+
+class _FakeProgram:
+    """Stands in for a compiled ReplayProgram in cache-persistence tests."""
+
+    def __init__(self, nbytes=100, carried_pairs=None, plan_sig=None):
+        self.nbytes_estimate = nbytes
+        self.n_kernels = 3
+        self.total_flops = 1.0e6
+        self.total_bytes = 2048.0
+        self.d2h_avals = [((1, 8), "float32")]
+        if carried_pairs is not None:
+            self.carried_pairs = carried_pairs
+        if plan_sig is not None:
+            class _Plan:
+                @staticmethod
+                def signature():
+                    return plan_sig
+            self.plan = _Plan()
+
+
+class TestCacheReplication:
+    """ReplayCache.save/load as the fleet's replication primitive."""
+
+    def test_roundtrip_preserves_carried_pairs_and_plan_keys(self, tmp_path):
+        src = ReplayCache(capacity=8)
+        src.put("fpA", _FakeProgram(carried_pairs=[(2, 0), (3, 1)]))
+        src.put("fpA|cut=3", _FakeProgram(carried_pairs=[(2, 0)],
+                                          plan_sig="cut=3"))
+        src.put("fpA#vmap4", _FakeProgram())   # derived batched executable
+        path = os.path.join(tmp_path, "cache.json")
+        assert src.save(path) == 2             # '#' keys never persist
+
+        dst = ReplayCache(capacity=8)
+        assert dst.load(path) == 2
+        assert "fpA" in dst and "fpA|cut=3" in dst
+        assert "fpA#vmap4" not in dst
+        assert len(dst) == 2
+        # metadata carries the donation binding and the split plan — the
+        # receiving replica rebuilds stateful/segmented, not stateless
+        assert dst.known_metadata("fpA")["carried_pairs"] == [[2, 0], [3, 1]]
+        assert dst.known_metadata("fpA|cut=3")["plan"] == "cut=3"
+        # known-but-uncompiled: membership true, executable still a miss
+        assert dst.get("fpA") is None
+        assert dst.stats.misses == 1
+        # replication chains: a re-save of the loaded cache keeps the fps
+        path2 = os.path.join(tmp_path, "cache2.json")
+        assert dst.save(path2) == 2
+
+    def test_loaded_cache_honors_claims_under_eviction(self, tmp_path):
+        src = ReplayCache(capacity=8)
+        src.put("fpA", _FakeProgram(carried_pairs=[(0, 0)]))
+        path = os.path.join(tmp_path, "cache.json")
+        src.save(path)
+
+        dst = ReplayCache(capacity=1)
+        dst.load(path)
+        dst.put("fpA", _FakeProgram(carried_pairs=[(0, 0)]))
+        # a claim on the *derived* key pins the base for an in-flight round
+        dst.claim("fpA|cut=3")
+        dst.claim("fpA|cut=3")                  # claims nest
+        dst.put("fpB", _FakeProgram())
+        assert "fpA" in dst.fingerprints, "claimed base must not evict"
+        assert "fpB" not in dst.fingerprints    # admission control instead
+        dst.release("fpA|cut=3")
+        dst.put("fpB", _FakeProgram())
+        assert "fpA" in dst.fingerprints, "still one claim outstanding"
+        dst.release("fpA|cut=3")
+        dst.put("fpB", _FakeProgram())
+        assert dst.fingerprints == ["fpB"], "released base evicts normally"
+        # eviction dropped the program, not the validated identity
+        assert "fpA" in dst
+
+    def test_fleet_replicates_fingerprints_everywhere(self):
+        fleet = EdgeFleet(3, min_observations=4)
+        model, x = make_mlp()
+        client = fleet.connect(model, client_id="u0", min_repeats=2)
+        for _ in range(3):
+            client.infer(x)
+        fp = client.session.client.ios_fp
+        assert fp is not None
+        # _note_lock replicated eagerly at lock time
+        for rep in fleet.replicas:
+            assert fp in rep.edge.cache
+        assert fleet.stats.replicated_fingerprints >= 1
+        assert fleet.stats.cache_syncs >= 1
+
+
+class TestFleetPlumbing:
+    def test_multi_node_ingress_shares_backhaul(self):
+        pipes = multi_node_ingress(
+            3, node_capacity_bytes_per_s=100.0, backhaul_bytes_per_s=240.0
+        )
+        assert len(pipes) == 3
+        assert all(p.backhaul is pipes[0].backhaul for p in pipes)
+        # per-node NIC would give 100, but the site uplink caps at 240/3
+        assert pipes[0].share() == pytest.approx(80.0)
+        pipes[0].account(50.0)
+        pipes[1].account(25.0)
+        assert pipes[0].bytes_total == 50.0
+        assert pipes[1].bytes_total == 25.0
+        assert pipes[0].backhaul.bytes_total == 75.0
+        with pytest.raises(ValueError):
+            multi_node_ingress(0)
+
+    def test_affinity_placement(self):
+        fleet = EdgeFleet(2)
+        m0, _ = make_mlp(0)
+        c0 = fleet.connect(m0, client_id="a")
+        c1 = fleet.connect(m0, client_id="b")     # same model co-locates
+        assert c0.primary == c1.primary
+        assert fleet.stats.affinity_hits == 1
+        m1, _ = make_mlp(1)
+        c2 = fleet.connect(m1, client_id="c")     # new model balances away
+        assert c2.primary != c0.primary
+
+    def test_serve_open_loop_on_timeline(self):
+        fleet = EdgeFleet(2, min_observations=4)
+        model, x = make_mlp()
+        client = fleet.connect(model, client_id="u0", min_repeats=2)
+        for _ in range(3):
+            client.infer(x)
+        reqs = [(0.001 * (k + 1), "u0", (x,)) for k in range(5)]
+        results = fleet.serve(reqs)
+        assert len(results) == 5
+        assert fleet.timeline.fired == 10         # arrival + completion each
+        for r in results:
+            assert r.latency_seconds > 0
+            assert r.winner in ("r0", "r1")
+            assert r.done_at == pytest.approx(r.arrival_t + r.latency_seconds)
