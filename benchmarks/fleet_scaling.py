@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 sys.path.insert(0, "src")
 
@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.offload import OffloadableModel
+from repro.obs import Tracer, write_chrome_trace
 from repro.serving import EdgeFleet, RRTOServedLM
 
 SPIKE_S = 0.5          # injected straggler latency on the slow replica
@@ -81,8 +82,10 @@ class FleetPoint:
 def run_fleet(
     *, hedging: bool, n_replicas: int = 3, n_clients: int = 6,
     rounds: int = 30, min_repeats: int = 3,
+    tracer: Optional[Tracer] = None,
 ) -> FleetPoint:
-    fleet = EdgeFleet(n_replicas, hedging=hedging, min_observations=8)
+    fleet = EdgeFleet(n_replicas, hedging=hedging, min_observations=8,
+                      tracer=tracer)
     clients = []
     for i in range(n_clients):
         model, x = make_client_model(i)
@@ -129,14 +132,21 @@ def run_fleet(
     )
 
 
-def migration_equivalence(max_new: int = 6) -> Dict[str, bool]:
+def migration_equivalence(
+    max_new: int = 6, tracer: Optional[Tracer] = None
+) -> Dict[str, bool]:
     """One stateful decode stream, migrated r0 -> r1 mid-generation, vs. the
     same stream never migrating: tokens and carried state must be bitwise
     identical."""
     prompt = np.array([[3, 7, 11, 13]], np.int32)
 
     def stream(migrate_at):
-        fleet = EdgeFleet(2, min_observations=4)
+        # only the migrating run is traced: the baseline would duplicate
+        # every span on identical tracks
+        fleet = EdgeFleet(
+            2, min_observations=4,
+            tracer=tracer if migrate_at is not None else None,
+        )
         lm = RRTOServedLM(DECODE_CFG, edge=fleet.replicas[0].edge,
                           client_id="u0", seed=0, min_repeats=2)
         g = lm.start_generation(prompt, max_new_tokens=max_new)
@@ -162,15 +172,19 @@ def migration_equivalence(max_new: int = 6) -> Dict[str, bool]:
     }
 
 
-def run(smoke: bool = False) -> Tuple[List[FleetPoint], Dict[str, bool]]:
+def run(
+    smoke: bool = False, tracer: Optional[Tracer] = None
+) -> Tuple[List[FleetPoint], Dict[str, bool]]:
     sizes = (
         dict(n_replicas=3, n_clients=3, rounds=15)
         if smoke
         else dict(n_replicas=3, n_clients=6, rounds=30)
     )
-    hedged = run_fleet(hedging=True, **sizes)
+    # trace only the hedged fleet — the no-hedge control would emit the
+    # same span names on the same replica tracks and muddy the timeline
+    hedged = run_fleet(hedging=True, tracer=tracer, **sizes)
     plain = run_fleet(hedging=False, **sizes)
-    mig = migration_equivalence(max_new=4 if smoke else 8)
+    mig = migration_equivalence(max_new=4 if smoke else 8, tracer=tracer)
 
     checks = {
         "hedged_p99_le_0.7x": hedged.p99_ms <= 0.7 * plain.p99_ms,
@@ -191,9 +205,17 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON (open in "
+                         "ui.perfetto.dev) of the hedged fleet run")
     args = ap.parse_args()
 
-    points, checks = run(smoke=args.smoke)
+    tracer = Tracer() if args.trace else None
+    points, checks = run(smoke=args.smoke, tracer=tracer)
+    if tracer is not None:
+        write_chrome_trace(tracer, args.trace)
+        print(f"trace: {args.trace} ({tracer.n_events} events, "
+              f"{len(tracer.tracks())} tracks)", file=sys.stderr)
     print(
         f"{'hedging':>7s} {'reqs':>5s} {'hedged':>6s} {'wins':>5s} "
         f"{'backups':>7s} {'adopted':>7s} {'syncs':>5s} "

@@ -3,18 +3,48 @@
 Prints ``name,us_per_call,derived`` CSV: ``us_per_call`` is the steady
 per-inference latency of the RRTO system (or the benchmark's primary timing),
 ``derived`` is the benchmark's headline validation metric vs the paper.
+
+Each benchmark additionally writes a machine-readable ``BENCH_<name>.json``
+(metrics + guard outcomes) into ``--json-dir``; ``--trace PATH`` records the
+fleet benchmark's run as Chrome trace-event JSON (open in ui.perfetto.dev).
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
+from typing import Any, Dict, Optional
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 
 
-def smoke() -> None:
+def _bench_json(
+    json_dir: Optional[str],
+    name: str,
+    *,
+    metrics: Dict[str, Any],
+    guards: Dict[str, bool],
+    error: Optional[str] = None,
+) -> None:
+    """Write one machine-readable ``BENCH_<name>.json`` verdict file."""
+    if json_dir is None:
+        return
+    os.makedirs(json_dir, exist_ok=True)
+    payload = {
+        "benchmark": name,
+        "metrics": metrics,
+        "guards": {g: bool(ok) for g, ok in guards.items()},
+        "ok": error is None and all(guards.values()),
+        "error": error,
+    }
+    path = os.path.join(json_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+
+
+def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
     """Tiny-config smoke run for CI: exercises session recording, the IOS
     search, the split planner, stateful replay, pipelined split replay and
     the benchmark plumbing in a couple of minutes.
@@ -49,22 +79,34 @@ def smoke() -> None:
             interior.planner_s * 1e6,
             f"plan={interior.plan_signature}",
         ))
+        _bench_json(
+            json_dir, "partition_sweep",
+            metrics={
+                "planner_us": interior.planner_s * 1e6,
+                "plan": interior.plan_signature,
+                "sweep_points": len(rows),
+            },
+            guards=checks,
+        )
     except Exception as e:  # noqa: BLE001 — summarize, don't die first
         failures.append(("partition_sweep", "crashed", repr(e)))
+        _bench_json(json_dir, "partition_sweep",
+                    metrics={}, guards={}, error=repr(e))
 
     print("== tab4_rpc_gpu_util (smoke) ==", file=sys.stderr, flush=True)
     try:
         util = tab4_rpc_gpu_util.run()
-        record(
-            "tab4_rpc_gpu_util",
-            {"rrto_rpcs_paper11": util["rrto"]["rpcs"] == 11},
-            str(util["rrto"]),
-        )
+        tab4_guards = {"rrto_rpcs_paper11": util["rrto"]["rpcs"] == 11}
+        record("tab4_rpc_gpu_util", tab4_guards, str(util["rrto"]))
         csv_rows.append(
             ("smoke_tab4_rpcs", float(util["rrto"]["rpcs"]), "paper11")
         )
+        _bench_json(json_dir, "tab4_rpc_gpu_util",
+                    metrics=dict(util["rrto"]), guards=tab4_guards)
     except Exception as e:  # noqa: BLE001
         failures.append(("tab4_rpc_gpu_util", "crashed", repr(e)))
+        _bench_json(json_dir, "tab4_rpc_gpu_util",
+                    metrics={}, guards={}, error=repr(e))
 
     print("== decode_scaling (smoke) ==", file=sys.stderr, flush=True)
     try:
@@ -79,8 +121,19 @@ def smoke() -> None:
             f"state_growth={hi.stateful_token_flops / lo.stateful_token_flops:.2f}x;"
             f"seed_growth={hi.seed_token_flops / lo.seed_token_flops:.2f}x",
         ))
+        _bench_json(
+            json_dir, "decode_scaling",
+            metrics={
+                "stateful_token_compute_us": hi.stateful_token_compute_s * 1e6,
+                "state_growth_x": hi.stateful_token_flops / lo.stateful_token_flops,
+                "seed_growth_x": hi.seed_token_flops / lo.seed_token_flops,
+            },
+            guards=dec_checks,
+        )
     except Exception as e:  # noqa: BLE001
         failures.append(("decode_scaling", "crashed", repr(e)))
+        _bench_json(json_dir, "decode_scaling",
+                    metrics={}, guards={}, error=repr(e))
 
     print("== pipeline_overlap (smoke) ==", file=sys.stderr, flush=True)
     try:
@@ -96,8 +149,20 @@ def smoke() -> None:
             f"vs_sequential={best.overlap_ratio:.2f}x;"
             f"bottleneck={best.bottleneck}",
         ))
+        _bench_json(
+            json_dir, "pipeline_overlap",
+            metrics={
+                "pipelined_period_us": best.pipelined_period_s * 1e6,
+                "bandwidth_mbps": best.bandwidth_mbps,
+                "overlap_ratio": best.overlap_ratio,
+                "bottleneck": best.bottleneck,
+            },
+            guards=pipe_checks,
+        )
     except Exception as e:  # noqa: BLE001
         failures.append(("pipeline_overlap", "crashed", repr(e)))
+        _bench_json(json_dir, "pipeline_overlap",
+                    metrics={}, guards={}, error=repr(e))
 
     print("== stateful_split (smoke) ==", file=sys.stderr, flush=True)
     try:
@@ -119,8 +184,21 @@ def smoke() -> None:
             f"vs_binary={interior.planner_s / min(interior.full_offload_s, interior.device_only_s):.2f}x;"
             f"plan={interior.plan_signature}",
         ))
+        _bench_json(
+            json_dir, "stateful_split",
+            metrics={
+                "planner_us": interior.planner_s * 1e6,
+                "bandwidth_mbps": interior.bandwidth_mbps,
+                "vs_binary_x": interior.planner_s
+                / min(interior.full_offload_s, interior.device_only_s),
+                "plan": interior.plan_signature,
+            },
+            guards=ss_checks,
+        )
     except Exception as e:  # noqa: BLE001
         failures.append(("stateful_split", "crashed", repr(e)))
+        _bench_json(json_dir, "stateful_split",
+                    metrics={}, guards={}, error=repr(e))
 
     print("== fleet_scaling (smoke) ==", file=sys.stderr, flush=True)
     try:
@@ -128,7 +206,9 @@ def smoke() -> None:
         # p99 to <= 0.7x the no-hedge fleet at <= 1.1x its mean, with every
         # hedge-created backup adopting the replicated fingerprint and a
         # mid-stream migration staying bitwise-equal
-        fleet_points, fleet_checks = fleet_scaling.run(smoke=True)
+        fleet_points, fleet_checks = fleet_scaling.run(
+            smoke=True, tracer=tracer
+        )
         record("fleet_scaling", fleet_checks)
         hedged, plain = fleet_points
         csv_rows.append((
@@ -138,8 +218,25 @@ def smoke() -> None:
             f"mean_vs_nohedge={hedged.mean_ms / max(plain.mean_ms, 1e-9):.2f}x;"
             f"backups_adopted={hedged.backups_adopted}/{hedged.backup_sessions}",
         ))
+        _bench_json(
+            json_dir, "fleet_scaling",
+            metrics={
+                "p99_ms": hedged.p99_ms,
+                "mean_ms": hedged.mean_ms,
+                "p99_vs_nohedge_x": hedged.p99_ms / max(plain.p99_ms, 1e-9),
+                "mean_vs_nohedge_x": hedged.mean_ms / max(plain.mean_ms, 1e-9),
+                "hedged": hedged.hedged,
+                "hedge_wins": hedged.hedge_wins,
+                "backup_sessions": hedged.backup_sessions,
+                "backups_adopted": hedged.backups_adopted,
+                "trace_events": tracer.n_events if tracer is not None else 0,
+            },
+            guards=fleet_checks,
+        )
     except Exception as e:  # noqa: BLE001
         failures.append(("fleet_scaling", "crashed", repr(e)))
+        _bench_json(json_dir, "fleet_scaling",
+                    metrics={}, guards={}, error=repr(e))
 
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
@@ -163,7 +260,7 @@ def smoke() -> None:
         raise SystemExit(f"smoke guards tripped: {tripped}")
 
 
-def main() -> None:
+def main(json_dir: Optional[str] = None) -> None:
     rows = []
 
     from benchmarks import (
@@ -339,10 +436,40 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+        _bench_json(json_dir, name,
+                    metrics={"us_per_call": us, "derived": derived},
+                    guards={})
 
 
 if __name__ == "__main__":
-    if "--smoke" in sys.argv[1:]:
-        smoke()
-    else:
-        main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config CI run with per-benchmark guards")
+    ap.add_argument("--json-dir", metavar="DIR", default=".",
+                    help="directory for BENCH_<name>.json verdict files "
+                         "(default: current directory)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON of the fleet "
+                         "benchmark (open in ui.perfetto.dev); smoke only")
+    args = ap.parse_args()
+
+    _tracer = None
+    if args.trace:
+        from repro.obs import Tracer, write_chrome_trace
+
+        _tracer = Tracer()
+    try:
+        if args.smoke:
+            smoke(json_dir=args.json_dir, tracer=_tracer)
+        else:
+            main(json_dir=args.json_dir)
+    finally:
+        if _tracer is not None:
+            write_chrome_trace(_tracer, args.trace)
+            print(
+                f"trace: {args.trace} ({_tracer.n_events} events, "
+                f"{len(_tracer.tracks())} tracks)",
+                file=sys.stderr,
+            )

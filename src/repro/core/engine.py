@@ -53,6 +53,7 @@ from repro.core.records import (
     InferenceSequence,
     OperatorRecord,
 )
+from repro.obs import MetricsRegistry, RegistryBackedStats, Tracer
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # pragma: no cover — avoids core <-> partition import cycle
@@ -739,6 +740,8 @@ class PipelinedSegmentedReplay:
         *,
         input_wire_divisor: float = 1.0,
         t0: float = 0.0,
+        tracer: Optional[Tracer] = None,
+        trace_track: str = "stream",
     ):
         from repro.core.netsim import CapacityResource
         from repro.partition.pipeline import (
@@ -764,10 +767,16 @@ class PipelinedSegmentedReplay:
         self._link_model = NetworkLink(network, 1.0)
         # session-lifetime resources on an unbounded stream: keep the O(1)
         # running totals, not the per-interval history
+        self.tracer = tracer
+        self.trace_track = trace_track
         self.device = CapacityResource(
-            "device", free_at=t0, record_intervals=False
+            "device", free_at=t0, record_intervals=False,
+            tracer=tracer, track=f"{trace_track}/device",
         )
-        self.link = CapacityResource("link", free_at=t0, record_intervals=False)
+        self.link = CapacityResource(
+            "link", free_at=t0, record_intervals=False,
+            tracer=tracer, track=f"{trace_track}/radio",
+        )
         self._per_inference_server_s = sum(
             s.seconds for s in self.chain if s.resource == RES_SERVER
         )
@@ -873,8 +882,12 @@ class OffloadServer:
         *,
         execute: bool = True,
         replay_cache: Optional["ReplayCacheLike"] = None,
+        name: str = "server",
+        tracer: Optional[Tracer] = None,
     ):
         self.device = device
+        self.name = name
+        self.tracer = tracer
         self.execute = execute  # False: account time/bytes only (no compute)
         self.contexts: Dict[str, ClientContext] = {}
         self.busy_until = 0.0          # async kernel-queue completion time
@@ -1210,8 +1223,13 @@ class OffloadServer:
 
     def occupy(self, compute_seconds: float, start_t: float) -> float:
         """Reserve the shared GPU queue; returns the completion time."""
-        self.busy_until = max(self.busy_until, start_t) + compute_seconds
+        begin = max(self.busy_until, start_t)
+        self.busy_until = begin + compute_seconds
         self.busy_seconds += compute_seconds
+        if self.tracer is not None and compute_seconds > 0.0:
+            self.tracer.span(
+                f"{self.name}/gpu", "gpu_exec", begin, self.busy_until
+            )
         return self.busy_until
 
     def run_replay(
@@ -1233,13 +1251,27 @@ class OffloadServer:
 # client (Alg. 3)
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class InferenceStats:
-    rpcs: int = 0
-    network_bytes: float = 0.0
-    wall_seconds: float = 0.0
-    joules: float = 0.0
-    mode: str = MODE_RECORDING
+class InferenceStats(RegistryBackedStats):
+    """Per-client traffic/energy counters, registry-backed: attribute
+    bumps land in a :class:`~repro.obs.MetricsRegistry` scope so a fleet
+    root ``snapshot()`` reports every client's RPC count and wire bytes.
+    ``mode`` stays a plain attribute (it is a label, not a counter)."""
+
+    _fields = (
+        ("rpcs", 0),
+        ("network_bytes", 0.0),
+        ("wall_seconds", 0.0),
+        ("joules", 0.0),
+        ("cache_adoptions", 0),
+    )
+
+    def __init__(
+        self,
+        registry: Optional[MetricsRegistry] = None,
+        mode: str = MODE_RECORDING,
+    ):
+        super().__init__(registry)
+        self.mode = mode
 
 
 class RRTOClient:
@@ -1264,6 +1296,9 @@ class RRTOClient:
         client_device: DeviceSpec = JETSON_XAVIER_NX,
         partition: Optional["PartitionConfig"] = None,
         input_wire_divisor: float = 1.0,
+        tracer: Optional[Tracer] = None,
+        trace_track: Optional[str] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if variant not in ("rrto", "semi_rrto", "transparent"):
             raise ValueError(variant)
@@ -1329,8 +1364,13 @@ class RRTOClient:
         self.searches_run = 0
         self.fallbacks = 0
         self._query_cache: set = set()
-        # per-inference counters (reset by the session)
-        self.stats = InferenceStats()
+        # observability: spans land on this client's track; None = tracing
+        # off (every emission site guards on it, so the disabled path does
+        # no per-event work)
+        self.tracer = tracer
+        self.trace_track = trace_track or f"client/{client_id}"
+        # per-inference counters (reset by the session), registry-backed
+        self.stats = InferenceStats(registry=metrics)
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -1404,12 +1444,28 @@ class RRTOClient:
             self._carried_placeholders[idx] = np.array(arr, copy=True)
         return wire, (fresh or None)
 
+    def _account_network(self, rpcs: int, nbytes: float) -> None:
+        """THE accounting site for client network traffic: the full-server,
+        DAM-fallback and split paths (and ``infer_stream``'s executor) all
+        bump through here, so RPC/byte counts cannot drift between paths."""
+        self.stats.rpcs += rpcs
+        self.stats.network_bytes += nbytes
+
     def _rpc(self, payload: float, response: float) -> None:
+        t0 = self.clock.t
         dt = self.network.rpc_time(payload, response, self.clock.t)
         self.clock.advance(dt)
         self.meter.add(STATE_COMM, dt)
-        self.stats.rpcs += 1
-        self.stats.network_bytes += payload + response
+        self._account_network(1, payload + response)
+        if self.tracer is not None:
+            self.tracer.span(
+                self.trace_track,
+                "record_rpc" if self.mode == MODE_RECORDING else "rpc",
+                t0,
+                t0 + dt,
+                payload=payload,
+                response=response,
+            )
 
     def _local(self, dt: float = PER_LOCAL_OP_S) -> None:
         self.clock.advance(dt)
@@ -1513,6 +1569,12 @@ class RRTOClient:
                 if cand_fp in cache:
                     ios, fp = candidate, cand_fp
                     self.cache_adopted = True
+                    self.stats.cache_adoptions += 1
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            self.trace_track, "cache_adopt", self.clock.t,
+                            fp=cand_fp,
+                        )
                     break
         self.search_seconds += _time.perf_counter() - t0
         self.searches_run += 1
@@ -1564,6 +1626,8 @@ class RRTOClient:
                 power=self.meter.power_model,
                 config=self.partition,
                 input_wire_divisor=self.input_wire_divisor,
+                tracer=self.tracer,
+                trace_track=self.trace_track,
             )
             self._install_plan(
                 self.replanner.initial_plan(
@@ -1572,6 +1636,11 @@ class RRTOClient:
             )
         self.mode = MODE_REPLAYING
         self._replay_pos = 0
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.trace_track, "ios_locked", self.clock.t,
+                fp=self.ios_fp or "", adopted=self.cache_adopted,
+            )
 
     def _configure_carried(self, program: ReplayProgram) -> None:
         """Adopt a (possibly cached) program's loop-carried spec: build the
@@ -1652,6 +1721,8 @@ class RRTOClient:
                 self.network,
                 input_wire_divisor=self.input_wire_divisor,
                 t0=self.clock.t,
+                tracer=self.tracer,
+                trace_track=self.trace_track,
             )
             self._claim_stream_key(
                 f"{self.ios_fp}|{plan.signature()}"
@@ -1724,6 +1795,7 @@ class RRTOClient:
                 else:
                     fresh = self._fresh_carried or None
                     self._fresh_carried = {}
+                    t_sub = self.clock.t
                     if self.replay_submit is not None:
                         # cross-client batched backend (multi-tenant serving)
                         outs, done_at = self.replay_submit(
@@ -1737,6 +1809,15 @@ class RRTOClient:
                         )
                     self._replay_outputs = outs
                     self._replay_done_at = done_at
+                    if self.tracer is not None:
+                        self.tracer.span(
+                            self.trace_track,
+                            "replay_call",
+                            t_sub,
+                            max(done_at, t_sub),
+                            fp=self.ios_fp or "",
+                            batched=self.replay_submit is not None,
+                        )
                     # a full-server plan must keep watching the link, or a
                     # bandwidth collapse could never swap it back to a split
                     self._maybe_replan()
@@ -1769,14 +1850,19 @@ class RRTOClient:
                 return self._replay_outputs[
                     self._wire_out_index.get(cursor, cursor)
                 ]
+            t0 = self.clock.t
             dt = (
                 self.network._rtt_at(self.clock.t)
                 + self.network.transfer_time(rec.response_bytes, self.clock.t)
             )
             self.clock.advance(dt)
             self.meter.add(STATE_COMM, dt)
-            self.stats.rpcs += 1
-            self.stats.network_bytes += rec.payload_bytes + rec.response_bytes
+            self._account_network(1, rec.payload_bytes + rec.response_bytes)
+            if self.tracer is not None:
+                self.tracer.span(
+                    self.trace_track, "replay_d2h", t0, t0 + dt,
+                    bytes=rec.response_bytes,
+                )
             return self._replay_outputs[self._wire_out_index.get(cursor, cursor)]
 
         # intermediate operator: answered from the recorded result, locally
@@ -1828,6 +1914,12 @@ class RRTOClient:
                 completions.append(self.split_submit(seg, dur, start))
             else:
                 completions.append(self.server.occupy(dur, start))
+            if self.tracer is not None:
+                self.tracer.span(
+                    f"{self.server.name}/gpu", "segment_exec",
+                    start, start + dur,
+                    client=self.client_id, ops=f"{seg.start}:{seg.end}",
+                )
         # phase-integrated billing covers the body exactly once: overlapped
         # uplink is inside the inference draw (see Schedule.radio_only_seconds)
         self.meter.add(STATE_INFERENCE, sched.device_seconds)
@@ -1845,8 +1937,18 @@ class RRTOClient:
             )
             if horizon > self.clock.t:
                 self._wait_until(horizon)
-        self.stats.rpcs += sched.crossings
-        self.stats.network_bytes += sched.comm_bytes
+        self._account_network(sched.crossings, sched.comm_bytes)
+        if self.tracer is not None:
+            self.tracer.span(
+                self.trace_track, "cut_uplink",
+                t0, t0 + sched.radio_only_seconds,
+                bytes=sched.comm_bytes, crossings=sched.crossings,
+            )
+            self.tracer.span(
+                self.trace_track, "device_exec",
+                t0, t0 + sched.device_seconds,
+                plan=self.split_plan.signature(),
+            )
         self._split_output_local = list(sched.output_local)
         self._replay_outputs = outs
         self._replay_done_at = self.clock.t

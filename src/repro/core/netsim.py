@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -91,6 +91,11 @@ class ServerIngress:
     # transfer_time call on an attached client link accumulates here)
     bytes_total: float = 0.0
     backhaul: Optional[SharedBackhaul] = None
+    # observability: with a Tracer attached, each billed transfer samples
+    # the cumulative ingress byte counter on ``track`` (needs the caller to
+    # pass the sim time — transfer_time does)
+    tracer: Optional[Any] = None
+    track: str = "ingress"
 
     def share(self) -> float:
         share = self.capacity_bytes_per_s / max(1, self.active_clients)
@@ -98,11 +103,15 @@ class ServerIngress:
             share = min(share, self.backhaul.share())
         return share
 
-    def account(self, nbytes: float) -> None:
+    def account(self, nbytes: float, t: Optional[float] = None) -> None:
         """Bill a transfer through this node (and the site backhaul)."""
         self.bytes_total += nbytes
         if self.backhaul is not None:
             self.backhaul.bytes_total += nbytes
+        if self.tracer is not None and t is not None:
+            self.tracer.counter(
+                self.track, "ingress_bytes", t, self.bytes_total
+            )
 
 
 def multi_node_ingress(
@@ -164,7 +173,7 @@ class NetworkModel:
         bw = self.bandwidth_at(t)
         if self.ingress is not None:
             bw = min(bw, self.ingress.share())
-            self.ingress.account(nbytes)
+            self.ingress.account(nbytes, t)
         # a zero-bandwidth interval (obstructed radio, saturated ingress)
         # stalls the transfer for a long-but-finite interval instead of
         # dividing by zero; the trace recovers on later samples
@@ -287,6 +296,11 @@ class CapacityResource:
     record_intervals: bool = True
     busy: List[Tuple[float, float]] = dataclasses.field(default_factory=list)
     busy_total: float = 0.0
+    # observability: when a Tracer is attached, every reservation emits an
+    # occupancy span on ``track`` (defaults to the resource name) — the
+    # analytic pipeline schedule renders exactly like executed timelines
+    tracer: Optional[Any] = None
+    track: Optional[str] = None
 
     def earliest(self, t: float) -> float:
         """Earliest instant a reservation requested at ``t`` can begin."""
@@ -303,6 +317,10 @@ class CapacityResource:
             self.busy_total += duration
             if self.record_intervals:
                 self.busy.append((begin, end))
+            if self.tracer is not None:
+                self.tracer.span(
+                    self.track or self.name, "occupy", begin, end
+                )
         self.free_at = end
         return begin, end
 

@@ -48,6 +48,7 @@ from repro.core.engine import (
 from repro.core.intercept import FrameworkNoiseModel, JaxprInterceptor
 from repro.core.flatten import flatten_closed_jaxpr
 from repro.core.netsim import NetworkModel, get_network
+from repro.obs import MetricsRegistry, Tracer
 from repro.partition.planner import PartitionConfig
 
 SYSTEMS = ("device_only", "nnto", "cricket", "semi_rrto", "rrto")
@@ -124,6 +125,9 @@ class OffloadSession:
         clock: Optional[SimClock] = None,
         client_id: str = "c0",
         partition: Optional["PartitionConfig"] = None,
+        tracer: Optional["Tracer"] = None,
+        trace_track: Optional[str] = None,
+        metrics: Optional["MetricsRegistry"] = None,
     ):
         if system not in SYSTEMS:
             raise ValueError(f"unknown system {system!r}; pick from {SYSTEMS}")
@@ -201,6 +205,9 @@ class OffloadSession:
                 client_device=client_device,
                 partition=partition if system == "rrto" else None,
                 input_wire_divisor=model.input_wire_divisor,
+                tracer=tracer,
+                trace_track=trace_track,
+                metrics=metrics,
             )
             self.interceptor = JaxprInterceptor(
                 self.client,
@@ -420,9 +427,8 @@ class OffloadSession:
                 # a fresh-state override ships once, like the sequential
                 # path (billed on the aggregate stream counters; its bytes
                 # are not modeled in the pipeline chain's steady state)
-                self.client.stats.rpcs += 1
-                self.client.stats.network_bytes += float(
-                    sum(a.nbytes for a in fresh.values())
+                self.client._account_network(
+                    1, float(sum(a.nbytes for a in fresh.values()))
                 )
             wire_outs = pipe.submit(
                 wire, env, base + off, fresh_carried=fresh
@@ -448,8 +454,9 @@ class OffloadSession:
         self.meter.add(STATE_COMM, comm)
         self.meter.add(STATE_STANDBY, max(0.0, wall - dev_busy - comm))
         self.clock.advance(wall)
-        self.client.stats.rpcs += pipe.crossings - cross0
-        self.client.stats.network_bytes += pipe.comm_bytes - bytes0
+        self.client._account_network(
+            pipe.crossings - cross0, pipe.comm_bytes - bytes0
+        )
         self._infer_count += n
         return results
 

@@ -26,6 +26,8 @@ import dataclasses
 from collections import deque
 from typing import Callable, Deque, List, Optional, Tuple
 
+from repro.obs import MetricsRegistry, RegistryBackedStats
+
 # adaptive-deadline estimation window: the deadline tracks the *recent*
 # latency distribution, so the observation buffer is bounded — an unbounded
 # history both leaks memory over a long-lived stream and freezes the deadline
@@ -56,15 +58,25 @@ class ReplicaModel:
         return self.base_latency_s + max(0.0, self.jitter(req_idx))
 
 
-@dataclasses.dataclass
-class HedgeStats:
-    requests: int = 0
-    hedged: int = 0
-    primary_wins: int = 0
-    hedge_wins: int = 0
-    failures_recovered: int = 0
-    total_latency_s: float = 0.0
-    latencies: List[float] = dataclasses.field(default_factory=list)
+class HedgeStats(RegistryBackedStats):
+    """Hedged-dispatch counters, registry-backed (see
+    :class:`repro.obs.MetricsRegistry`): every counter and the latency
+    distribution land in one snapshot alongside the rest of the stack.
+    ``latencies`` aliases the registry's ``latency_s`` histogram value
+    list, so existing ``.append`` / slicing call sites keep working."""
+
+    _fields = (
+        ("requests", 0),
+        ("hedged", 0),
+        ("primary_wins", 0),
+        ("hedge_wins", 0),
+        ("failures_recovered", 0),
+        ("total_latency_s", 0.0),
+    )
+
+    @property
+    def latencies(self) -> List[float]:
+        return self.registry.histogram("latency_s").values
 
     @property
     def p99(self) -> float:
@@ -76,6 +88,12 @@ class HedgeStats:
     @property
     def mean(self) -> float:
         return self.total_latency_s / max(1, self.requests)
+
+    def as_dict(self):
+        d = super().as_dict()
+        d["latency_p99_s"] = self.p99
+        d["latency_mean_s"] = self.mean
+        return d
 
 
 class HedgedRouter:
@@ -96,6 +114,7 @@ class HedgedRouter:
         completion_source: Optional[
             Callable[[ReplicaModel, int], Optional[float]]
         ] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if window < 1:
             raise ValueError(f"observation window must be >= 1, got {window}")
@@ -104,7 +123,7 @@ class HedgedRouter:
         self.min_observations = min_observations
         self.completion_source = completion_source
         self._observed: Deque[float] = deque(maxlen=window)
-        self.stats = HedgeStats()
+        self.stats = HedgeStats(registry=metrics)
         self._rr = 0
 
     @property

@@ -1,0 +1,37 @@
+"""Unified observability: sim-clock tracing + one metrics registry.
+
+- :class:`Tracer` — nested spans / instants / counters on the simulated
+  clock, off by default (every layer holds ``tracer = None`` and guards
+  each emission), provably free when disabled.
+- :class:`MetricsRegistry` — the single store behind every stats surface
+  in the stack; ``snapshot()`` on a root registry reports the whole
+  fleet in one call.
+- :func:`write_chrome_trace` — Perfetto-loadable Chrome trace-event
+  JSON, one track per client / replica / resource.
+"""
+
+from repro.obs.export import to_chrome_trace, write_chrome_trace
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    RegistryBackedStats,
+    percentile,
+)
+from repro.obs.trace import CounterSample, Instant, Span, Tracer
+
+__all__ = [
+    "Counter",
+    "CounterSample",
+    "Gauge",
+    "Histogram",
+    "Instant",
+    "MetricsRegistry",
+    "RegistryBackedStats",
+    "Span",
+    "Tracer",
+    "percentile",
+    "to_chrome_trace",
+    "write_chrome_trace",
+]

@@ -1,0 +1,211 @@
+"""One registry for every counter in the stack.
+
+Before this module each layer grew its own stats dataclass
+(``InferenceStats``, ``FleetStats``, ``HedgeStats``, ``CacheStats``, the
+batcher's loose ints) with hand-rolled bump sites and no way to read the
+whole system in one call.  :class:`MetricsRegistry` is the single store:
+layers receive a *scoped view* (``registry.scope("r0").scope("cache")``)
+and create counters / gauges / histograms under their prefix, so one
+``snapshot()`` on the root reports RPC counts, wire bytes, batch widths,
+hedge/migration counts and cache hit rates together.
+
+The legacy stats classes stay importable under their old names as
+:class:`RegistryBackedStats` subclasses: attribute reads and ``+=``
+bumps route into registry counters, so every existing call site
+(``stats.rpcs += 1``, ``fleet.stats.migrations``) keeps working while
+the numbers now live in the registry.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Optional, Tuple, Union
+
+
+class Counter:
+    """A monotonically-bumped (or directly assigned) scalar."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str, value: Union[int, float] = 0):
+        self.name = name
+        self.value = value
+
+
+class Gauge:
+    """A last-write-wins scalar (queue depth, busy fraction, ...)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str, value: float = 0.0):
+        self.name = name
+        self.value = value
+
+    def set(self, value: float) -> None:
+        self.value = value
+
+
+def percentile(values: List[float], q: float) -> float:
+    """Nearest-rank percentile of ``values`` (0 <= q <= 100)."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[idx]
+
+
+class Histogram:
+    """A value series with p50/p95/p99 summaries.
+
+    ``values`` is a plain list — legacy call sites that appended to
+    ``stats.latencies`` / ``batch_sizes`` keep their ``.append`` and
+    slicing idioms by aliasing those attributes to this list.
+    """
+
+    __slots__ = ("name", "values")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.values: List[float] = []
+
+    def observe(self, value: float) -> None:
+        self.values.append(value)
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    @property
+    def sum(self) -> float:
+        return float(sum(self.values))
+
+    @property
+    def mean(self) -> float:
+        return self.sum / len(self.values) if self.values else 0.0
+
+    @property
+    def p50(self) -> float:
+        return percentile(self.values, 50)
+
+    @property
+    def p95(self) -> float:
+        return percentile(self.values, 95)
+
+    @property
+    def p99(self) -> float:
+        return percentile(self.values, 99)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "count": self.count,
+            "mean": self.mean,
+            "p50": self.p50,
+            "p95": self.p95,
+            "p99": self.p99,
+        }
+
+
+Metric = Union[Counter, Gauge, Histogram]
+
+
+class MetricsRegistry:
+    """Shared metric store; ``scope(name)`` returns a prefixed view.
+
+    All scopes share one underlying dict, so a counter created through
+    ``fleet.scope("r0").scope("cache")`` is visible to a ``snapshot()``
+    on the root under the key ``"r0.cache.<name>"``.
+    """
+
+    def __init__(
+        self,
+        _store: Optional[Dict[str, Metric]] = None,
+        _prefix: str = "",
+    ):
+        self._store: Dict[str, Metric] = _store if _store is not None else {}
+        self._prefix = _prefix
+
+    def scope(self, name: str) -> "MetricsRegistry":
+        return MetricsRegistry(self._store, f"{self._prefix}{name}.")
+
+    def _key(self, name: str) -> str:
+        return self._prefix + name
+
+    def counter(self, name: str, default: Union[int, float] = 0) -> Counter:
+        key = self._key(name)
+        m = self._store.get(key)
+        if m is None:
+            m = self._store[key] = Counter(key, default)
+        return m  # type: ignore[return-value]
+
+    def gauge(self, name: str) -> Gauge:
+        key = self._key(name)
+        m = self._store.get(key)
+        if m is None:
+            m = self._store[key] = Gauge(key)
+        return m  # type: ignore[return-value]
+
+    def histogram(self, name: str) -> Histogram:
+        key = self._key(name)
+        m = self._store.get(key)
+        if m is None:
+            m = self._store[key] = Histogram(key)
+        return m  # type: ignore[return-value]
+
+    def _items(self) -> Iterator[Tuple[str, Metric]]:
+        n = len(self._prefix)
+        for key, m in self._store.items():
+            if key.startswith(self._prefix):
+                yield key[n:], m
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Flat ``{name: value}`` view of this scope's subtree; histograms
+        report their count/mean/p50/p95/p99 summary dict."""
+        out: Dict[str, Any] = {}
+        for name, m in sorted(self._items()):
+            out[name] = m.summary() if isinstance(m, Histogram) else m.value
+        return out
+
+
+class RegistryBackedStats:
+    """Base for the legacy stats classes: declared ``_fields`` become
+    registry counters while attribute syntax (``stats.rpcs += 1``,
+    ``stats.hits``) keeps working unchanged.
+
+    Subclasses declare ``_fields`` as a ``(name, default)`` tuple; any
+    other attribute set on the instance is a plain attribute.  Each
+    instance owns (or is handed) a :class:`MetricsRegistry` scope so two
+    stats objects never collide even when sharing a root store.
+    """
+
+    _fields: Tuple[Tuple[str, Union[int, float]], ...] = ()
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        object.__setattr__(
+            self, "registry", registry if registry is not None else MetricsRegistry()
+        )
+        for name, default in self._fields:
+            self.registry.counter(name, default)
+
+    def __getattr__(self, name: str) -> Any:
+        # only called when normal lookup fails — i.e. for _fields names
+        for fname, _default in type(self)._fields:
+            if fname == name:
+                return self.__dict__["registry"].counter(name).value
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        for fname, _default in type(self)._fields:
+            if fname == name:
+                self.__dict__["registry"].counter(name).value = value
+                return
+        object.__setattr__(self, name, value)
+
+    def as_dict(self) -> Dict[str, Any]:
+        """The old ``dataclasses.asdict`` shape (fields only, in order)."""
+        return {
+            name: self.registry.counter(name).value
+            for name, _default in self._fields
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debug convenience
+        body = ", ".join(f"{k}={v!r}" for k, v in self.as_dict().items())
+        return f"{type(self).__name__}({body})"

@@ -27,11 +27,11 @@ wire.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 from repro.core.costmodel import DeviceSpec
 from repro.core.energy import PowerModel
+from repro.obs import MetricsRegistry, RegistryBackedStats, Tracer
 from repro.partition.planner import (
     EvaluatedPlan,
     PartitionConfig,
@@ -42,12 +42,16 @@ from repro.partition.planner import (
 from repro.partition.segments import SegmentGraph, SplitPlan
 
 
-@dataclasses.dataclass
-class ReplannerStats:
-    observations: int = 0
-    plans_considered: int = 0
-    replans: int = 0              # adopted swaps
-    rejected_by_hysteresis: int = 0
+class ReplannerStats(RegistryBackedStats):
+    """Re-planning counters, registry-backed (see
+    :class:`repro.obs.MetricsRegistry`)."""
+
+    _fields = (
+        ("observations", 0),
+        ("plans_considered", 0),
+        ("replans", 0),               # adopted swaps
+        ("rejected_by_hysteresis", 0),
+    )
 
 
 class AdaptiveReplanner:
@@ -63,6 +67,9 @@ class AdaptiveReplanner:
         power: Optional[PowerModel] = None,
         config: Optional[PartitionConfig] = None,
         input_wire_divisor: float = 1.0,
+        tracer: Optional[Tracer] = None,
+        trace_track: str = "planner",
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.graph = graph
         self.device = device
@@ -71,13 +78,15 @@ class AdaptiveReplanner:
         self.power = power or PowerModel()
         self.config = config or PartitionConfig()
         self.input_wire_divisor = input_wire_divisor
-        self.stats = ReplannerStats()
+        self.tracer = tracer
+        self.trace_track = trace_track
+        self.stats = ReplannerStats(registry=metrics)
         self.ema_bandwidth: Optional[float] = None
         self._last_plan_t: Optional[float] = None
         self.current: Optional[EvaluatedPlan] = None
 
     # ------------------------------------------------------------------
-    def _plan_at(self, bandwidth: float) -> EvaluatedPlan:
+    def _plan_at(self, bandwidth: float, now: float = 0.0) -> EvaluatedPlan:
         self.stats.plans_considered += 1
         ev = plan_partition(
             self.graph,
@@ -88,6 +97,9 @@ class AdaptiveReplanner:
             power=self.power,
             config=self.config,
             input_wire_divisor=self.input_wire_divisor,
+            tracer=self.tracer,
+            trace_track=self.trace_track,
+            now=now,
         )
         # invariant: a stateful graph never yields a cut that would strand
         # the donated carried buffers on the device side
@@ -97,7 +109,7 @@ class AdaptiveReplanner:
     def initial_plan(self, bandwidth: float, now: float = 0.0) -> SplitPlan:
         self.ema_bandwidth = bandwidth
         self._last_plan_t = now
-        self.current = self._plan_at(bandwidth)
+        self.current = self._plan_at(bandwidth, now)
         return self.current.plan
 
     def observe(self, bandwidth: float, now: float) -> Optional[SplitPlan]:
@@ -121,7 +133,7 @@ class AdaptiveReplanner:
             return None
         self._last_plan_t = now
 
-        candidate = self._plan_at(self.ema_bandwidth)
+        candidate = self._plan_at(self.ema_bandwidth, now)
         if candidate.plan.signature() == self.current.plan.signature():
             self.current = candidate     # refresh modeled cost at current bw
             return None
@@ -142,7 +154,21 @@ class AdaptiveReplanner:
         if cand_cost < inc_cost * (1.0 - self.config.hysteresis):
             self.current = candidate
             self.stats.replans += 1
+            if self.tracer is not None:
+                self.tracer.instant(
+                    self.trace_track, "replan", now,
+                    adopted=candidate.plan.signature(),
+                    cost=cand_cost, incumbent_cost=inc_cost,
+                    bandwidth=self.ema_bandwidth,
+                )
             return candidate.plan
         self.stats.rejected_by_hysteresis += 1
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.trace_track, "replan_rejected", now,
+                candidate=candidate.plan.signature(),
+                cost=cand_cost, incumbent_cost=inc_cost,
+                bandwidth=self.ema_bandwidth,
+            )
         self.current = incumbent
         return None

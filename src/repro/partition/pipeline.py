@@ -306,6 +306,8 @@ def simulate_pipeline(
     link_resource: Optional[CapacityResource] = None,
     closed_loop: bool = False,
     timeline: Optional[EventTimeline] = None,
+    tracer=None,
+    trace_track: str = "pipeline",
 ) -> PipelineSimulation:
     """Event-driven execution of ``arrivals`` through ``chain``.
 
@@ -357,6 +359,16 @@ def simulate_pipeline(
             dur = stage.seconds
         r.reserve(begin, dur)
         end = begin + dur
+        if tracer is not None:
+            # one span per scheduled stage: the analytic schedule renders on
+            # the same track layout as executed timelines (device/link/server
+            # lanes), labelled by stage so "where does the period go" is
+            # answerable from the export
+            tracer.span(
+                f"{trace_track}/{stage.resource}",
+                stage.label or stage.resource,
+                begin, end, inference=i,
+            )
         if k == 0:
             infs[i].start = begin
         tl.at(end, lambda: advance(i, k + 1, end))

@@ -26,7 +26,7 @@ worse than binary offloading at the planned operating point.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.costmodel import DeviceSpec
 from repro.core.energy import PowerModel
@@ -334,6 +334,9 @@ def plan_partition(
     power: Optional[PowerModel] = None,
     config: Optional[PartitionConfig] = None,
     input_wire_divisor: float = 1.0,
+    tracer: Optional[Any] = None,
+    trace_track: str = "planner",
+    now: float = 0.0,
 ) -> EvaluatedPlan:
     """Pick the best split of ``graph`` at the given operating point.
 
@@ -386,6 +389,7 @@ def plan_partition(
 
     best: Optional[EvaluatedPlan] = None
     seen: set = set()
+    explain: List[Dict[str, Any]] = []
     for plan in candidates:
         sig = plan.signature()
         if sig in seen:
@@ -395,11 +399,33 @@ def plan_partition(
             graph, plan, device, server, bandwidth_bytes_per_s,
             rtt_s=rtt_s, power=power, input_wire_divisor=input_wire_divisor,
         )
+        if tracer is not None:
+            # "why this cut": the full per-candidate cost table rides on the
+            # trace as a structured event.  The period column is computed
+            # only when the objective actually priced it (EvaluatedPlan's
+            # pipeline-period evaluation is deliberately lazy).
+            row = {
+                "plan": sig,
+                "seconds": ev.seconds,
+                "joules": ev.joules,
+                "cost": plan_cost(ev, config.objective),
+            }
+            if config.objective == "throughput":
+                row["period_s"] = ev.period_seconds
+            explain.append(row)
         if best is None or plan_cost(ev, config.objective) < plan_cost(
             best, config.objective
         ):
             best = ev
     assert best is not None
+    if tracer is not None:
+        tracer.instant(
+            trace_track, "plan_explain", now,
+            objective=config.objective,
+            bandwidth_bytes_per_s=bandwidth_bytes_per_s,
+            chosen=best.plan.signature(),
+            candidates=explain,
+        )
     best.plan = dataclasses.replace(
         best.plan,
         objective=config.objective,

@@ -65,6 +65,7 @@ from repro.distributed.straggler import (
     HedgedRouter,
     NoHealthyReplicaError,
 )
+from repro.obs import MetricsRegistry, RegistryBackedStats, Tracer
 from repro.serving.multitenant import RRTOEdgeServer
 
 
@@ -89,15 +90,19 @@ class FleetReplica:
         return len(self.edge.sessions)
 
 
-@dataclasses.dataclass
-class FleetStats:
-    placements: int = 0
-    affinity_hits: int = 0
-    migrations: int = 0
-    migration_bytes: float = 0.0
-    cache_syncs: int = 0
-    replicated_fingerprints: int = 0
-    backup_sessions: int = 0
+class FleetStats(RegistryBackedStats):
+    """Fleet-wide counters, registry-backed (see
+    :class:`repro.obs.MetricsRegistry`)."""
+
+    _fields = (
+        ("placements", 0),
+        ("affinity_hits", 0),
+        ("migrations", 0),
+        ("migration_bytes", 0.0),
+        ("cache_syncs", 0),
+        ("replicated_fingerprints", 0),
+        ("backup_sessions", 0),
+    )
 
 
 @dataclasses.dataclass
@@ -163,16 +168,36 @@ class FleetClient:
         re-dispatches.  May raise
         :class:`~repro.distributed.straggler.AllReplicasFailedError`."""
         fleet = self.fleet
+        tracer = fleet.tracer
         req = self._req_idx
         self._req_idx += 1
         results: Dict[str, InferenceResult] = {}
+        hedge_spans: Dict[str, int] = {}
+        primary_at_dispatch = self.primary
 
         def complete(replica: FleetReplica, idx: int) -> Optional[float]:
+            t0 = fleet.clock.t
             res = self._execute_on(replica, inputs)
             if res is None:
+                if tracer is not None:
+                    tracer.instant(
+                        f"{replica.name}/hedge", "hedge_failed", t0,
+                        client=self.client_id, req=req,
+                    )
                 return None
             results[replica.name] = res
-            return res.wall_seconds + max(0.0, replica.slowdown(idx))
+            lat = res.wall_seconds + max(0.0, replica.slowdown(idx))
+            if tracer is not None:
+                hedge_spans[replica.name] = tracer.span(
+                    f"{replica.name}/hedge", "hedge_dispatch", t0, t0 + lat,
+                    client=self.client_id, req=req,
+                    role=(
+                        "primary"
+                        if replica.name == primary_at_dispatch
+                        else "backup"
+                    ),
+                )
+            return lat
 
         # a live stateful session's replay step is non-idempotent (donated
         # carried state advances server-side) — hedge it on failure only
@@ -182,6 +207,11 @@ class FleetClient:
             completion=complete,
             speculative=not (self.stateful and self.session.client.stateful_replay),
         )
+        if tracer is not None:
+            for name, sid in hedge_spans.items():
+                tracer.annotate(
+                    sid, winner=(name == winner), cancelled=(name != winner)
+                )
         if winner != self.primary and fleet.replica(self.primary).failed:
             # the primary is dead: re-place this client on the winner for
             # every future request (a stateful client already migrated
@@ -242,11 +272,15 @@ class EdgeFleet:
         hedging: bool = True,
         hedge_multiplier: float = 2.0,
         min_observations: int = 8,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if n_replicas < 1:
             raise ValueError(f"need at least one replica, got {n_replicas}")
         self.clock = SimClock()
         self.timeline = EventTimeline()
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         ingresses = multi_node_ingress(
             n_replicas,
             node_capacity_bytes_per_s=node_capacity_bytes_per_s,
@@ -265,6 +299,9 @@ class EdgeFleet:
                     environment=environment,
                     ingress=ingresses[i],
                     clock=self.clock,
+                    name=f"r{i}",
+                    tracer=tracer,
+                    metrics=self.metrics.scope(f"r{i}"),
                 ),
             )
             for i in range(n_replicas)
@@ -276,10 +313,11 @@ class EdgeFleet:
             # a no-hedge fleet still recovers from outright failures
             hedge_multiplier=hedge_multiplier if hedging else float("inf"),
             min_observations=min_observations,
+            metrics=self.metrics.scope("hedge"),
         )
         self.clients: Dict[str, FleetClient] = {}
         self._affinity: Dict[str, str] = {}   # model name / IOS fp -> replica
-        self.stats = FleetStats()
+        self.stats = FleetStats(registry=self.metrics.scope("fleet"))
 
     # -- replica lookup -------------------------------------------------
     def replica(self, name: str) -> FleetReplica:
@@ -319,9 +357,19 @@ class EdgeFleet:
             owner = self._affinity.get(key)
             if owner is not None and not self.replica(owner).failed:
                 self.stats.affinity_hits += 1
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "fleet", "place", self.clock.t,
+                        model=model.name, replica=owner, affinity=True,
+                    )
                 return self.replica(owner)
         rep = min(healthy, key=lambda r: r.load)
         self._affinity.setdefault(model.name, rep.name)
+        if self.tracer is not None:
+            self.tracer.instant(
+                "fleet", "place", self.clock.t,
+                model=model.name, replica=rep.name, affinity=False,
+            )
         return rep
 
     def connect(
@@ -434,6 +482,15 @@ class EdgeFleet:
         if dst.name == src.name:
             return src.name
 
+        t_mig = self.clock.t
+        mig_span = (
+            self.tracer.begin(
+                "fleet", "migrate", t_mig,
+                client=client_id, src=src.name, dst=dst.name,
+            )
+            if self.tracer is not None
+            else None
+        )
         sess = src.edge.sessions[client_id]
         cl = sess.client
         self.replicate_caches()
@@ -442,6 +499,7 @@ class EdgeFleet:
 
         src.edge.disconnect(client_id)
         dst.edge.adopt_session(sess)
+        moved = 0.0
         if src_ctx is not None:
             dst_ctx = dst.edge.server.context(client_id)
             dst_ctx.env.update(src_ctx.env)
@@ -452,6 +510,11 @@ class EdgeFleet:
             # replica-to-replica state transfer rides the site backhaul,
             # not any client radio
             self.backhaul.bytes_total += moved
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "fleet", "state_transfer", self.clock.t,
+                    client=client_id, bytes=moved,
+                )
         if cl.ios is not None:
             # rebind the replay executable(s) on the destination: the
             # replicated fingerprint is already known there, so the rebuild
@@ -482,6 +545,9 @@ class EdgeFleet:
             client.sessions[dst.name] = sess
             client.primary = dst.name
         self.stats.migrations += 1
+        if mig_span is not None:
+            self.tracer.annotate(mig_span, bytes=moved)
+            self.tracer.end(mig_span, self.clock.t)
         return dst.name
 
     # -- open-loop serving on the event timeline -------------------------
@@ -527,10 +593,8 @@ class EdgeFleet:
             replicas=len(self.replicas),
             clients=len(self.clients),
             hedging=self.hedging,
-            fleet=dataclasses.asdict(self.stats),
-            router=dataclasses.asdict(
-                dataclasses.replace(self.router.stats, latencies=[])
-            ),
+            fleet=self.stats.as_dict(),
+            router=self.router.stats.as_dict(),
             backhaul_bytes=self.backhaul.bytes_total,
             events_fired=self.timeline.fired,
             per_replica={

@@ -65,6 +65,7 @@ from repro.core.engine import (
 )
 from repro.core.netsim import ServerIngress, get_network
 from repro.core.offload import InferenceResult, OffloadableModel, OffloadSession
+from repro.obs import MetricsRegistry, RegistryBackedStats, Tracer
 from repro.partition.segments import PLACE_SERVER
 from repro.serving.replay_cache import ReplayCache
 
@@ -146,12 +147,48 @@ class _SegmentGroup:
     width: int
 
 
+class BatcherStats(RegistryBackedStats):
+    """Batch-formation counters, registry-backed (one fleet snapshot
+    reports every replica's batching behaviour).  ``batch_sizes`` aliases
+    the ``batch_width`` histogram's value list, so width percentiles show
+    up in ``MetricsRegistry.snapshot()`` while the legacy ``.append`` /
+    ``np.mean`` call sites keep working."""
+
+    _fields = (
+        ("batches_executed", 0),
+        ("batched_replays", 0),      # submissions served from a batch
+        ("solo_replays", 0),         # submissions that fell back to solo
+        ("vmap_batches", 0),         # groups executed as one true vmap call
+        ("vmap_compiles", 0),        # batched executables built (not cached)
+        ("vmap_compiles_avoided", 0),  # widths served by a padded executable
+        ("vmap_padded_lanes", 0),    # masked lanes executed across batches
+        ("digest_cache_hits", 0),
+        ("seg_batches", 0),          # co-tenant server-segment batched execs
+        ("seg_batched", 0),          # segment submissions served from a batch
+        ("seg_solo", 0),             # segment submissions that ran solo
+    )
+
+    @property
+    def batch_sizes(self) -> List[int]:
+        return self.registry.histogram("batch_width").values
+
+
 class ReplayBatcher:
     """Groups same-fingerprint replay submissions into batched executions."""
 
-    def __init__(self, server: OffloadServer, *, window_s: float = 2e-3):
+    def __init__(
+        self,
+        server: OffloadServer,
+        *,
+        window_s: float = 2e-3,
+        tracer: Optional[Tracer] = None,
+        track: str = "edge",
+        metrics: Optional[MetricsRegistry] = None,
+    ):
         self.server = server
         self.window_s = window_s
+        self.tracer = tracer
+        self.track = track
         # escape hatch (benchmarks/tests): False forces the per-client
         # functional execution loop even for shared-param groups, so the
         # vmap-batched path can be diffed bitwise against it
@@ -172,18 +209,10 @@ class ReplayBatcher:
         # base program so size-aware eviction cannot purge it (and its
         # derived executables) while the round is still executing/claiming
         self._round_claims: List[str] = []
-        self.batches_executed = 0
-        self.batched_replays = 0     # submissions served from a batch
-        self.solo_replays = 0        # submissions that fell back to solo
-        self.vmap_batches = 0        # groups executed as one true vmap call
-        self.vmap_compiles = 0       # batched executables built (not cached)
-        self.vmap_compiles_avoided = 0  # widths served by a padded executable
-        self.vmap_padded_lanes = 0   # masked lanes executed across all batches
-        self.digest_cache_hits = 0
-        self.seg_batches = 0         # co-tenant server-segment batched execs
-        self.seg_batched = 0         # segment submissions served from a batch
-        self.seg_solo = 0            # segment submissions that ran solo
-        self.batch_sizes: List[int] = []
+        # every legacy counter attribute (``batcher.vmap_batches`` etc.)
+        # delegates to this registry-backed object — see the property loop
+        # below the class definition
+        self.stats = BatcherStats(registry=metrics)
 
     def begin_round(
         self,
@@ -301,6 +330,12 @@ class ReplayBatcher:
                 self._seg_groups[key] = group
                 if width > 1:
                     self.seg_batches += 1
+                if self.tracer is not None:
+                    self.tracer.span(
+                        f"{self.track}/batcher", "batch_round", begin, done,
+                        fp=fp, width=width,
+                        segment=f"{seg.start}:{seg.end}",
+                    )
         if group is not None and client.client_id in group.remaining:
             group.remaining.discard(client.client_id)
             if group.width > 1:
@@ -501,7 +536,26 @@ class ReplayBatcher:
         self._groups[fp] = group
         self.batches_executed += 1
         self.batch_sizes.append(batch)
+        if self.tracer is not None:
+            self.tracer.span(
+                f"{self.track}/batcher", "batch_round", start, group.done_at,
+                fp=fp, width=batch, vmap=group.outs is not None,
+            )
         return group
+
+
+def _delegate_stat(name: str) -> property:
+    return property(
+        lambda self: getattr(self.stats, name),
+        lambda self, v: setattr(self.stats, name, v),
+    )
+
+
+# back-compat attribute surface: ``batcher.vmap_batches`` and friends keep
+# reading/writing, but the numbers live in the registry-backed stats object
+for _stat_name, _ in BatcherStats._fields:
+    setattr(ReplayBatcher, _stat_name, _delegate_stat(_stat_name))
+ReplayBatcher.batch_sizes = property(lambda self: self.stats.batch_sizes)
 
 
 class RRTOEdgeServer:
@@ -518,14 +572,33 @@ class RRTOEdgeServer:
         environment: str = "indoor",
         ingress: Optional[ServerIngress] = None,
         clock: Optional[SimClock] = None,
+        name: str = "edge",
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.clock = clock or SimClock()
-        self.cache = ReplayCache(cache_capacity, cache_capacity_bytes)
+        self.name = name
+        self.tracer = tracer
+        # the root (or fleet-scoped) registry behind every counter on this
+        # box: cache.*, batcher.*, client.<id>.* all land under it
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.cache = ReplayCache(
+            cache_capacity, cache_capacity_bytes,
+            metrics=self.metrics.scope("cache"),
+        )
         self.server = OffloadServer(
-            server_device, execute=execute, replay_cache=self.cache
+            server_device, execute=execute, replay_cache=self.cache,
+            name=name, tracer=tracer,
         )
         self.ingress = ingress or ServerIngress()
-        self.batcher = ReplayBatcher(self.server, window_s=batch_window_s)
+        if tracer is not None:
+            self.ingress.tracer = tracer
+            self.ingress.track = f"{name}/ingress"
+        self.batcher = ReplayBatcher(
+            self.server, window_s=batch_window_s,
+            tracer=tracer, track=name,
+            metrics=self.metrics.scope("batcher"),
+        )
         self.environment = environment
         self.sessions: Dict[str, OffloadSession] = {}
         # fleet bookkeeping: sessions migrated onto / off this box
@@ -566,6 +639,9 @@ class RRTOEdgeServer:
             clock=self.clock,
             client_id=cid,
             min_repeats=min_repeats,
+            tracer=self.tracer,
+            trace_track=f"{self.name}/client/{cid}",
+            metrics=self.metrics.scope(f"client.{cid}"),
             **session_kwargs,
         )
         sess.client.replay_submit = self.batcher.make_submit(sess.client)
@@ -691,7 +767,7 @@ class RRTOEdgeServer:
             clients=len(self.sessions),
             sessions_adopted=self.sessions_adopted,
             sessions_migrated_out=self.sessions_migrated_out,
-            cache=dataclasses.asdict(self.cache.stats),
+            cache=self.cache.stats.as_dict(),
             cached_programs=len(self.cache),
             compiles=self.compile_count,
             batches=self.batcher.batches_executed,

@@ -36,11 +36,12 @@ persist the same way.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 from collections import OrderedDict
 from typing import Any, Dict, Optional, TYPE_CHECKING
+
+from repro.obs import MetricsRegistry, RegistryBackedStats
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.engine import ReplayProgram
@@ -48,18 +49,28 @@ if TYPE_CHECKING:  # pragma: no cover
 PERSIST_VERSION = 1
 
 
-@dataclasses.dataclass
-class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    insertions: int = 0
-    evictions: int = 0
-    bytes_evicted: float = 0.0
+class CacheStats(RegistryBackedStats):
+    """Replay-cache counters, registry-backed (see
+    :class:`repro.obs.MetricsRegistry`): a fleet-root snapshot reports
+    every replica's hit/miss/eviction counts under its scope."""
+
+    _fields = (
+        ("hits", 0),
+        ("misses", 0),
+        ("insertions", 0),
+        ("evictions", 0),
+        ("bytes_evicted", 0.0),
+    )
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def as_dict(self):
+        d = super().as_dict()
+        d["hit_rate"] = self.hit_rate
+        return d
 
 
 # executables whose size the program cannot report are assumed mid-sized so
@@ -88,7 +99,12 @@ class ReplayCache:
     ``capacity_bytes`` (when set).  ``pin()`` grants a fingerprint — and
     every entry derived from it — residency."""
 
-    def __init__(self, capacity: int = 8, capacity_bytes: Optional[float] = None):
+    def __init__(
+        self,
+        capacity: int = 8,
+        capacity_bytes: Optional[float] = None,
+        metrics: Optional[MetricsRegistry] = None,
+    ):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if capacity_bytes is not None and capacity_bytes <= 0:
@@ -111,7 +127,7 @@ class ReplayCache:
         # fingerprints known from a persisted cache file but whose programs
         # have not been recompiled since the restart: metadata only
         self._known: Dict[str, Dict[str, Any]] = {}
-        self.stats = CacheStats()
+        self.stats = CacheStats(registry=metrics)
 
     def __contains__(self, fingerprint: str) -> bool:
         # membership probes (the client-side cache-adoption check) do not
