@@ -53,6 +53,7 @@ def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
     the run ends with a per-benchmark summary naming exactly which guard
     failed where, instead of dying on the first assert."""
     from benchmarks import (
+        chaos_serving,
         decode_scaling,
         fleet_scaling,
         partition_sweep,
@@ -238,6 +239,50 @@ def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
         _bench_json(json_dir, "fleet_scaling",
                     metrics={}, guards={}, error=repr(e))
 
+    print("== chaos_serving (smoke) ==", file=sys.stderr, flush=True)
+    try:
+        # the fault-tolerance guards: under a seeded schedule (link outage,
+        # 8% RPC loss, one mid-stream replica crash) every request must
+        # complete bitwise-equal to the fault-free run, retried stateful
+        # steps must hit the dedup table (at-most-once), and a disabled
+        # injector must leave the stack byte-identical
+        chaos_points, chaos_checks = chaos_serving.run(
+            smoke=True, tracer=tracer
+        )
+        record("chaos_serving", chaos_checks)
+        by_scenario = {p.scenario: p for p in chaos_points}
+        loss = by_scenario["lossy_decode"]
+        csv_rows.append((
+            "smoke_chaos_serving",
+            loss.p99_ms * 1e3,
+            f"retries={loss.retries};dedup={loss.dedup_replies};"
+            f"fallbacks={by_scenario['outage_fallback'].outage_fallbacks};"
+            f"restores={by_scenario['crash_recovery'].crash_restores};"
+            f"bitwise={all(p.bitwise_equal for p in chaos_points)}",
+        ))
+        _bench_json(
+            json_dir, "chaos_serving",
+            metrics={
+                "retries": loss.retries,
+                "dedup_replies": loss.dedup_replies,
+                "outage_fallbacks":
+                    by_scenario["outage_fallback"].outage_fallbacks,
+                "crash_restores":
+                    by_scenario["crash_recovery"].crash_restores,
+                "steps_replayed":
+                    by_scenario["crash_recovery"].steps_replayed,
+                "loss_p99_ms": loss.p99_ms,
+                "loss_clean_p99_ms": loss.clean_p99_ms,
+                "all_bitwise_equal":
+                    all(p.bitwise_equal for p in chaos_points),
+            },
+            guards=chaos_checks,
+        )
+    except Exception as e:  # noqa: BLE001
+        failures.append(("chaos_serving", "crashed", repr(e)))
+        _bench_json(json_dir, "chaos_serving",
+                    metrics={}, guards={}, error=repr(e))
+
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.2f},{derived}")
@@ -246,6 +291,7 @@ def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
     benchmarks_run = (
         "partition_sweep", "tab4_rpc_gpu_util", "decode_scaling",
         "pipeline_overlap", "stateful_split", "fleet_scaling",
+        "chaos_serving",
     )
     failed_names = {b for b, _, _ in failures}
     for b in benchmarks_run:
@@ -264,6 +310,7 @@ def main(json_dir: Optional[str] = None) -> None:
     rows = []
 
     from benchmarks import (
+        chaos_serving,
         decode_scaling,
         fig1_deviceonly,
         fig10_kapao,
@@ -421,6 +468,17 @@ def main(json_dir: Optional[str] = None) -> None:
         f"p99_vs_nohedge={hedged.p99_ms / max(plain.p99_ms, 1e-9):.2f}x;"
         f"mean_vs_nohedge={hedged.mean_ms / max(plain.mean_ms, 1e-9):.2f}x;"
         f"guards={all(fleet_checks.values())}",
+    ))
+
+    print("== chaos_serving ==", file=sys.stderr, flush=True)
+    chaos_points, chaos_checks = chaos_serving.run()
+    loss = {p.scenario: p for p in chaos_points}["lossy_decode"]
+    rows.append((
+        "chaos_serving",
+        loss.p99_ms * 1e3,
+        f"retries={loss.retries};dedup={loss.dedup_replies};"
+        f"bitwise={all(p.bitwise_equal for p in chaos_points)};"
+        f"guards={all(chaos_checks.values())}",
     ))
 
     print("== roofline ==", file=sys.stderr, flush=True)

@@ -20,11 +20,12 @@ Fault-tolerance properties:
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import shutil
 import threading
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -35,17 +36,24 @@ def _leaf_paths(tree) -> List[Tuple[str, Any]]:
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
+# distinguishes concurrent writers' staging dirs within one process; the
+# pid component distinguishes processes
+_writer_ids = itertools.count()
+
+
 def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True) -> threading.Thread:
     """Write a checkpoint; returns the writer thread (joined when blocking)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     # snapshot to host memory synchronously (cheap vs device compute)
     leaves = [(name, np.asarray(leaf)) for name, leaf in _leaf_paths(tree)]
 
+    # unique per writer: two non-blocking saves of the same step must never
+    # share a staging dir (rmtree racing a concurrent writer's makedirs)
+    token = f"{os.getpid()}.{next(_writer_ids)}"
+
     def _write():
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
+        tmp = f"{final}.tmp.{token}"
         os.makedirs(tmp)
         manifest = {"step": step, "leaves": {}}
         for i, (name, arr) in enumerate(leaves):
@@ -59,9 +67,17 @@ def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True) -> threading.
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)                      # atomic publish
-        latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+            # ignore_errors: a concurrent same-step writer may be removing
+            # the stale dir at the same time — losing that race is harmless
+            shutil.rmtree(final, ignore_errors=True)
+        try:
+            os.rename(tmp, final)                  # atomic publish
+        except OSError:
+            # a concurrent writer published this step between our rmtree and
+            # rename; either staging dir holds a complete checkpoint of the
+            # same step, so keep theirs and withdraw ours
+            shutil.rmtree(tmp, ignore_errors=True)
+        latest_tmp = os.path.join(ckpt_dir, f"LATEST.tmp.{token}")
         with open(latest_tmp, "w") as f:
             f.write(str(step))
         os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
@@ -89,9 +105,25 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = sorted(
         int(d.split("_")[1])
         for d in os.listdir(ckpt_dir)
-        if d.startswith("step_") and not d.endswith(".tmp")
+        if d.startswith("step_") and ".tmp" not in d
     )
     return steps[-1] if steps else None
+
+
+def load_flat(ckpt_dir: str, step: int) -> Dict[str, np.ndarray]:
+    """Load a checkpoint saved from a flat ``{name: array}`` dict without
+    needing a target tree — the session-recovery path, where the reader
+    (a surviving replica) has no template for the crashed session's state.
+    Returns plain host arrays keyed by the original dict keys."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    out: Dict[str, np.ndarray] = {}
+    for name, meta in manifest["leaves"].items():
+        # keystr of a flat dict leaf is "['key']" — strip to the key itself
+        key = name[2:-2] if name.startswith("['") and name.endswith("']") else name
+        out[key] = np.load(os.path.join(d, meta["file"]))
+    return out
 
 
 def restore(

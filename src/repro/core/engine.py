@@ -38,7 +38,12 @@ from repro.core.energy import (
     EnergyMeter,
 )
 from repro.core.intercept import InterceptedCall
-from repro.core.netsim import NetworkModel
+from repro.core.netsim import (
+    FaultInjector,
+    NetworkModel,
+    RetryPolicy,
+    RpcTimeoutError,
+)
 from repro.core.opseq import (
     candidate_sequences,
     detect_loop_carried,
@@ -87,6 +92,11 @@ PAYLOAD_RETENTION_CALLS = 4096
 # detection window (~3 repeats of h2d/d2h payloads) out from under the
 # search.  Bounded by transfer count, so the pinned-tensor set stays small.
 PAYLOAD_RETENTION_TRANSFERS = 64
+# at-most-once dedup: replies cached per (client, sequence number).  A client
+# retries one in-flight step at a time and moves on once it has the reply, so
+# a small window is ample; the bound keeps a long decode stream from pinning
+# every step's outputs server-side.
+DEDUP_WINDOW = 64
 
 
 @contextlib.contextmanager
@@ -111,6 +121,18 @@ def _avals_nbytes(avals) -> int:
             n *= int(s)
         total += n
     return total
+
+
+@dataclasses.dataclass
+class StepLogEntry:
+    """One completed stateful replay step, as the crash-recovery layer needs
+    it: the wire inputs (and any fresh-state override) re-executed
+    deterministically against a restored checkpoint reproduce the lost
+    carried state token-for-token."""
+
+    seq: int
+    wire_inputs: List[np.ndarray]
+    fresh_carried: Optional[Dict[int, np.ndarray]]
 
 
 class SimClock:
@@ -895,6 +917,12 @@ class OffloadServer:
         self.replay_cache = replay_cache
         self.compile_seconds = 0.0
         self.compile_count = 0         # actual program builds (not cache hits)
+        # at-most-once reply cache: (client id) -> {seq -> cached reply}.
+        # A retried sequence number returns the cached reply and never
+        # re-executes — the guard that keeps a retransmitted stateful step
+        # from advancing the donated KV cache twice.
+        self.dedup: Dict[str, Dict[int, Any]] = {}
+        self.dedup_hits = 0
 
     def context(self, client_id: str = DEFAULT_CLIENT) -> ClientContext:
         ctx = self.contexts.get(client_id)
@@ -1221,6 +1249,29 @@ class OffloadServer:
                 ctx.env[bound.h2d_addrs[i]] = val
                 ctx.env[bound.d2h_addrs[j]] = val
 
+    def step_once(
+        self, client_id: str, seq: Optional[int], thunk
+    ) -> Tuple[Any, bool]:
+        """Execute ``thunk`` at-most-once under ``(client_id, seq)``.
+
+        The reliability protocol's server half: a sequence number already in
+        the dedup table means this request was executed and its response
+        lost in flight — the cached reply is returned and the thunk (which
+        advances donated carried state in place and therefore MUST NOT run
+        twice) is not re-executed.  Returns ``(reply, was_cached)``.  A None
+        sequence number bypasses dedup entirely (the fault-free path)."""
+        if seq is None:
+            return thunk(), False
+        table = self.dedup.setdefault(client_id, {})
+        if seq in table:
+            self.dedup_hits += 1
+            return table[seq], True
+        reply = thunk()
+        table[seq] = reply
+        while len(table) > DEDUP_WINDOW:
+            del table[min(table)]
+        return reply, False
+
     def occupy(self, compute_seconds: float, start_t: float) -> float:
         """Reserve the shared GPU queue; returns the completion time."""
         begin = max(self.busy_until, start_t)
@@ -1263,6 +1314,12 @@ class InferenceStats(RegistryBackedStats):
         ("wall_seconds", 0.0),
         ("joules", 0.0),
         ("cache_adoptions", 0),
+        # fault-tolerance counters (all zero without a FaultInjector)
+        ("retries", 0),               # lost-message timeouts paid
+        ("dedup_replies", 0),         # retried steps answered from the cache
+        ("outage_fallbacks", 0),      # inferences served device-locally
+        ("outage_waits", 0),          # stateful inferences that sat out an outage
+        ("crash_restores", 0),        # checkpoint+replay recoveries absorbed
     )
 
     def __init__(
@@ -1299,6 +1356,8 @@ class RRTOClient:
         tracer: Optional[Tracer] = None,
         trace_track: Optional[str] = None,
         metrics: Optional[MetricsRegistry] = None,
+        fault: Optional[FaultInjector] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ):
         if variant not in ("rrto", "semi_rrto", "transparent"):
             raise ValueError(variant)
@@ -1364,6 +1423,17 @@ class RRTOClient:
         self.searches_run = 0
         self.fallbacks = 0
         self._query_cache: set = set()
+        # fault tolerance: injected link faults + retry discipline (None =
+        # perfect wire, every hook below is pass-through), the per-stateful-
+        # step sequence number driving the server's at-most-once dedup, and
+        # an optional bounded log of completed steps since the last carried-
+        # state checkpoint (attached by the recovery layer; replayed
+        # deterministically after a replica crash)
+        self.fault = fault
+        self.retry_policy = retry_policy or RetryPolicy()
+        self.step_seq = 0
+        self.step_log: Optional[Any] = None    # deque of _StepLogEntry
+        self.outage_active = False
         # observability: spans land on this client's track; None = tracing
         # off (every emission site guards on it, so the disabled path does
         # no per-event work)
@@ -1452,6 +1522,8 @@ class RRTOClient:
         self.stats.network_bytes += nbytes
 
     def _rpc(self, payload: float, response: float) -> None:
+        if self.fault is not None:
+            self._ride_out_losses(payload)
         t0 = self.clock.t
         dt = self.network.rpc_time(payload, response, self.clock.t)
         self.clock.advance(dt)
@@ -1466,6 +1538,113 @@ class RRTOClient:
                 payload=payload,
                 response=response,
             )
+
+    def _retry_timeout(self, attempt: int) -> None:
+        """Pay one lost-message timeout: the client sat waiting for a reply
+        that never came, then retransmits.  Billed standby (the radio idles
+        listening) plus the retransmitted bytes; exponential backoff with
+        deterministic jitter keeps repeated losses from hammering the link."""
+        dt = self.retry_policy.timeout_s(attempt, self.fault.jitter_unit())
+        t0 = self.clock.t
+        self.clock.advance(dt)
+        self.meter.add(STATE_STANDBY, dt)
+        self.stats.retries += 1
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.trace_track, "retry", t0, attempt=attempt, timeout=dt,
+            )
+
+    def _ride_out_losses(self, payload: float) -> int:
+        """Simulate the lost attempts preceding one delivered message: each
+        loss costs a timeout (backoff + jitter) and a retransmission of the
+        payload.  Raises :class:`RpcTimeoutError` once the retry budget is
+        exhausted — the caller's cue to declare an outage.  Used for
+        *idempotent* traffic (recording-phase RPCs re-execute functionally
+        identical work; uploads just rewrite the same buffers), where only
+        the delivered attempt has server-side effect by construction."""
+        attempts = 0
+        while self.fault.rpc_fate() != "ok":
+            if attempts >= self.retry_policy.max_attempts:
+                raise RpcTimeoutError(
+                    f"client {self.client_id!r}: RPC lost "
+                    f"{attempts + 1} consecutive times"
+                )
+            self._retry_timeout(attempts)
+            self._account_network(1, payload)   # the retransmission
+            attempts += 1
+        return attempts
+
+    def _reliable_step(
+        self, submit, inputs: List[np.ndarray], fresh: Optional[Dict[int, np.ndarray]]
+    ) -> Tuple[List[Any], float]:
+        """One sequence-numbered stateful step under the at-most-once
+        protocol.  The donated step executable advances server-resident
+        state in place, so a retransmission must never re-execute it: the
+        server's dedup table (:meth:`OffloadServer.step_once`) executes the
+        submission on first receipt and answers every retry of the same
+        sequence number from the reply cache.
+
+        Loss is drawn per transmission: a lost *request* never reached the
+        server (the retry executes fresh); a lost *response* means the step
+        DID execute — the retry returns the cached reply, and carried state
+        has advanced exactly once either way."""
+        seq = self.step_seq
+        payload = float(sum(np.asarray(a).nbytes for a in inputs))
+        attempts = 0
+        while True:
+            fate = self.fault.rpc_fate()
+            if fate != "lost_request":
+                # the request was delivered: the server executes (or answers
+                # from the dedup cache if this seq already ran)
+                reply, cached = self.server.step_once(
+                    self.client_id, seq,
+                    lambda: submit(inputs, self.clock.t, fresh_carried=fresh),
+                )
+                if cached:
+                    self.stats.dedup_replies += 1
+                if fate == "ok":
+                    return reply
+            # this attempt's reply never arrived — pay the timeout and resend
+            if attempts >= self.retry_policy.max_attempts:
+                raise RpcTimeoutError(
+                    f"client {self.client_id!r}: stateful step {seq} lost "
+                    f"{attempts + 1} consecutive times"
+                )
+            self._retry_timeout(attempts)
+            self._account_network(1, payload)   # the retransmission
+            attempts += 1
+
+    def _note_step(
+        self,
+        wire_inputs: List[np.ndarray],
+        fresh: Optional[Dict[int, np.ndarray]],
+    ) -> None:
+        """Advance the stateful-step sequence number and, when the recovery
+        layer attached a step log, record the completed step for
+        deterministic crash replay.  Copies, not views: the app may mutate
+        its buffers between steps, and a replayed step must ship exactly
+        what the original shipped."""
+        if not self.stateful_replay:
+            return
+        if self.step_log is not None:
+            self.step_log.append(
+                StepLogEntry(
+                    seq=self.step_seq,
+                    wire_inputs=[
+                        np.array(np.asarray(a), copy=True)
+                        for a in wire_inputs
+                    ],
+                    fresh_carried=(
+                        {
+                            k: np.array(np.asarray(v), copy=True)
+                            for k, v in fresh.items()
+                        }
+                        if fresh
+                        else None
+                    ),
+                )
+            )
+        self.step_seq += 1
 
     def _local(self, dt: float = PER_LOCAL_OP_S) -> None:
         self.clock.advance(dt)
@@ -1796,17 +1975,25 @@ class RRTOClient:
                     fresh = self._fresh_carried or None
                     self._fresh_carried = {}
                     t_sub = self.clock.t
-                    if self.replay_submit is not None:
-                        # cross-client batched backend (multi-tenant serving)
-                        outs, done_at = self.replay_submit(
+                    # cross-client batched backend when the edge server
+                    # installed one (multi-tenant serving), solo otherwise
+                    submit = self.replay_submit or (
+                        lambda ins, t, fresh_carried=None: self.server.run_replay(
+                            ins, t, self.client_id, fresh_carried=fresh_carried
+                        )
+                    )
+                    if self.fault is not None and self.stateful_replay:
+                        # the donated step is non-idempotent: retries ride
+                        # the sequence-numbered at-most-once protocol
+                        outs, done_at = self._reliable_step(
+                            submit, self._replay_inputs, fresh
+                        )
+                    else:
+                        outs, done_at = submit(
                             self._replay_inputs, self.clock.t,
                             fresh_carried=fresh,
                         )
-                    else:
-                        outs, done_at = self.server.run_replay(
-                            self._replay_inputs, self.clock.t, self.client_id,
-                            fresh_carried=fresh,
-                        )
+                    self._note_step(self._replay_inputs, fresh)
                     self._replay_outputs = outs
                     self._replay_done_at = done_at
                     if self.tracer is not None:
@@ -1901,6 +2088,7 @@ class RRTOClient:
             self._replay_inputs, ctx.env, execute=self.server.execute,
             fresh_carried=fresh,
         )
+        self._note_step(self._replay_inputs, fresh)
         # server segments occupy the shared GPU — through the co-tenant
         # segment batcher when the edge server installed one (same-segment
         # submissions of one shared IOS execute as one batched occupancy)

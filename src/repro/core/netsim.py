@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -22,6 +22,197 @@ MBPS = 1e6 / 8.0  # bytes/s per Mbps
 
 TRACE_INTERVAL_S = 0.1
 TRACE_DURATION_S = 300.0
+
+# the wire during a declared outage / total collapse: not zero (a transfer
+# that slips through the client-side outage guard must stall long-but-finite,
+# not hang the simulation), but slow enough that no planner ever chooses it
+OUTAGE_FLOOR_BYTES_PER_S = 1e4
+
+
+def _splitmix64(x: int) -> int:
+    """One splitmix64 round — a stateless 64-bit mixer, so fault draws are a
+    pure function of (seed, draw index) and never depend on numpy RNG state."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+class RpcTimeoutError(RuntimeError):
+    """Every retry attempt of one RPC was lost — the link is effectively
+    down and the caller should declare an outage instead of retrying on."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Client-side RPC retry discipline: timeout, exponential backoff with
+    deterministic jitter, bounded attempts.  Jitter comes from the fault
+    injector's stateless hash, so a retried run is exactly reproducible."""
+
+    base_timeout_s: float = 0.02
+    backoff: float = 2.0
+    max_backoff_s: float = 0.5
+    jitter: float = 0.25          # fraction of the timeout, in [0, jitter)
+    max_attempts: int = 8
+
+    def timeout_s(self, attempt: int, unit: float) -> float:
+        """Timeout for retry number ``attempt`` (0-based); ``unit`` in [0,1)
+        supplies the deterministic jitter draw."""
+        t = min(self.base_timeout_s * self.backoff ** attempt, self.max_backoff_s)
+        return t * (1.0 + self.jitter * unit)
+
+
+class FaultInjector:
+    """Deterministic, seeded fault model for the simulated wire and fleet.
+
+    Four fault dimensions, all optional and all default-off:
+
+    * **outage windows** — ``(start_s, end_s)`` intervals during which the
+      link is down: ``bandwidth_factor`` collapses to 0 and clients that
+      consult :meth:`in_outage` fall back to device-local execution;
+    * **per-RPC loss** — each transmitted message is lost with probability
+      ``rpc_loss_prob``; a lost message costs the client a timeout + retry.
+      Loss draws are a pure function of (seed, draw index) — splitmix64, no
+      RNG state — so runs are bitwise-reproducible;
+    * **bandwidth collapses** — ``(start_s, end_s, factor)`` episodes that
+      multiply the link bandwidth (e.g. 0.05 = a 20x collapse), driving the
+      adaptive re-planner without taking the link fully down;
+    * **replica crashes** — ``{replica_name: t}`` crash times the fleet layer
+      polls via :meth:`due_crashes`; a crash destroys the replica's device
+      memory (donated carried state included), unlike a mere ``failed`` mark.
+
+    Every consumer guards on ``fault is not None`` (the PR-7 tracer
+    discipline), so runs without an injector — and runs with a default
+    injector, which never perturbs anything — stay bitwise-identical to the
+    pre-fault-layer behaviour.
+    """
+
+    def __init__(
+        self,
+        *,
+        seed: int = 0,
+        outages: Sequence[Tuple[float, float]] = (),
+        rpc_loss_prob: float = 0.0,
+        collapses: Sequence[Tuple[float, float, float]] = (),
+        crashes: Optional[dict] = None,
+    ):
+        if not 0.0 <= rpc_loss_prob <= 1.0:
+            raise ValueError(f"rpc_loss_prob must be in [0,1], got {rpc_loss_prob}")
+        self.seed = int(seed)
+        self.outages = tuple(
+            (float(a), float(b)) for a, b in sorted(outages)
+        )
+        for a, b in self.outages:
+            if b <= a:
+                raise ValueError(f"empty outage window ({a}, {b})")
+        self.rpc_loss_prob = float(rpc_loss_prob)
+        self.collapses = tuple(
+            (float(a), float(b), float(f)) for a, b, f in sorted(collapses)
+        )
+        for a, b, f in self.collapses:
+            if b <= a or not 0.0 < f <= 1.0:
+                raise ValueError(f"bad collapse episode ({a}, {b}, {f})")
+        self.crashes = dict(crashes or {})
+        self.crashed: set = set()
+        # observability: draws taken / messages dropped so far
+        self.draws = 0
+        self.dropped = 0
+
+    # -- outage windows -------------------------------------------------
+    def in_outage(self, t: float) -> bool:
+        return any(a <= t < b for a, b in self.outages)
+
+    def outage_until(self, t: float) -> float:
+        """End of the outage window containing ``t`` (``t`` itself when the
+        link is up)."""
+        for a, b in self.outages:
+            if a <= t < b:
+                return b
+        return t
+
+    # -- bandwidth ------------------------------------------------------
+    def bandwidth_factor(self, t: float) -> float:
+        """Multiplier on the trace bandwidth at ``t``: 0 during an outage,
+        the episode factor during a collapse, 1 otherwise."""
+        if self.in_outage(t):
+            return 0.0
+        factor = 1.0
+        for a, b, f in self.collapses:
+            if a <= t < b:
+                factor = min(factor, f)
+        return factor
+
+    # -- per-RPC loss ---------------------------------------------------
+    def _unit(self, n: int, salt: int) -> float:
+        return _splitmix64(self.seed * 0x10001 + n * 2 + salt) / 2.0 ** 64
+
+    def jitter_unit(self) -> float:
+        """One deterministic uniform draw in [0,1) for backoff jitter."""
+        self.draws += 1
+        return self._unit(self.draws, salt=1)
+
+    def rpc_fate(self) -> str:
+        """Fate of one transmitted message: ``"ok"``, ``"lost_request"`` or
+        ``"lost_response"``.  Consumes one deterministic draw; request- and
+        response-loss are equally likely.  The distinction matters only for
+        non-idempotent work: a lost *response* means the server executed."""
+        self.draws += 1
+        if self._unit(self.draws, salt=0) >= self.rpc_loss_prob:
+            return "ok"
+        self.dropped += 1
+        return (
+            "lost_request"
+            if self._unit(self.draws, salt=2) < 0.5
+            else "lost_response"
+        )
+
+    # -- replica crashes ------------------------------------------------
+    def due_crashes(self, t: float) -> List[str]:
+        """Replica names whose crash time has arrived and not yet fired.
+        The caller (the fleet) is expected to act on each exactly once."""
+        due = [
+            name
+            for name, tc in sorted(self.crashes.items())
+            if tc <= t and name not in self.crashed
+        ]
+        self.crashed.update(due)
+        return due
+
+    @classmethod
+    def chaos_schedule(
+        cls,
+        seed: int,
+        *,
+        duration_s: float,
+        n_outages: int = 1,
+        mean_outage_s: float = 0.5,
+        rpc_loss_prob: float = 0.05,
+        n_collapses: int = 0,
+        collapse_factor: float = 0.05,
+        crashes: Optional[dict] = None,
+    ) -> "FaultInjector":
+        """A seeded fault schedule over ``[0, duration_s]``: outage windows
+        and collapse episodes placed deterministically from the seed (evenly
+        spread phases, hashed offsets) — the chaos benchmark's generator."""
+        outages = []
+        for i in range(n_outages):
+            u = _splitmix64(seed * 7919 + i) / 2.0 ** 64
+            start = duration_s * (i + 0.25 + 0.5 * u) / max(1, n_outages)
+            outages.append((start, start + mean_outage_s))
+        collapses = []
+        for i in range(n_collapses):
+            u = _splitmix64(seed * 104729 + i) / 2.0 ** 64
+            start = duration_s * (i + 0.1 + 0.4 * u) / max(1, n_collapses)
+            collapses.append(
+                (start, start + 2.0 * mean_outage_s, collapse_factor)
+            )
+        return cls(
+            seed=seed,
+            outages=outages,
+            rpc_loss_prob=rpc_loss_prob,
+            collapses=collapses,
+            crashes=crashes,
+        )
 
 
 def synth_bandwidth_trace(
@@ -96,11 +287,18 @@ class ServerIngress:
     # pass the sim time — transfer_time does)
     tracer: Optional[Any] = None
     track: str = "ingress"
+    # fault injection: bandwidth-collapse episodes squeeze the shared pipe
+    # too (a site-level event hits every client behind it); None = perfect
+    fault: Optional["FaultInjector"] = None
 
-    def share(self) -> float:
+    def share(self, t: Optional[float] = None) -> float:
         share = self.capacity_bytes_per_s / max(1, self.active_clients)
         if self.backhaul is not None:
             share = min(share, self.backhaul.share())
+        if self.fault is not None and t is not None:
+            factor = self.fault.bandwidth_factor(t)
+            if factor < 1.0:
+                share = max(share * factor, OUTAGE_FLOOR_BYTES_PER_S)
         return share
 
     def account(self, nbytes: float, t: Optional[float] = None) -> None:
@@ -155,10 +353,18 @@ class NetworkModel:
     per_rpc_cpu_s: float = 30e-6      # serialization / libtirpc stack cost
     interval_s: float = TRACE_INTERVAL_S
     ingress: Optional[ServerIngress] = None
+    # fault injection: outage windows and collapse episodes scale the trace
+    # bandwidth; None (the default) leaves every timing bitwise-unchanged
+    fault: Optional[FaultInjector] = None
 
     def bandwidth_at(self, t: float) -> float:
         idx = int(t / self.interval_s) % len(self.trace_bytes_per_s)
-        return float(self.trace_bytes_per_s[idx])
+        bw = float(self.trace_bytes_per_s[idx])
+        if self.fault is not None:
+            factor = self.fault.bandwidth_factor(t)
+            if factor < 1.0:
+                bw = max(bw * factor, OUTAGE_FLOOR_BYTES_PER_S)
+        return bw
 
     def _rtt_at(self, t: float) -> float:
         # deterministic jitter keyed to the trace position
@@ -172,7 +378,7 @@ class NetworkModel:
             return 0.0
         bw = self.bandwidth_at(t)
         if self.ingress is not None:
-            bw = min(bw, self.ingress.share())
+            bw = min(bw, self.ingress.share(t))
             self.ingress.account(nbytes, t)
         # a zero-bandwidth interval (obstructed radio, saturated ingress)
         # stalls the transfer for a long-but-finite interval instead of

@@ -47,7 +47,12 @@ from repro.core.engine import (
 )
 from repro.core.intercept import FrameworkNoiseModel, JaxprInterceptor
 from repro.core.flatten import flatten_closed_jaxpr
-from repro.core.netsim import NetworkModel, get_network
+from repro.core.netsim import (
+    FaultInjector,
+    NetworkModel,
+    RetryPolicy,
+    get_network,
+)
 from repro.obs import MetricsRegistry, Tracer
 from repro.partition.planner import PartitionConfig
 
@@ -128,6 +133,8 @@ class OffloadSession:
         tracer: Optional["Tracer"] = None,
         trace_track: Optional[str] = None,
         metrics: Optional["MetricsRegistry"] = None,
+        fault: Optional[FaultInjector] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ):
         if system not in SYSTEMS:
             raise ValueError(f"unknown system {system!r}; pick from {SYSTEMS}")
@@ -208,12 +215,19 @@ class OffloadSession:
                 tracer=tracer,
                 trace_track=trace_track,
                 metrics=metrics,
+                fault=fault,
+                retry_policy=retry_policy,
             )
             self.interceptor = JaxprInterceptor(
                 self.client,
                 noise or FrameworkNoiseModel(),
                 input_wire_divisor=model.input_wire_divisor,
             )
+            if fault is not None:
+                self.network.fault = fault
+            # built lazily on the first outage fallback; fault-free sessions
+            # never pay the extra jit
+            self._direct_fn = None
         else:
             self.client = None
             self.interceptor = None
@@ -332,8 +346,18 @@ class OffloadSession:
         else:
             self.meter.add(STATE_CONTROL, CLIENT_CONTROL_S)
             self.clock.advance(CLIENT_CONTROL_S)
-            mode = self.client.mode
-            outputs = self._run_intercepted(inputs)
+            cl = self.client
+            if cl.fault is not None and cl.fault.in_outage(self.clock.t):
+                mode, outputs = self._infer_during_outage(inputs)
+            else:
+                if cl.outage_active:
+                    cl.outage_active = False
+                    if cl.tracer is not None:
+                        cl.tracer.instant(
+                            cl.trace_track, "link_healed", self.clock.t
+                        )
+                mode = cl.mode
+                outputs = self._run_intercepted(inputs)
         self._infer_count += 1
         if self._infer_count == 1:
             self.stage_marks["after_first_inference"] = (
@@ -461,9 +485,91 @@ class OffloadSession:
         return results
 
     # ------------------------------------------------------------------
+    def _infer_during_outage(self, inputs) -> Tuple[str, List[Any]]:
+        """One inference with the link declared down.  Three escape hatches,
+        picked by what the session has to lose:
+
+        * stateful replay — the carried state lives in donated server
+          buffers and cannot be recomputed locally, so the client sits out
+          the window (standby) and resumes through the at-most-once retry
+          protocol once the link heals;
+        * split replay with a replanner — adopt the outage plan (bandwidth
+          collapsed to the simulated floor, which lands every segment on the
+          device) and keep replaying through the normal split machinery;
+        * anything else — run the whole model on the device: identical
+          values at device-class latency, exactly the Intra-DP-style local
+          path the offloader exists to beat.
+        """
+        cl = self.client
+        if not cl.outage_active:
+            # the probe that discovered the dead link: one timeout burned
+            cl.outage_active = True
+            dt = cl.retry_policy.base_timeout_s
+            t0 = self.clock.t
+            self.clock.advance(dt)
+            self.meter.add(STATE_STANDBY, dt)
+            if cl.tracer is not None:
+                cl.tracer.instant(cl.trace_track, "outage_declared", t0)
+        if cl.stateful_replay:
+            end = cl.fault.outage_until(self.clock.t)
+            cl.stats.outage_waits += 1
+            if cl.tracer is not None:
+                cl.tracer.span(
+                    cl.trace_track, "outage_wait", self.clock.t, end
+                )
+            cl._wait_until(end)
+            return cl.mode, self._run_intercepted(inputs)
+        if cl.mode == MODE_REPLAYING and cl.replanner is not None:
+            cl.stats.outage_fallbacks += 1
+            if cl.tracer is not None:
+                cl.tracer.instant(
+                    cl.trace_track, "outage_fallback", self.clock.t,
+                    path="split",
+                )
+            plan = cl.replanner.declare_outage(self.clock.t)
+            if plan is not None:
+                cl._install_plan(plan)
+            return cl.mode, self._run_intercepted(inputs)
+        cl.stats.outage_fallbacks += 1
+        if cl.tracer is not None:
+            cl.tracer.instant(
+                cl.trace_track, "outage_fallback", self.clock.t,
+                path="device",
+            )
+        return "outage_fallback", self._device_fallback(inputs)
+
+    def _device_fallback(self, inputs) -> List[Any]:
+        """Device-local execution for a declared outage.  Values are
+        computed *eagerly per-op* — bitwise-identical to the replay
+        executable, where a whole-graph ``jax.jit`` is not (fusion reorders
+        float math) — and timed as the device's eager dispatch, same as
+        :meth:`_device_only`."""
+        args = list(self._aux_leaves) + list(inputs)
+        if self.execute:
+            outs = self._full_apply(tuple(args))
+        else:
+            outs = [
+                np.zeros(v.aval.shape, v.aval.dtype)
+                for v in self._steady_jaxpr.outvars
+            ]
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        dt = self.client_device.sequence_time(
+            self._steady_flops,
+            self._steady_bytes,
+            num_kernels=self._n_kernels,
+            fusion_factor=1.0,
+        )
+        self.clock.advance(dt)
+        self.meter.add(STATE_INFERENCE, dt)
+        return [np.asarray(o) for o in outs]
+
+    # ------------------------------------------------------------------
     def _device_only(self, inputs) -> List[Any]:
         args = list(self._aux_leaves) + list(inputs)
         if self.execute:
+            if self._direct_fn is None:
+                self._direct_fn = jax.jit(self._full_apply)
             outs = self._direct_fn(tuple(args))
         else:
             outs = [

@@ -204,18 +204,32 @@ class HedgedRouter:
             return t_primary, primary_rep.name
 
         self.stats.hedged += 1
+        tried = {primary_idx, backup_idx}
         backup = self.replicas[backup_idx]
         t_backup = complete(backup, req_idx)
+        while t_primary is None and t_backup is None:
+            # the primary failed outright and the unlucky backup pick failed
+            # too: walk every remaining healthy replica before giving up —
+            # a third box can still serve.  This is failure recovery, not
+            # speculation, so the success path never runs extra duplicates.
+            remaining = [
+                i for i, r in enumerate(self.replicas)
+                if i not in tried and not r.failed
+            ]
+            if not remaining:
+                raise AllReplicasFailedError(
+                    f"request {req_idx}: primary {primary_rep.name!r} and "
+                    f"every healthy hedge candidate failed to complete"
+                )
+            backup_idx = remaining[0]
+            tried.add(backup_idx)
+            backup = self.replicas[backup_idx]
+            t_backup = complete(backup, req_idx)
         candidates = []
         if t_primary is not None:
             candidates.append((t_primary, primary_rep.name))
         if t_backup is not None:
             candidates.append((deadline + t_backup, backup.name))
-        if not candidates:
-            raise AllReplicasFailedError(
-                f"request {req_idx}: both {primary_rep.name!r} and "
-                f"{backup.name!r} failed to complete"
-            )
         if t_primary is None:
             self.stats.failures_recovered += 1
         t, winner = min(candidates)

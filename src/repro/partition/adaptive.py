@@ -31,6 +31,7 @@ from typing import Optional
 
 from repro.core.costmodel import DeviceSpec
 from repro.core.energy import PowerModel
+from repro.core.netsim import OUTAGE_FLOOR_BYTES_PER_S
 from repro.obs import MetricsRegistry, RegistryBackedStats, Tracer
 from repro.partition.planner import (
     EvaluatedPlan,
@@ -51,6 +52,7 @@ class ReplannerStats(RegistryBackedStats):
         ("plans_considered", 0),
         ("replans", 0),               # adopted swaps
         ("rejected_by_hysteresis", 0),
+        ("outage_replans", 0),        # declared-outage immediate swaps
     )
 
 
@@ -84,6 +86,7 @@ class AdaptiveReplanner:
         self.ema_bandwidth: Optional[float] = None
         self._last_plan_t: Optional[float] = None
         self.current: Optional[EvaluatedPlan] = None
+        self._outage_plan = False
 
     # ------------------------------------------------------------------
     def _plan_at(self, bandwidth: float, now: float = 0.0) -> EvaluatedPlan:
@@ -112,9 +115,41 @@ class AdaptiveReplanner:
         self.current = self._plan_at(bandwidth, now)
         return self.current.plan
 
+    def declare_outage(self, now: float) -> Optional[SplitPlan]:
+        """The link is down: re-plan immediately at the outage-floor
+        bandwidth — no EMA smoothing, no rate limit, no hysteresis.  There
+        is no decision to damp; staying on a wire-crossing plan means
+        stalling every inference on a dead link.  The EMA collapses to the
+        floor too, so once the link heals :meth:`observe`'s usual
+        rate-limited, hysteresis-guarded path re-offloads as fresh samples
+        pull the smoothed estimate back up."""
+        self.ema_bandwidth = OUTAGE_FLOOR_BYTES_PER_S
+        self._last_plan_t = now
+        if self._outage_plan:
+            return None
+        self._outage_plan = True
+        self.stats.outage_replans += 1
+        candidate = self._plan_at(OUTAGE_FLOOR_BYTES_PER_S, now)
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.trace_track, "outage_replan", now,
+                adopted=candidate.plan.signature(),
+            )
+        if (
+            self.current is not None
+            and candidate.plan.signature() == self.current.plan.signature()
+        ):
+            self.current = candidate
+            return None
+        self.current = candidate
+        return candidate.plan
+
     def observe(self, bandwidth: float, now: float) -> Optional[SplitPlan]:
         """Feed one bandwidth sample; returns a new plan iff the session
         should swap (hysteresis and rate limit already applied)."""
+        if bandwidth > OUTAGE_FLOOR_BYTES_PER_S:
+            # a real sample: the link is back, outage declarations re-arm
+            self._outage_plan = False
         if self.current is None:
             return self.initial_plan(bandwidth, now)
         self.stats.observations += 1

@@ -14,6 +14,9 @@ Public API:
 * :class:`~repro.serving.fleet.EdgeFleet` — N replicated edge servers behind
   a hedged, affinity-placing router with cache replication and carried-state
   migration.
+* :class:`~repro.serving.recovery.SessionCheckpointer` — periodic carried-
+  state checkpoints + bounded step replay, the crash-recovery half of the
+  fault-tolerance layer.
 """
 from repro.serving.engine import (
     GenerationResult,
@@ -29,10 +32,12 @@ from repro.serving.fleet import (
     FleetStats,
 )
 from repro.serving.multitenant import ReplayBatcher, RRTOEdgeServer
+from repro.serving.recovery import CarriedCheckpoint, SessionCheckpointer
 from repro.serving.replay_cache import CacheStats, ReplayCache
 
 __all__ = [
     "CacheStats",
+    "CarriedCheckpoint",
     "EdgeFleet",
     "FleetClient",
     "FleetReplica",
@@ -45,4 +50,5 @@ __all__ = [
     "ReplayCache",
     "RRTOEdgeServer",
     "RRTOServedLM",
+    "SessionCheckpointer",
 ]

@@ -59,7 +59,12 @@ import numpy as np
 
 from repro.core.costmodel import GTX_2080TI, DeviceSpec
 from repro.core.engine import SimClock
-from repro.core.netsim import EventTimeline, SharedBackhaul, multi_node_ingress
+from repro.core.netsim import (
+    EventTimeline,
+    FaultInjector,
+    SharedBackhaul,
+    multi_node_ingress,
+)
 from repro.core.offload import InferenceResult, OffloadableModel, OffloadSession
 from repro.distributed.straggler import (
     HedgedRouter,
@@ -67,6 +72,7 @@ from repro.distributed.straggler import (
 )
 from repro.obs import MetricsRegistry, RegistryBackedStats, Tracer
 from repro.serving.multitenant import RRTOEdgeServer
+from repro.serving.recovery import SessionCheckpointer
 
 
 @dataclasses.dataclass
@@ -102,6 +108,11 @@ class FleetStats(RegistryBackedStats):
         ("cache_syncs", 0),
         ("replicated_fingerprints", 0),
         ("backup_sessions", 0),
+        ("crashes", 0),
+        ("crash_restores", 0),
+        ("checkpoints", 0),
+        ("checkpoint_bytes", 0.0),
+        ("steps_replayed", 0),
     )
 
 
@@ -168,6 +179,7 @@ class FleetClient:
         re-dispatches.  May raise
         :class:`~repro.distributed.straggler.AllReplicasFailedError`."""
         fleet = self.fleet
+        fleet.apply_due_faults()
         tracer = fleet.tracer
         req = self._req_idx
         self._req_idx += 1
@@ -218,6 +230,8 @@ class FleetClient:
             # inside the completion source)
             self.primary = winner
         self._note_lock()
+        if self.stateful and fleet.checkpointer is not None:
+            fleet._maybe_checkpoint(self)
         return results[winner], latency, winner
 
     # ------------------------------------------------------------------
@@ -229,9 +243,16 @@ class FleetClient:
         sess = self.sessions.get(replica.name)
         if sess is None:
             if self.stateful:
-                # failure re-dispatch of a stateful session: migrate it —
-                # carried state and all — then execute the step exactly once
-                self.fleet.migrate(self.client_id, replica.name)
+                # failure re-dispatch of a stateful session: move it —
+                # carried state and all — then execute the step exactly
+                # once.  A merely-failed source still exports its live
+                # state (migration); a *crashed* source lost it, so the
+                # session restores from the last checkpoint instead
+                src = self.fleet.locate(self.client_id)
+                if self.fleet.is_crashed(src.name):
+                    self.fleet.recover(self.client_id, replica.name)
+                else:
+                    self.fleet.migrate(self.client_id, replica.name)
                 sess = self.sessions[replica.name]
             else:
                 sess = self.fleet._backup_session(self, replica)
@@ -274,6 +295,9 @@ class EdgeFleet:
         min_observations: int = 8,
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
+        fault: Optional[FaultInjector] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 4,
     ):
         if n_replicas < 1:
             raise ValueError(f"need at least one replica, got {n_replicas}")
@@ -302,6 +326,7 @@ class EdgeFleet:
                     name=f"r{i}",
                     tracer=tracer,
                     metrics=self.metrics.scope(f"r{i}"),
+                    fault=fault,
                 ),
             )
             for i in range(n_replicas)
@@ -318,6 +343,13 @@ class EdgeFleet:
         self.clients: Dict[str, FleetClient] = {}
         self._affinity: Dict[str, str] = {}   # model name / IOS fp -> replica
         self.stats = FleetStats(registry=self.metrics.scope("fleet"))
+        self.fault = fault
+        self.checkpointer = (
+            SessionCheckpointer(checkpoint_dir, every=checkpoint_every)
+            if checkpoint_dir is not None
+            else None
+        )
+        self._crashed: set = set()
 
     # -- replica lookup -------------------------------------------------
     def replica(self, name: str) -> FleetReplica:
@@ -401,6 +433,8 @@ class EdgeFleet:
             self, model, cid, sess, rep.name,
             min_repeats=min_repeats, stateful=stateful,
         )
+        if stateful and self.checkpointer is not None:
+            self.checkpointer.attach(sess.client)
         self.clients[cid] = client
         return client
 
@@ -548,6 +582,161 @@ class EdgeFleet:
         if mig_span is not None:
             self.tracer.annotate(mig_span, bytes=moved)
             self.tracer.end(mig_span, self.clock.t)
+        return dst.name
+
+    # -- crash recovery --------------------------------------------------
+    def apply_due_faults(self) -> None:
+        """Fire any scheduled replica crashes whose time has come (consulted
+        at every dispatch entry, so crashes land between steps exactly as a
+        dead box would be noticed at the next request)."""
+        if self.fault is None:
+            return
+        for name in self.fault.due_crashes(self.clock.t):
+            if any(r.name == name for r in self.replicas):
+                self.crash(name)
+
+    def crash(self, name: str) -> None:
+        """Kill a replica: unlike a soft failure (``failed=True``, memory
+        intact, migration still possible), a crash wipes the box's
+        device-memory contexts and its dedup table — every donated carried
+        state on it is gone, recoverable only from checkpoints."""
+        rep = self.replica(name)
+        rep.failed = True
+        rep.edge.server.contexts.clear()
+        rep.edge.server.dedup.clear()
+        self._crashed.add(name)
+        self.stats.crashes += 1
+        if self.tracer is not None:
+            self.tracer.instant("fleet", "crash", self.clock.t, replica=name)
+
+    def is_crashed(self, name: str) -> bool:
+        return name in self._crashed
+
+    def _maybe_checkpoint(self, client: FleetClient) -> None:
+        """Publish a due carried-state checkpoint for one stateful client;
+        the write travels to the shared checkpoint tier over the site
+        backhaul, like cache replication and migration traffic."""
+        rep = self.replica(client.primary)
+        nbytes = self.checkpointer.maybe_checkpoint(
+            client.client_id, rep.edge.server, client.session.client
+        )
+        if nbytes > 0.0:
+            self.stats.checkpoints += 1
+            self.stats.checkpoint_bytes += nbytes
+            self.backhaul.bytes_total += nbytes
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "fleet", "checkpoint", self.clock.t,
+                    client=client.client_id, bytes=nbytes,
+                    seq=client.session.client.step_seq,
+                )
+
+    def recover(self, client_id: str, to: Optional[str] = None) -> str:
+        """Restore a stateful session whose home replica *crashed* (its
+        donated carried state is gone — :meth:`migrate` cannot help) onto a
+        healthy peer; returns the destination name.
+
+        Steps: (1) the newest complete checkpoint is read from the shared
+        tier, (2) the session re-associates with the destination and the
+        checkpointed device-memory namespace + carried state are installed
+        under a freshly-rebuilt replay binding (the replicated fingerprint
+        makes that a single compile), (3) the client re-drives the logged
+        steps the checkpoint misses — deterministic replay of the same
+        wire inputs through the same executable, so the recovered stream
+        is token-for-token what a crash-free run would have produced."""
+        if self.checkpointer is None:
+            raise RuntimeError(
+                "crash recovery requires an EdgeFleet checkpoint_dir"
+            )
+        src = self.locate(client_id)
+        if to is None:
+            candidates = [
+                r for r in self.replicas
+                if r.name != src.name and not r.failed
+            ]
+            if not candidates:
+                raise NoHealthyReplicaError(
+                    f"no healthy recovery target for {client_id!r}"
+                )
+            dst = min(candidates, key=lambda r: r.load)
+        else:
+            dst = self.replica(to)
+        sess = src.edge.sessions[client_id]
+        cl = sess.client
+        if cl.split_plan is not None:
+            raise NotImplementedError(
+                "crash recovery replays through the whole-program binding; "
+                "split-plan sessions are not supported yet"
+            )
+        ckpt = self.checkpointer.load_latest(client_id)
+        if ckpt is None:
+            raise RuntimeError(
+                f"no checkpoint for {client_id!r}: its carried state died "
+                f"with {src.name!r} before the first checkpoint boundary"
+            )
+        t0 = self.clock.t
+        span = (
+            self.tracer.begin(
+                "fleet", "crash_restore", t0,
+                client=client_id, src=src.name, dst=dst.name, seq=ckpt.seq,
+            )
+            if self.tracer is not None
+            else None
+        )
+        self.replicate_caches()
+        src.edge.disconnect(client_id)
+        dst.edge.adopt_session(sess)
+        dst_ctx = dst.edge.server.context(client_id)
+        dst_ctx.env.update(
+            {addr: np.asarray(v) for addr, v in ckpt.env.items()}
+        )
+        self.backhaul.bytes_total += ckpt.nbytes
+        if cl.ios is not None:
+            dst.edge.server.prepare_replay(
+                cl._ios_calls,
+                client_id=client_id,
+                fingerprint=cl.ios_fp,
+                carried_pairs=cl.ios.carried_pairs,
+            )
+            if ckpt.carried:
+                dst.edge.server.import_carried_state(
+                    client_id, list(ckpt.carried)
+                )
+            if cl.ios_fp is not None:
+                self._affinity[cl.ios_fp] = dst.name
+        # re-drive the logged steps the checkpoint predates: the client
+        # retransmits each step's recorded wire inputs and the restored
+        # binding advances the carried state exactly as the dead box did
+        replayed = 0
+        for entry in list(cl.step_log or ()):
+            if entry.seq < ckpt.seq or entry.seq >= cl.step_seq:
+                continue
+            payload = float(
+                sum(a.nbytes for a in entry.wire_inputs)
+            ) / cl.input_wire_divisor
+            cl._rpc(payload, 32)
+            _, done_at = dst.edge.server.run_replay(
+                entry.wire_inputs,
+                self.clock.t,
+                client_id,
+                fresh_carried=entry.fresh_carried,
+            )
+            cl._wait_until(done_at)
+            replayed += 1
+        self.stats.steps_replayed += replayed
+        self.stats.crash_restores += 1
+        cl.stats.crash_restores += 1
+
+        client = self.clients.get(client_id)
+        if client is not None:
+            client.sessions.pop(src.name, None)
+            client.sessions[dst.name] = sess
+            client.primary = dst.name
+        if span is not None:
+            self.tracer.annotate(
+                span, bytes=ckpt.nbytes, steps_replayed=replayed
+            )
+            self.tracer.end(span, self.clock.t)
         return dst.name
 
     # -- open-loop serving on the event timeline -------------------------

@@ -63,7 +63,7 @@ from repro.core.engine import (
     RRTOClient,
     SimClock,
 )
-from repro.core.netsim import ServerIngress, get_network
+from repro.core.netsim import FaultInjector, ServerIngress, get_network
 from repro.core.offload import InferenceResult, OffloadableModel, OffloadSession
 from repro.obs import MetricsRegistry, RegistryBackedStats, Tracer
 from repro.partition.segments import PLACE_SERVER
@@ -575,10 +575,12 @@ class RRTOEdgeServer:
         name: str = "edge",
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
+        fault: Optional["FaultInjector"] = None,
     ):
         self.clock = clock or SimClock()
         self.name = name
         self.tracer = tracer
+        self.fault = fault
         # the root (or fleet-scoped) registry behind every counter on this
         # box: cache.*, batcher.*, client.<id>.* all land under it
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -594,6 +596,8 @@ class RRTOEdgeServer:
         if tracer is not None:
             self.ingress.tracer = tracer
             self.ingress.track = f"{name}/ingress"
+        if fault is not None:
+            self.ingress.fault = fault
         self.batcher = ReplayBatcher(
             self.server, window_s=batch_window_s,
             tracer=tracer, track=name,
@@ -631,6 +635,8 @@ class RRTOEdgeServer:
             seed if seed is not None else len(self.sessions),
         )
         network.ingress = self.ingress
+        if self.fault is not None:
+            session_kwargs.setdefault("fault", self.fault)
         sess = OffloadSession(
             model,
             "rrto",
@@ -722,6 +728,8 @@ class RRTOEdgeServer:
         sess.server = self.server
         sess.client.server = self.server
         sess.network.ingress = self.ingress
+        if self.fault is not None:
+            sess.network.fault = self.fault
         sess.client.replay_submit = self.batcher.make_submit(sess.client)
         sess.client.split_submit = self.batcher.make_split_submit(sess.client)
         self.sessions[cid] = sess

@@ -1,0 +1,132 @@
+"""Crash-recoverable carried state: periodic checkpoints + bounded replay.
+
+PR 6's carried-state migration reads the source replica's memory directly —
+fine for rebalancing, useless for a *crash*, where the donated KV cache is
+gone the instant the box dies.  This module closes that hole with the
+classic primary/backup recipe:
+
+* every ``every``-th stateful step, the session's server-resident carried
+  state (plus its device-memory namespace — parameters and staged buffers,
+  without which a rebuilt binding cannot execute) is published to a shared
+  checkpoint tier through :mod:`repro.checkpoint.store`'s atomic-rename
+  store — a crashed writer never corrupts the last good checkpoint;
+
+* the client keeps a short :class:`~repro.core.engine.StepLogEntry` log of
+  its recent steps' wire inputs (it sent them once already — retaining a
+  window is a few KB for a decode stream);
+
+* on crash, a surviving replica restores the newest checkpoint and the
+  client re-drives the ≤ ``every`` logged steps that post-date it through
+  the restored binding.  Replay is deterministic — same executable, same
+  inputs, same carried state — so the recovered session is token-for-token
+  the stream a crash-free run would have produced
+  (``benchmarks/chaos_serving.py`` pins this bitwise).
+
+The checkpoint cadence is the knob: ``every=1`` is synchronous logging
+(zero replay, maximal write traffic), large ``every`` amortizes writes but
+lengthens recovery replay.  Both costs are visible in the fleet counters
+(``checkpoints``, ``checkpoint_bytes``, ``steps_replayed``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint import store
+from repro.core.engine import OffloadServer, RRTOClient
+
+
+@dataclasses.dataclass
+class CarriedCheckpoint:
+    """One restored checkpoint: everything a peer needs to rebuild the
+    session's server half."""
+
+    seq: int                       # steps 0..seq-1 are reflected in state
+    carried: List[np.ndarray]      # carried tensors, program pair order
+    env: Dict[int, np.ndarray]     # device-memory namespace (addr -> array)
+
+    @property
+    def nbytes(self) -> float:
+        return float(
+            sum(a.nbytes for a in self.carried)
+            + sum(a.nbytes for a in self.env.values())
+        )
+
+
+class SessionCheckpointer:
+    """Periodic carried-state checkpoints for stateful fleet sessions.
+
+    One instance per fleet; per-client checkpoints land in
+    ``<root>/<client_id>/step_<seq>/`` through the atomic store, so the
+    newest *complete* checkpoint is always recoverable regardless of when
+    the writer died."""
+
+    def __init__(self, root: str, *, every: int = 4):
+        if every < 1:
+            raise ValueError(f"checkpoint cadence must be >= 1, got {every}")
+        self.root = root
+        self.every = every
+        self._last_saved: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def _dir(self, client_id: str) -> str:
+        return os.path.join(self.root, client_id)
+
+    def attach(self, client: RRTOClient) -> None:
+        """Arm a client's step log: from here on every stateful step's wire
+        inputs are retained long enough to replay past the last checkpoint.
+        The window is ``2 * every + 1`` — the un-checkpointed steps since
+        the last publish plus a full cadence of slack for a checkpoint that
+        was due but raced the crash."""
+        if client.step_log is None:
+            client.step_log = collections.deque(maxlen=2 * self.every + 1)
+
+    # ------------------------------------------------------------------
+    def maybe_checkpoint(
+        self, client_id: str, server: OffloadServer, client: RRTOClient
+    ) -> float:
+        """Publish a checkpoint if the cadence says one is due; returns the
+        bytes written (0.0 when not due or nothing to save)."""
+        seq = client.step_seq
+        last = self._last_saved.get(client_id, 0)
+        if seq - last < self.every:
+            return 0.0
+        carried = server.export_carried_state(client_id)
+        if carried is None:
+            return 0.0
+        ctx = server.contexts.get(client_id)
+        flat: Dict[str, np.ndarray] = {
+            "meta_seq": np.asarray(seq, dtype=np.int64)
+        }
+        for i, arr in enumerate(carried):
+            flat[f"carried_{i:03d}"] = arr
+        if ctx is not None:
+            for addr, val in ctx.env.items():
+                flat[f"env_{addr}"] = np.asarray(val)
+        store.save(self._dir(client_id), seq, flat)
+        self._last_saved[client_id] = seq
+        return float(sum(a.nbytes for a in flat.values()))
+
+    def load_latest(self, client_id: str) -> Optional[CarriedCheckpoint]:
+        """Restore the newest complete checkpoint, or None if this client
+        never reached a checkpoint boundary."""
+        d = self._dir(client_id)
+        if not os.path.isdir(d):
+            return None
+        step = store.latest_step(d)
+        if step is None:
+            return None
+        flat = store.load_flat(d, step)
+        seq = int(flat.pop("meta_seq"))
+        carried_keys = sorted(k for k in flat if k.startswith("carried_"))
+        carried = [flat[k] for k in carried_keys]
+        env = {
+            int(k[len("env_"):]): v
+            for k, v in flat.items()
+            if k.startswith("env_")
+        }
+        return CarriedCheckpoint(seq=seq, carried=carried, env=env)

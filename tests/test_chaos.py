@@ -1,0 +1,287 @@
+"""Fault-tolerance layer: deterministic fault injection, at-most-once RPC
+retries, outage fallback to device-local execution, and the invariant the
+whole layer hangs on — a faulted run is *bitwise-identical* to the fault-free
+run, and a disabled injector leaves the stack byte-for-byte untouched.
+
+The load-bearing property test is ``TestAtMostOnce``: N injected
+lost-request/lost-response faults (timeouts, retries, dedup replies) must
+leave every emitted output AND the donated server-resident carried state
+identical to a run that never saw a fault.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.netsim import (
+    OUTAGE_FLOOR_BYTES_PER_S,
+    FaultInjector,
+    NetworkModel,
+    RetryPolicy,
+    synth_bandwidth_trace,
+)
+from repro.core.offload import OffloadableModel, OffloadSession
+
+
+def make_rnn(seed=0, d=8, batch=2):
+    """Recurrent app threading explicit state — the minimal carried shape."""
+    rng = np.random.default_rng(seed)
+    params = {"w": rng.normal(0, 0.1, (d, d)).astype(np.float32)}
+
+    def apply(p, x, state):
+        new_state = jnp.tanh(state @ p["w"] + x)
+        return [new_state.sum(axis=1), new_state]
+
+    x = rng.normal(0, 1, (batch, d)).astype(np.float32)
+    state0 = np.zeros((batch, d), np.float32)
+    return OffloadableModel(f"rnn{seed}", apply, params, (x, state0)), x, state0
+
+
+def make_mlp(seed=0, d_in=16, d_hidden=32, d_out=8):
+    rng = np.random.default_rng(seed)
+    params = {
+        "w1": jnp.asarray(rng.normal(size=(d_in, d_hidden)), jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(d_hidden, d_out)), jnp.float32),
+    }
+
+    def apply(p, x):
+        return [jnp.tanh(x @ p["w1"]) @ p["w2"]]
+
+    x = jnp.asarray(rng.normal(size=(1, d_in)), jnp.float32)
+    return OffloadableModel(f"mlp{seed}", apply, params, (x,)), np.asarray(x)
+
+
+class TestFaultInjectorDeterminism:
+    def test_fate_stream_is_a_pure_function_of_seed(self):
+        a = FaultInjector(seed=7, rpc_loss_prob=0.2)
+        b = FaultInjector(seed=7, rpc_loss_prob=0.2)
+        fates_a = [a.rpc_fate() for _ in range(300)]
+        fates_b = [b.rpc_fate() for _ in range(300)]
+        assert fates_a == fates_b
+        assert a.dropped == b.dropped > 0
+        assert {"lost_request", "lost_response"} <= set(fates_a)
+        c = FaultInjector(seed=8, rpc_loss_prob=0.2)
+        assert [c.rpc_fate() for _ in range(300)] != fates_a
+
+    def test_jitter_units_deterministic_and_bounded(self):
+        a = FaultInjector(seed=3)
+        b = FaultInjector(seed=3)
+        ua = [a.jitter_unit() for _ in range(100)]
+        assert ua == [b.jitter_unit() for _ in range(100)]
+        assert all(0.0 <= u < 1.0 for u in ua)
+        assert len(set(ua)) > 90, "units must not degenerate"
+
+    def test_outage_and_collapse_windows(self):
+        f = FaultInjector(
+            seed=0, outages=((1.0, 2.0),), collapses=((3.0, 4.0, 0.1),)
+        )
+        assert not f.in_outage(0.5) and f.in_outage(1.5)
+        assert f.outage_until(1.5) == 2.0
+        assert f.outage_until(0.5) == 0.5, "link up: no wait"
+        assert f.bandwidth_factor(1.5) == 0.0
+        assert f.bandwidth_factor(3.5) == pytest.approx(0.1)
+        assert f.bandwidth_factor(5.0) == 1.0
+
+    def test_due_crashes_fire_exactly_once(self):
+        f = FaultInjector(seed=0, crashes={"r0": 1.0, "r1": 2.0})
+        assert f.due_crashes(0.5) == []
+        assert f.due_crashes(1.5) == ["r0"]
+        assert f.due_crashes(2.5) == ["r1"]
+        assert f.due_crashes(9.9) == [], "each crash fires once"
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            FaultInjector(rpc_loss_prob=1.5)
+        with pytest.raises(ValueError):
+            FaultInjector(outages=((2.0, 1.0),))
+        with pytest.raises(ValueError):
+            FaultInjector(collapses=((1.0, 2.0, 0.0),))
+
+    def test_chaos_schedule_places_windows_inside_duration(self):
+        f = FaultInjector.chaos_schedule(
+            seed=11, duration_s=10.0, n_outages=2, mean_outage_s=0.5,
+            rpc_loss_prob=0.05, n_collapses=1,
+        )
+        assert len(f.outages) == 2 and len(f.collapses) == 1
+        for a, b in f.outages:
+            assert 0.0 <= a < b <= 11.0
+        # same seed -> same schedule
+        g = FaultInjector.chaos_schedule(
+            seed=11, duration_s=10.0, n_outages=2, mean_outage_s=0.5,
+            rpc_loss_prob=0.05, n_collapses=1,
+        )
+        assert f.outages == g.outages and f.collapses == g.collapses
+
+    def test_network_bandwidth_floored_during_outage(self):
+        net = NetworkModel(
+            "t", synth_bandwidth_trace(100.0, 0.0, 0.0, seed=0)
+        )
+        net.fault = FaultInjector(seed=0, outages=((0.0, 1.0),))
+        # floored, not zero: an in-flight transfer stalls finitely
+        assert net.bandwidth_at(0.5) == OUTAGE_FLOOR_BYTES_PER_S
+        assert net.bandwidth_at(2.0) > OUTAGE_FLOOR_BYTES_PER_S
+
+
+class TestRetryPolicy:
+    @pytest.mark.timeout(30)
+    def test_backoff_grows_exponentially_then_caps(self):
+        p = RetryPolicy(
+            base_timeout_s=0.01, backoff=2.0, max_backoff_s=0.05, jitter=0.0
+        )
+        ts = [p.timeout_s(a, unit=0.0) for a in range(6)]
+        assert ts[:3] == pytest.approx([0.01, 0.02, 0.04])
+        assert ts[3:] == pytest.approx([0.05, 0.05, 0.05]), "capped"
+
+    @pytest.mark.timeout(30)
+    def test_jitter_bounded_fraction_of_timeout(self):
+        p = RetryPolicy(base_timeout_s=0.01, jitter=0.25)
+        lo = p.timeout_s(0, unit=0.0)
+        hi = p.timeout_s(0, unit=0.999999)
+        assert lo == pytest.approx(0.01)
+        assert lo < hi < 0.01 * 1.25
+
+
+def _drive_rnn(fault, steps=16, retry_policy=None, client_id="c0"):
+    """One stateful session threading carried state; returns the session,
+    per-step outputs, and the final server-resident carried state."""
+    model, x, state0 = make_rnn()
+    sess = OffloadSession(
+        model, "rrto", min_repeats=2, fault=fault,
+        retry_policy=retry_policy, client_id=client_id,
+    )
+    sess.load()
+    state = state0
+    ys = []
+    for _ in range(steps):
+        res = sess.infer(x, state)
+        state = res.outputs[1]
+        ys.append(np.asarray(res.outputs[0]))
+    return sess, ys, sess.server.export_carried_state(client_id)
+
+
+class TestAtMostOnce:
+    """N injected retries leave outputs AND carried state identical to the
+    no-retry run — the acceptance property of the reliability protocol."""
+
+    @pytest.mark.timeout(120)
+    @pytest.mark.parametrize("seed", [1, 2, 3])
+    def test_lossy_stream_bitwise_equal_to_clean(self, seed):
+        _, ys_clean, state_clean = _drive_rnn(None)
+        fault = FaultInjector(seed=seed, rpc_loss_prob=0.25)
+        sess, ys, state = _drive_rnn(fault)
+        st = sess.client.stats
+        assert st.retries >= 1, "schedule must actually inject losses"
+        # a lost *response* means the server already executed the donated
+        # step: the retry must be answered from the dedup table, never
+        # re-advance the carried state — client and server counts agree
+        assert st.dedup_replies >= 1
+        assert sess.server.dedup_hits == st.dedup_replies
+        for a, b in zip(ys, ys_clean):
+            assert np.array_equal(a, b)
+        assert state is not None and state_clean is not None
+        for got, want in zip(state, state_clean):
+            assert np.array_equal(got, want)
+
+    @pytest.mark.timeout(120)
+    def test_retries_cost_time_but_not_correctness(self):
+        clean, _, _ = _drive_rnn(None)
+        fault = FaultInjector(seed=2, rpc_loss_prob=0.25)
+        lossy, _, _ = _drive_rnn(fault)
+        # timeouts + backoff are billed on the sim clock
+        assert lossy.clock.t > clean.clock.t
+        assert lossy.client.stats.retries == fault.dropped
+
+    @pytest.mark.timeout(120)
+    def test_retry_budget_exhaustion_is_typed(self):
+        from repro.core.netsim import RpcTimeoutError
+
+        # loss probability 1.0: every attempt dies; the bounded retry loop
+        # must surface a typed error instead of spinning forever
+        fault = FaultInjector(seed=0, rpc_loss_prob=1.0)
+        policy = RetryPolicy(max_attempts=3)
+        with pytest.raises(RpcTimeoutError):
+            _drive_rnn(fault, steps=16, retry_policy=policy)
+
+
+class TestOutageFallback:
+    def _clean_boundaries(self, n=10):
+        """Fault-free stateless run; returns per-request end-of-infer clock
+        times plus reference outputs."""
+        model, x = make_mlp()
+        sess = OffloadSession(model, "rrto", min_repeats=2)
+        sess.load()
+        outs, ts = [], []
+        for _ in range(n):
+            outs.append(np.asarray(sess.infer(x).outputs[0]))
+            ts.append(sess.clock.t)
+        return outs, ts
+
+    def test_stateless_outage_falls_back_then_heals_bitwise(self):
+        n = 10
+        clean_outs, ts = self._clean_boundaries(n)
+        # request k+1 starts at clock ts[k]: a window straddling that entry
+        # is guaranteed to be observed (fault-free prefix timing is
+        # identical, so the faulted run reaches ts[k] at the same instant)
+        k = 6
+        window = (0.5 * (ts[k - 1] + ts[k]), 0.5 * (ts[k] + ts[k + 1]))
+        fault = FaultInjector(seed=0, outages=(window,))
+        model, x = make_mlp()
+        sess = OffloadSession(model, "rrto", min_repeats=2, fault=fault)
+        sess.load()
+        modes, outs = [], []
+        for _ in range(n):
+            res = sess.infer(x)
+            modes.append(res.mode)
+            outs.append(np.asarray(res.outputs[0]))
+        assert sess.client.stats.outage_fallbacks >= 1
+        assert "outage_fallback" in modes
+        assert modes[-1] == "replaying", "healed link resumes offloading"
+        # the device-local fallback is bitwise-equal to the replay path
+        for a, b in zip(outs, clean_outs):
+            assert np.array_equal(a, b)
+
+    def test_stateful_session_waits_out_outage(self):
+        """A stateful-replay session cannot fall back (the carried state
+        lives server-side): it waits for the link, then continues bitwise."""
+        model, x, state0 = make_rnn()
+        clean = OffloadSession(model, "rrto", min_repeats=2)
+        clean.load()
+        st_c, ys_clean, ts = state0, [], []
+        for _ in range(12):
+            res = clean.infer(x, st_c)
+            st_c = res.outputs[1]
+            ys_clean.append(np.asarray(res.outputs[0]))
+            ts.append(clean.clock.t)
+        state_clean = clean.server.export_carried_state("c0")
+        # a window straddling the entry of step k+1, deep in stateful replay
+        k = 8
+        window = (0.5 * (ts[k - 1] + ts[k]), 0.5 * (ts[k] + ts[k + 1]))
+        fault = FaultInjector(seed=0, outages=(window,))
+        sess, ys, state = _drive_rnn(fault, steps=12)
+        st = sess.client.stats
+        assert st.outage_waits >= 1
+        assert st.outage_fallbacks == 0
+        assert sess.clock.t > clean.clock.t, "the wait is billed"
+        for a, b in zip(ys, ys_clean):
+            assert np.array_equal(a, b)
+        for got, want in zip(state, state_clean):
+            assert np.array_equal(got, want)
+
+
+class TestDisabledInjectorIsInvisible:
+    def test_noop_injector_leaves_run_byte_identical(self):
+        """An all-defaults injector must not perturb outputs, counters, or
+        the simulated clock — the fault layer is strictly pay-for-use."""
+        base, ys_base, state_base = _drive_rnn(None)
+        noop, ys, state = _drive_rnn(FaultInjector(seed=99))
+        assert noop.clock.t == base.clock.t
+        st = noop.client.stats
+        assert st.retries == st.dedup_replies == 0
+        assert st.outage_fallbacks == st.outage_waits == 0
+        for a, b in zip(ys, ys_base):
+            assert np.array_equal(a, b)
+        for got, want in zip(state, state_base):
+            assert np.array_equal(got, want)
+        assert st.rpcs == base.client.stats.rpcs
+        assert st.network_bytes == base.client.stats.network_bytes

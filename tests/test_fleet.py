@@ -197,6 +197,188 @@ class TestFaultInjection:
         assert fleet.router.stats.failures_recovered == 1
 
 
+class TestHedgedRouterFailureWalk:
+    """Regression: when the primary AND the first hedge pick both fail, the
+    router must walk every remaining healthy replica before declaring
+    :class:`AllReplicasFailedError` — a third box can still serve."""
+
+    def _router(self, fail_names, n=4):
+        replicas = [
+            ReplicaModel(name, 0.01, lambda i: 0.0)
+            for name in ("a", "b", "c", "d")[:n]
+        ]
+
+        calls = []
+
+        def complete(rep, idx):
+            calls.append(rep.name)
+            return None if rep.name in fail_names else 0.01
+
+        return HedgedRouter(replicas, completion_source=complete), calls
+
+    def test_third_replica_serves_after_double_failure(self):
+        router, calls = self._router(fail_names={"a", "b"})
+        t, winner = router.dispatch(0, primary=0)
+        assert winner == "c"
+        assert t > 0
+        assert calls == ["a", "b", "c"], "walk in order, no extra duplicates"
+        assert router.stats.failures_recovered == 1
+        assert router.stats.hedged == 1
+
+    def test_walk_reaches_the_last_healthy_replica(self):
+        router, calls = self._router(fail_names={"a", "b", "c"})
+        _, winner = router.dispatch(0, primary=0)
+        assert winner == "d"
+        assert calls == ["a", "b", "c", "d"]
+
+    def test_exhausted_walk_raises_typed_error(self):
+        router, calls = self._router(fail_names={"a", "b", "c", "d"})
+        with pytest.raises(AllReplicasFailedError):
+            router.dispatch(0, primary=0)
+        assert sorted(calls) == ["a", "b", "c", "d"], "every box was tried"
+
+    def test_success_path_pays_no_extra_dispatches(self):
+        router, calls = self._router(fail_names=set())
+        _, winner = router.dispatch(0, primary=0)
+        assert winner == "a"
+        assert calls == ["a"], "healthy primary: no hedge, no walk"
+
+
+class TestStatefulDispatchFailures:
+    """Typed placement/dispatch errors surfacing through FleetClient.dispatch
+    mid-stream, with the donated carried state left uncorrupted."""
+
+    def _stream(self, fleet, max_new=8):
+        lm = RRTOServedLM(
+            DENSE, edge=fleet.replicas[0].edge, client_id="u0", seed=0,
+            min_repeats=2,
+        )
+        client = fleet.clients["u0"] = FleetClient(
+            fleet, lm.session.model, "u0", lm.session, "r0", stateful=True,
+        )
+        g = lm.start_generation(PROMPT, max_new_tokens=max_new)
+        return lm, client, g
+
+    def test_all_replicas_failed_mid_stream_then_stream_resumes_bitwise(self):
+        # reference: the same stream with no failures
+        fleet0 = EdgeFleet(2, min_observations=4)
+        lm0, c0, g0 = self._stream(fleet0)
+        for _ in range(lm0.steps_total(g0)):
+            c0.infer(*lm0.step_inputs(g0))
+            lm0.absorb_step(g0, c0.session.history[-1].outputs)
+        want_tokens = np.concatenate(g0["out"], axis=1)
+        want_state = fleet0.locate("u0").edge.server.export_carried_state("u0")
+
+        fleet = EdgeFleet(2, min_observations=4)
+        lm, client, g = self._stream(fleet)
+        n_steps = lm.steps_total(g)
+        fail_at = n_steps - 3
+        for step in range(n_steps):
+            if step == fail_at:
+                for rep in fleet.replicas:
+                    rep.failed = True
+                seq_before = client.session.client.step_seq
+                with pytest.raises(AllReplicasFailedError):
+                    client.dispatch(*lm.step_inputs(g))
+                # typed for callers catching the broader placement error
+                with pytest.raises(NoHealthyReplicaError):
+                    client.dispatch(*lm.step_inputs(g))
+                # the failed attempts never reached a server: the donated
+                # state did not advance and the session did not move
+                assert client.session.client.step_seq == seq_before
+                assert client.primary == "r0"
+                for rep in fleet.replicas:
+                    rep.failed = False
+            client.infer(*lm.step_inputs(g))
+            lm.absorb_step(g, client.session.history[-1].outputs)
+        tokens = np.concatenate(g["out"], axis=1)
+        assert np.array_equal(tokens, want_tokens)
+        state = fleet.locate("u0").edge.server.export_carried_state("u0")
+        assert state is not None and len(state) == len(want_state)
+        for got, want in zip(state, want_state):
+            assert np.array_equal(got, want), "carried state uncorrupted"
+        assert fleet.stats.migrations == 0, "no spurious moves on failure"
+
+    def test_failed_primary_migrates_not_forks_under_walk(self):
+        """Three replicas, primary dead: the stateful session migrates to a
+        healthy box exactly once even though the router walks candidates."""
+        fleet = EdgeFleet(3, min_observations=4)
+        lm, client, g = self._stream(fleet)
+        for _ in range(4):   # lock replay, warm the estimator
+            client.infer(*lm.step_inputs(g))
+            lm.absorb_step(g, client.session.history[-1].outputs)
+        assert lm.session.client.stateful_replay
+        fleet.replica("r0").failed = True
+        _, _, winner = client.dispatch(*lm.step_inputs(g))
+        assert winner in ("r1", "r2")
+        assert client.primary == winner
+        assert len(client.sessions) == 1, "single-home: migrated, not forked"
+        assert fleet.stats.migrations == 1
+
+
+class TestCrashRecovery:
+    """A crashed replica lost its memory: the session restores from the
+    last carried-state checkpoint on a peer and replays the logged steps."""
+
+    def _stream(self, fault, ckpt_dir, max_new=8):
+        fleet = EdgeFleet(
+            2, hedging=False, min_observations=4, fault=fault,
+            checkpoint_dir=str(ckpt_dir), checkpoint_every=3,
+        )
+        lm = RRTOServedLM(
+            DENSE, edge=fleet.replicas[0].edge, client_id="u0", seed=0,
+            min_repeats=2,
+        )
+        fc = fleet.clients["u0"] = FleetClient(
+            fleet, lm.session.model, "u0", lm.session, "r0", stateful=True,
+        )
+        fleet.checkpointer.attach(lm.session.client)
+        g = lm.start_generation(PROMPT, max_new_tokens=max_new)
+        ts = []
+        for _ in range(lm.steps_total(g)):
+            res, _, _ = fc.dispatch(*lm.step_inputs(g))
+            lm.absorb_step(g, res.outputs)
+            ts.append(fleet.clock.t)
+        tokens = np.concatenate(g["out"], axis=1)
+        state = fleet.locate("u0").edge.server.export_carried_state("u0")
+        return fleet, tokens, state, ts
+
+    def test_mid_decode_crash_restores_bitwise(self, tmp_path):
+        from repro.core.netsim import FaultInjector
+
+        _, want_tokens, want_state, ts = self._stream(
+            None, tmp_path / "clean"
+        )
+        # crash between two step boundaries, late enough that a checkpoint
+        # exists and >= 1 logged step postdates it (a crash-only injector
+        # leaves pre-crash timing identical, so clean boundaries place it)
+        k = len(ts) - 3
+        fault = FaultInjector(seed=5, crashes={"r0": 0.5 * (ts[k - 1] + ts[k])})
+        fleet, tokens, state, _ = self._stream(fault, tmp_path / "faulted")
+        assert fleet.stats.crashes == 1
+        assert fleet.stats.crash_restores == 1
+        assert fleet.stats.checkpoints >= 1
+        assert fleet.stats.steps_replayed >= 1
+        assert fleet.clients["u0"].primary == "r1"
+        assert fleet.is_crashed("r0")
+        assert np.array_equal(tokens, want_tokens)
+        assert state is not None and len(state) == len(want_state)
+        for got, want in zip(state, want_state):
+            assert np.array_equal(got, want)
+        # the checkpoint write was billed on the site backhaul
+        assert fleet.stats.checkpoint_bytes > 0
+        assert fleet.backhaul.bytes_total >= fleet.stats.checkpoint_bytes
+
+    def test_recover_without_checkpoint_is_typed(self, tmp_path):
+        fleet = EdgeFleet(
+            2, min_observations=4, checkpoint_dir=str(tmp_path),
+        )
+        model, x = make_mlp()
+        fleet.connect(model, client_id="u0", min_repeats=2)
+        with pytest.raises(RuntimeError, match="checkpoint"):
+            fleet.recover("u0")
+
+
 class TestHedgedRouterWindow:
     def test_observation_window_bounded_over_10k_dispatches(self):
         replicas = [
