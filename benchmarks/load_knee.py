@@ -1,0 +1,415 @@
+"""Load knee — overload-robust serving under open-loop Poisson load.
+
+Every other serving benchmark drives a closed loop: clients wait for one
+completion before issuing the next request, so the system can never be
+offered more load than it serves.  Real mobile-edge traffic is open-loop —
+a camera keeps producing frames whether or not the server keeps up — so
+beyond the capacity knee the no-protection stack's queue (and therefore
+every tenant's latency) grows without bound.  This benchmark sweeps offered
+load across the knee with a skewed population of Poisson clients in three
+SLO classes (gold/silver/bronze, DRR weights 4/2/1) against two identical
+edge boxes fed the *same* arrival schedule:
+
+* **admission on** — queue-limit + token-bucket admission with the
+  graceful-degradation ladder (device fallback for tenants whose deadline
+  budget covers it, typed shed with retry-after for the rest);
+* **admission off** — the pre-admission stack (``admission=None``), which
+  admits everything and diverges past the knee.
+
+Arrival processes are deterministic per client: each client's stream is
+seeded by ``client_stream_seed(seed, client_id)``, so adding or removing a
+client never perturbs another client's schedule, and both twins replay the
+identical offered trace.
+
+Guards (the headline claims):
+
+* ``knee_p99_bounded``     — beyond the knee (offered >= 2x capacity) the
+  p99 of *admitted* traffic stays <= 0.5x the no-admission twin's p99;
+* ``sheds_typed_with_retry`` — overload sheds >= 1 request, and every shed
+  is a typed ``AdmissionRejectedError`` carrying ``retry_after_s > 0``;
+* ``tenant_share_fair``    — under overload no tenant's admitted share
+  falls below ``min(weight share, offered share) - 0.10``;
+* ``below_knee_admits_all`` — at 0.25x capacity nothing is shed or
+  degraded (admission is work-conserving under light load).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import MODE_REPLAYING
+from repro.core.netsim import client_stream_seed, poisson_arrivals
+from repro.core.offload import OffloadableModel
+from repro.obs import Tracer, write_chrome_trace
+from repro.serving import RRTOEdgeServer
+from repro.serving.admission import (
+    AdmissionController,
+    AdmissionRejectedError,
+    SLOClass,
+)
+
+# (tenant, DRR weight, population fraction): a small gold tier with a tight
+# deadline, a broad bronze tier producing most of the offered load
+TENANTS: Tuple[Tuple[str, float, float], ...] = (
+    ("gold", 4.0, 0.15),
+    ("silver", 2.0, 0.30),
+    ("bronze", 1.0, 0.55),
+)
+KNEE_MULTIPLIER = 2.0        # phases at >= this offered/capacity are "beyond"
+P99_RATIO_BOUND = 0.5        # admitted p99 <= bound * no-admission twin p99
+SHARE_SLACK = 0.10           # tenant admitted-share floor slack
+ADMIT_FRACTION = 0.8         # admission rate as a fraction of measured capacity
+DRAIN_GAP_S = 0.05           # idle gap between load phases
+# the wireless medium is shared by *concurrently transmitting* clients, not
+# by every connected-but-idle session; open-loop driving keeps a handful of
+# transfers in flight at once
+ACTIVE_ON_AIR = 8
+
+
+def make_app(
+    seed: int = 0, d_in: int = 16, d_hidden: int = 32, n_layers: int = 8
+):
+    """A deep narrow MLP: enough kernels that per-request *compute* (not the
+    wire) sets the capacity knee, while staying tiny to trace and replay."""
+    rng = np.random.default_rng(seed)
+    params = {
+        "w_in": jnp.asarray(rng.normal(0, 0.1, (d_in, d_hidden)), jnp.float32),
+        "w_out": jnp.asarray(rng.normal(0, 0.1, (d_hidden, 4)), jnp.float32),
+    }
+    for k in range(n_layers):
+        params[f"w{k}"] = jnp.asarray(
+            rng.normal(0, 0.1, (d_hidden, d_hidden)), jnp.float32
+        )
+
+    def apply(p, x):
+        h = jnp.tanh(x @ p["w_in"])
+        for k in range(n_layers):
+            h = jnp.tanh(h @ p[f"w{k}"])
+        return [h @ p["w_out"]]
+
+    x = rng.normal(0, 1, (1, d_in)).astype(np.float32)
+    return OffloadableModel(f"knee-app{seed}", apply, params, (x,)), x
+
+
+@dataclasses.dataclass
+class KneePoint:
+    """One offered-load phase of the sweep (both twins, same arrivals)."""
+
+    multiplier: float            # offered load / measured capacity
+    offered: int
+    admitted: int
+    degraded: int
+    shed: int
+    admitted_p99_ms: float       # admission-on, admitted traffic only
+    twin_p99_ms: float           # admission-off twin, all traffic
+    admitted_share: Dict[str, float]
+    offered_share: Dict[str, float]
+
+
+def _tenant_of(i: int, n: int) -> str:
+    u = (i + 0.5) / n
+    acc = 0.0
+    for name, _, frac in TENANTS:
+        acc += frac
+        if u < acc:
+            return name
+    return TENANTS[-1][0]
+
+
+def _build_clients(n: int) -> List[Tuple[str, str]]:
+    return [(f"c{i:04d}", _tenant_of(i, n)) for i in range(n)]
+
+
+def _client_rates(
+    clients: List[Tuple[str, str]], offered_hz: float
+) -> Dict[str, float]:
+    """Skewed per-client Poisson rates: each tenant's aggregate offered load
+    is its population share; within a tenant rates fall off Zipf-style, so a
+    few chatty clients dominate (the skew the DRR share must survive)."""
+    by_tenant: Dict[str, List[str]] = {}
+    for cid, tenant in clients:
+        by_tenant.setdefault(tenant, []).append(cid)
+    pop = {name: frac for name, _, frac in TENANTS}
+    rates: Dict[str, float] = {}
+    for tenant, cids in by_tenant.items():
+        zipf = [1.0 / (1 + rank) for rank in range(len(cids))]
+        total = sum(zipf)
+        for cid, z in zip(cids, zipf):
+            rates[cid] = offered_hz * pop[tenant] * z / total
+    return rates
+
+
+def _phase_schedule(
+    clients: List[Tuple[str, str]],
+    offered_hz: float,
+    n_requests: int,
+    seed: int,
+) -> List[Tuple[float, str, str]]:
+    """One phase's merged arrival offsets: ``(offset_s, client, tenant)``
+    sorted by time.  Per-client streams are seeded independently
+    (``client_stream_seed``), so the schedule is stable under population
+    edits and identical for both twins."""
+    rates = _client_rates(clients, offered_hz)
+    duration = n_requests / offered_hz
+    events: List[Tuple[float, str, str]] = []
+    for cid, tenant in clients:
+        n = max(1, round(rates[cid] * duration))
+        offs = poisson_arrivals(
+            rates[cid], n, seed=client_stream_seed(seed, cid)
+        )
+        events.extend((off, cid, tenant) for off in offs)
+    events.sort()
+    return events
+
+
+def _build_edge(
+    model: OffloadableModel,
+    x: np.ndarray,
+    clients: List[Tuple[str, str]],
+    *,
+    name: str,
+    tracer: Optional[Tracer] = None,
+) -> RRTOEdgeServer:
+    """One edge box with every client connected and warmed into replay.
+    Admission (if any) attaches *after* warm-up, so recording never competes
+    with the load phases for tokens and both twins warm identically."""
+    edge = RRTOEdgeServer(execute=False, name=name, tracer=tracer)
+    for cid, tenant in clients:
+        edge.connect(model, client_id=cid, tenant=tenant, min_repeats=2)
+    for cid, _ in clients:
+        sess = edge.sessions[cid]
+        spins = 0
+        while sess.client.mode != MODE_REPLAYING and spins < 4:
+            sess.infer(x)
+            spins += 1
+        assert sess.client.mode == MODE_REPLAYING, cid
+    edge.ingress.active_clients = ACTIVE_ON_AIR
+    return edge
+
+
+def _attach_admission(
+    edge: RRTOEdgeServer,
+    clients: List[Tuple[str, str]],
+    *,
+    rate_hz: float,
+    queue_limit: int,
+    borrow_depth: int,
+    classes: Dict[str, SLOClass],
+    tracer: Optional[Tracer] = None,
+) -> AdmissionController:
+    adm = AdmissionController(
+        queue_limit=queue_limit,
+        rate_hz=rate_hz,
+        borrow_depth=borrow_depth,
+        classes=classes,
+        tracer=tracer,
+        track=f"{edge.name}/admission",
+    )
+    adm.bind(server=edge.server, ingress=edge.ingress)
+    edge.admission = adm
+    edge.batcher.admission = adm
+    for cid, tenant in clients:
+        adm.register(cid, tenant)
+        edge.sessions[cid].admission = adm
+    return adm
+
+
+def _calibrate(model, x) -> Tuple[float, float, float]:
+    """Measured per-request replay compute (the capacity knee), steady wall
+    latency (sets the normal in-flight level the queue bound must clear) and
+    the device-fallback latency (the degradation ladder's tier-2 cost)."""
+    edge = RRTOEdgeServer(execute=False, name="calib")
+    sess = edge.connect(model, client_id="calib", min_repeats=2)
+    for _ in range(3):
+        sess.infer(x)
+    assert sess.client.mode == MODE_REPLAYING
+    edge.ingress.active_clients = ACTIVE_ON_AIR   # match the load phases
+    r = sess.infer(x)
+    return r.server_busy_seconds, r.wall_seconds, sess.device_fallback_seconds()
+
+
+def _drive_phase(
+    edge: RRTOEdgeServer,
+    x: np.ndarray,
+    events: List[Tuple[float, str, str]],
+) -> Tuple[Dict[str, Dict[str, int]], List[float], List[AdmissionRejectedError]]:
+    """Open-loop driving: the clock is *set* to each arrival instant (the
+    source does not wait for completions); ``OffloadServer.occupy``'s busy
+    frontier keeps the queueing honest.  Returns per-tenant counters, the
+    admitted-request latencies and the typed sheds."""
+    t0 = max(edge.clock.t, edge.server.busy_until) + DRAIN_GAP_S
+    counts: Dict[str, Dict[str, int]] = {}
+    lat_admitted: List[float] = []
+    sheds: List[AdmissionRejectedError] = []
+    for off, cid, tenant in events:
+        c = counts.setdefault(
+            tenant, {"offered": 0, "admitted": 0, "degraded": 0, "shed": 0}
+        )
+        c["offered"] += 1
+        edge.clock.t = t0 + off
+        try:
+            r = edge.sessions[cid].infer(x)
+        except AdmissionRejectedError as e:
+            c["shed"] += 1
+            sheds.append(e)
+            continue
+        if r.mode in ("degraded_device", "degraded_split"):
+            c["degraded"] += 1
+        else:
+            c["admitted"] += 1
+            lat_admitted.append(r.wall_seconds)
+    return counts, lat_admitted, sheds
+
+
+def _p99_ms(lats: List[float]) -> float:
+    if not lats:
+        return 0.0
+    return float(np.percentile(np.asarray(lats), 99) * 1e3)
+
+
+def run(
+    smoke: bool = False, tracer: Optional[Tracer] = None
+) -> Tuple[List[KneePoint], Dict[str, bool]]:
+    n_clients = 48 if smoke else 960
+    n_requests = 420 if smoke else 1500      # per phase, per twin
+    multipliers = (0.25, 1.0, 4.0) if smoke else (0.25, 0.5, 1.0, 2.0, 4.0)
+    seed = 0
+
+    model, x = make_app(seed)
+    compute_s, wall_s, device_s = _calibrate(model, x)
+    capacity_hz = 1.0 / compute_s
+    # the wait queue counts requests in flight end to end (wire included);
+    # the bound must sit *above* the steady in-flight level at capacity so
+    # it only bites on genuine server backlog
+    in_flight = int(np.ceil(wall_s / compute_s))
+    queue_limit = in_flight + 16
+    borrow_depth = in_flight + 8
+    # deadline budgets calibrated to the measured device-fallback latency:
+    # gold's budget cannot cover an eager device run (denied gold requests
+    # shed), silver's and bronze's can (they degrade instead)
+    classes = {
+        "gold": SLOClass("gold", deadline_s=0.5 * device_s,
+                         priority=2, weight=4.0),
+        "silver": SLOClass("silver", deadline_s=max(10 * device_s, 0.05),
+                           priority=1, weight=2.0),
+        "bronze": SLOClass("bronze", deadline_s=max(20 * device_s, 0.2),
+                           priority=0, weight=1.0),
+    }
+
+    clients = _build_clients(n_clients)
+    schedules = [
+        (m, _phase_schedule(clients, m * capacity_hz, n_requests,
+                            seed=1000 + k))
+        for k, m in enumerate(multipliers)
+    ]
+
+    guarded = _build_edge(model, x, clients, name="edge", tracer=tracer)
+    _attach_admission(
+        guarded, clients,
+        rate_hz=ADMIT_FRACTION * capacity_hz,
+        queue_limit=queue_limit, borrow_depth=borrow_depth,
+        classes=classes, tracer=tracer,
+    )
+    twin = _build_edge(model, x, clients, name="twin")
+
+    points: List[KneePoint] = []
+    all_sheds: List[AdmissionRejectedError] = []
+    for m, events in schedules:
+        counts, lat_admitted, sheds = _drive_phase(guarded, x, events)
+        twin_counts, twin_lats, twin_sheds = _drive_phase(twin, x, events)
+        assert not twin_sheds, "the admission-off twin must never shed"
+        all_sheds.extend(sheds)
+        offered = sum(c["offered"] for c in counts.values())
+        admitted = sum(c["admitted"] for c in counts.values())
+        points.append(KneePoint(
+            multiplier=m,
+            offered=offered,
+            admitted=admitted,
+            degraded=sum(c["degraded"] for c in counts.values()),
+            shed=sum(c["shed"] for c in counts.values()),
+            admitted_p99_ms=_p99_ms(lat_admitted),
+            twin_p99_ms=_p99_ms(twin_lats),
+            admitted_share={
+                t: c["admitted"] / max(admitted, 1)
+                for t, c in counts.items()
+            },
+            offered_share={
+                t: c["offered"] / max(offered, 1) for t, c in counts.items()
+            },
+        ))
+
+    beyond = [p for p in points if p.multiplier >= KNEE_MULTIPLIER]
+    light = [p for p in points if p.multiplier <= 0.25]
+    weight_share = {
+        name: w / sum(w for _, w, _ in TENANTS) for name, w, _ in TENANTS
+    }
+    checks = {
+        "knee_p99_bounded": bool(beyond) and all(
+            p.admitted > 0
+            and p.admitted_p99_ms <= P99_RATIO_BOUND * p.twin_p99_ms
+            for p in beyond
+        ),
+        "sheds_typed_with_retry": len(all_sheds) >= 1 and all(
+            isinstance(e, AdmissionRejectedError) and e.retry_after_s > 0
+            for e in all_sheds
+        ),
+        "tenant_share_fair": all(
+            p.admitted_share.get(t, 0.0)
+            >= min(weight_share[t], p.offered_share.get(t, 0.0)) - SHARE_SLACK
+            for p in beyond
+            for t in weight_share
+        ),
+        "below_knee_admits_all": bool(light) and all(
+            p.shed == 0 and p.degraded == 0 and p.admitted == p.offered
+            for p in light
+        ),
+    }
+    return points, checks
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="tiny sizes for CI")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON (open in "
+                         "ui.perfetto.dev) of the admission-on run")
+    args = ap.parse_args()
+
+    tracer = Tracer() if args.trace else None
+    points, checks = run(smoke=args.smoke, tracer=tracer)
+    if tracer is not None:
+        write_chrome_trace(tracer, args.trace)
+        print(f"trace: {args.trace} ({tracer.n_events} events, "
+              f"{len(tracer.tracks())} tracks)", file=sys.stderr)
+    print(
+        f"{'offered/cap':>11s} {'offered':>7s} {'admit':>6s} {'degrade':>7s} "
+        f"{'shed':>5s} {'adm_p99_ms':>10s} {'twin_p99_ms':>11s} "
+        f"{'gold/silver/bronze admitted share':>33s}"
+    )
+    for p in points:
+        share = "/".join(
+            f"{p.admitted_share.get(t, 0.0):.2f}"
+            for t, _, _ in TENANTS
+        )
+        print(
+            f"{p.multiplier:11.2f} {p.offered:7d} {p.admitted:6d} "
+            f"{p.degraded:7d} {p.shed:5d} {p.admitted_p99_ms:10.3f} "
+            f"{p.twin_p99_ms:11.3f} {share:>33s}"
+        )
+    for guard, ok in checks.items():
+        print(f"{guard}={ok}")
+    if not all(checks.values()):
+        tripped = ", ".join(g for g, ok in checks.items() if not ok)
+        raise SystemExit(f"load-knee guards tripped: {tripped}")
+
+
+if __name__ == "__main__":
+    main()

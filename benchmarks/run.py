@@ -56,6 +56,7 @@ def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
         chaos_serving,
         decode_scaling,
         fleet_scaling,
+        load_knee,
         partition_sweep,
         pipeline_overlap,
         stateful_split,
@@ -283,6 +284,43 @@ def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
         _bench_json(json_dir, "chaos_serving",
                     metrics={}, guards={}, error=repr(e))
 
+    print("== load_knee (smoke) ==", file=sys.stderr, flush=True)
+    try:
+        # the overload guards: beyond the capacity knee the admitted-traffic
+        # p99 must stay <= 0.5x the no-admission twin, every shed must be a
+        # typed rejection with a positive retry-after, and no tenant's
+        # admitted share may fall below its DRR weight floor
+        knee_points, knee_checks = load_knee.run(smoke=True, tracer=tracer)
+        record("load_knee", knee_checks)
+        peak = knee_points[-1]
+        csv_rows.append((
+            "smoke_load_knee",
+            peak.admitted_p99_ms * 1e3,
+            f"offered={peak.multiplier:g}x;"
+            f"p99_vs_noadmission={peak.admitted_p99_ms / max(peak.twin_p99_ms, 1e-9):.2f}x;"
+            f"shed={peak.shed};degraded={peak.degraded}",
+        ))
+        _bench_json(
+            json_dir, "load_knee",
+            metrics={
+                "admitted_p99_ms": peak.admitted_p99_ms,
+                "twin_p99_ms": peak.twin_p99_ms,
+                "p99_vs_noadmission_x":
+                    peak.admitted_p99_ms / max(peak.twin_p99_ms, 1e-9),
+                "offered_multiplier": peak.multiplier,
+                "offered": peak.offered,
+                "admitted": peak.admitted,
+                "degraded": peak.degraded,
+                "shed": peak.shed,
+                "admitted_share": peak.admitted_share,
+            },
+            guards=knee_checks,
+        )
+    except Exception as e:  # noqa: BLE001
+        failures.append(("load_knee", "crashed", repr(e)))
+        _bench_json(json_dir, "load_knee",
+                    metrics={}, guards={}, error=repr(e))
+
     print("name,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.2f},{derived}")
@@ -291,7 +329,7 @@ def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
     benchmarks_run = (
         "partition_sweep", "tab4_rpc_gpu_util", "decode_scaling",
         "pipeline_overlap", "stateful_split", "fleet_scaling",
-        "chaos_serving",
+        "chaos_serving", "load_knee",
     )
     failed_names = {b for b, _, _ in failures}
     for b in benchmarks_run:
@@ -317,6 +355,7 @@ def main(json_dir: Optional[str] = None) -> None:
         fig11_semi_rrto,
         fig12_model_zoo,
         fleet_scaling,
+        load_knee,
         multiclient_scaling,
         opseq_search_perf,
         partition_sweep,
@@ -479,6 +518,17 @@ def main(json_dir: Optional[str] = None) -> None:
         f"retries={loss.retries};dedup={loss.dedup_replies};"
         f"bitwise={all(p.bitwise_equal for p in chaos_points)};"
         f"guards={all(chaos_checks.values())}",
+    ))
+
+    print("== load_knee ==", file=sys.stderr, flush=True)
+    knee_points, knee_checks = load_knee.run()
+    peak = knee_points[-1]
+    rows.append((
+        "load_knee",
+        peak.admitted_p99_ms * 1e3,
+        f"offered={peak.multiplier:g}x;"
+        f"p99_vs_noadmission={peak.admitted_p99_ms / max(peak.twin_p99_ms, 1e-9):.2f}x;"
+        f"shed={peak.shed};guards={all(knee_checks.values())}",
     ))
 
     print("== roofline ==", file=sys.stderr, flush=True)

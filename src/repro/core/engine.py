@@ -1434,6 +1434,11 @@ class RRTOClient:
         self.step_seq = 0
         self.step_log: Optional[Any] = None    # deque of _StepLogEntry
         self.outage_active = False
+        # overload protection: the tenant this client bills against and the
+        # absolute sim-time deadline of the in-flight request (None = no SLO
+        # attached; EDF round formation treats it as "no deadline, last")
+        self.tenant = "default"
+        self.deadline_t: Optional[float] = None
         # observability: spans land on this client's track; None = tracing
         # off (every emission site guards on it, so the disabled path does
         # no per-event work)

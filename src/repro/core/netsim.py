@@ -38,6 +38,16 @@ def _splitmix64(x: int) -> int:
     return x ^ (x >> 31)
 
 
+def client_stream_seed(seed: int, client_id: str) -> int:
+    """Deterministic per-client RNG seed: splitmix64 over (seed, client_id)
+    bytes, so each client owns an independent stream and adding or removing a
+    client never perturbs another client's arrival sequence."""
+    x = _splitmix64(int(seed) & 0xFFFFFFFFFFFFFFFF)
+    for b in client_id.encode("utf-8"):
+        x = _splitmix64(x ^ b)
+    return x
+
+
 class RpcTimeoutError(RuntimeError):
     """Every retry attempt of one RPC was lost — the link is effectively
     down and the caller should declare an outage instead of retrying on."""
@@ -290,6 +300,27 @@ class ServerIngress:
     # fault injection: bandwidth-collapse episodes squeeze the shared pipe
     # too (a site-level event hits every client behind it); None = perfect
     fault: Optional["FaultInjector"] = None
+    # overload protection: when an AdmissionController is bound it mirrors
+    # its wait-queue bound and depth here, so queueing at the edge box is
+    # observable at the ingress like any other shared resource.  None/0 =
+    # unbounded (pre-admission behaviour).
+    queue_limit: Optional[int] = None
+    queue_depth: int = 0
+    depth_gauge: Optional[Any] = None
+
+    def set_queue_depth(self, depth: int, t: Optional[float] = None) -> None:
+        """Record the admitted-but-uncompleted backlog behind this ingress
+        (gauge + trace counter sampled on the sim clock)."""
+        self.queue_depth = int(depth)
+        if self.depth_gauge is not None:
+            self.depth_gauge.set(self.queue_depth)
+        if self.tracer is not None and t is not None:
+            self.tracer.counter(
+                self.track, "queue_depth", t, float(self.queue_depth)
+            )
+
+    def has_capacity(self) -> bool:
+        return self.queue_limit is None or self.queue_depth < self.queue_limit
 
     def share(self, t: Optional[float] = None) -> float:
         share = self.capacity_bytes_per_s / max(1, self.active_clients)

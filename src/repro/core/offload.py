@@ -135,6 +135,8 @@ class OffloadSession:
         metrics: Optional["MetricsRegistry"] = None,
         fault: Optional[FaultInjector] = None,
         retry_policy: Optional[RetryPolicy] = None,
+        admission: Optional[Any] = None,
+        tenant: str = "default",
     ):
         if system not in SYSTEMS:
             raise ValueError(f"unknown system {system!r}; pick from {SYSTEMS}")
@@ -163,6 +165,11 @@ class OffloadSession:
         self._loaded = False
         self._infer_count = 0
         self.stage_marks: Dict[str, int] = {}
+        # overload protection (serving.admission.AdmissionController); None =
+        # no admission layer, every path below is bitwise pre-admission
+        self.admission = admission
+        self.tenant = tenant
+        self._device_fallback_s: Optional[float] = None
 
         # ---- trace the model once (shapes only; concrete consts captured)
         params = model.params
@@ -223,6 +230,9 @@ class OffloadSession:
                 noise or FrameworkNoiseModel(),
                 input_wire_divisor=model.input_wire_divisor,
             )
+            self.client.tenant = tenant
+            if admission is not None:
+                admission.register(client_id, tenant)
             if fault is not None:
                 self.network.fault = fault
             # built lazily on the first outage fallback; fault-free sessions
@@ -328,7 +338,53 @@ class OffloadSession:
             return uploads
         return [v for i, v in enumerate(uploads) if i not in carried]
 
-    def infer(self, *inputs) -> InferenceResult:
+    def device_fallback_seconds(self) -> float:
+        """Latency of one eager device-local inference — the degradation
+        ladder's tier-2 cost estimate (must fit the tenant's deadline budget
+        for a degraded response to be worth returning)."""
+        if self._device_fallback_s is None:
+            self._device_fallback_s = self.client_device.sequence_time(
+                self._steady_flops,
+                self._steady_bytes,
+                num_kernels=self._n_kernels,
+                fusion_factor=1.0,
+            )
+        return self._device_fallback_s
+
+    def _admission_decision(self, deadline_s: Optional[float]):
+        """Consult the admission controller for one arriving request and walk
+        the degradation ladder's *decision* half: raise on shed, install the
+        device-heavy plan on tier 1, and return the decision + the request's
+        absolute deadline.  ``admission is None`` short-circuits to the
+        bitwise pre-admission behaviour."""
+        adm, cl = self.admission, self.client
+        if adm is None or cl is None:
+            return None, None
+        t = self.clock.t
+        decision = adm.decide(
+            self.client_id,
+            t,
+            can_degrade_split=(
+                cl.mode == MODE_REPLAYING and cl.replanner is not None
+            ),
+            can_degrade_device=not cl.stateful_replay,
+            degraded_latency_s=self.device_fallback_seconds(),
+        )
+        if decision.action == "shed":
+            raise adm.shed_error(self.client_id, decision)
+        budget = (
+            deadline_s if deadline_s is not None
+            else adm.slo(adm.tenant_of(self.client_id)).deadline_s
+        )
+        deadline_t = t + budget
+        cl.deadline_t = deadline_t
+        if decision.action == "degrade_split":
+            plan = cl.replanner.degrade(t)
+            if plan is not None:
+                cl._install_plan(plan)
+        return decision, deadline_t
+
+    def infer(self, *inputs, deadline_s: Optional[float] = None) -> InferenceResult:
         if not self._loaded:
             self.load()
         t0, e0 = self.clock.t, self.meter.snapshot()
@@ -347,7 +403,12 @@ class OffloadSession:
             self.meter.add(STATE_CONTROL, CLIENT_CONTROL_S)
             self.clock.advance(CLIENT_CONTROL_S)
             cl = self.client
-            if cl.fault is not None and cl.fault.in_outage(self.clock.t):
+            decision, deadline_t = self._admission_decision(deadline_s)
+            arrival_t = self.clock.t
+            if decision is not None and decision.action == "degrade_device":
+                mode = "degraded_device"
+                outputs = self._device_fallback(inputs)
+            elif cl.fault is not None and cl.fault.in_outage(self.clock.t):
                 mode, outputs = self._infer_during_outage(inputs)
             else:
                 if cl.outage_active:
@@ -358,6 +419,15 @@ class OffloadSession:
                         )
                 mode = cl.mode
                 outputs = self._run_intercepted(inputs)
+                if decision is not None and decision.action == "degrade_split":
+                    mode = "degraded_split"
+            if decision is not None:
+                if decision.action == "admit":
+                    self.admission.note_admitted(arrival_t, self.clock.t)
+                self.admission.note_completion(
+                    arrival_t, self.clock.t, deadline_t
+                )
+                cl.deadline_t = None
         self._infer_count += 1
         if self._infer_count == 1:
             self.stage_marks["after_first_inference"] = (
@@ -383,7 +453,8 @@ class OffloadSession:
         self,
         inputs_seq: Sequence[Tuple[Any, ...]],
         *,
-        arrivals: Optional[Sequence[float]] = None,
+        arrivals: Optional[Any] = None,
+        deadlines: Optional[Any] = None,
     ) -> List["StreamResult"]:
         """Open-loop streaming inference: submit every element of
         ``inputs_seq`` at its arrival offset (seconds from now; default 0 —
@@ -406,18 +477,36 @@ class OffloadSession:
             raise ValueError("infer_stream requires an rrto session")
         if not self._loaded:
             self.load()
+        inputs_seq = list(inputs_seq)
         n = len(inputs_seq)
         if n == 0:
             return []
+        # arrivals/deadlines accept any iterable — a generator straight from
+        # poisson_arrivals is fine; both are materialized here
         offs = [0.0] * n if arrivals is None else [float(a) for a in arrivals]
         if len(offs) != n:
             raise ValueError(
                 f"{n} inputs but {len(offs)} arrival offsets"
             )
-        if any(b < a for a, b in zip(offs, offs[1:])) or any(
-            a < 0 for a in offs
-        ):
-            raise ValueError("arrival offsets must be sorted and >= 0")
+        for i, a in enumerate(offs):
+            if a < 0:
+                raise ValueError(
+                    f"arrival offset at index {i} is negative ({a!r}); "
+                    "offsets are seconds from now and must be >= 0"
+                )
+            if i > 0 and a < offs[i - 1]:
+                raise ValueError(
+                    f"arrival offsets must be non-decreasing: offset at "
+                    f"index {i} ({a!r}) precedes offset at index {i - 1} "
+                    f"({offs[i - 1]!r})"
+                )
+        deads = None
+        if deadlines is not None:
+            deads = [float(d) for d in deadlines]
+            if len(deads) != n:
+                raise ValueError(
+                    f"{n} inputs but {len(deads)} deadline budgets"
+                )
         base = self.clock.t
         # the pipelined executor is only valid while the session is replay-
         # locked (a DAM fallback reverts to recording and drops it)
@@ -428,9 +517,12 @@ class OffloadSession:
         )
         if pipe is None:
             results = []
-            for off, ins in zip(offs, inputs_seq):
+            for i, (off, ins) in enumerate(zip(offs, inputs_seq)):
                 self.client._wait_until(base + off)
-                r = self.infer(*ins)
+                r = self.infer(
+                    *ins,
+                    deadline_s=None if deads is None else deads[i],
+                )
                 results.append(
                     StreamResult(
                         outputs=r.outputs,
@@ -465,6 +557,13 @@ class OffloadSession:
             StreamResult(outputs=o, arrival_t=base + off, done_at=done)
             for o, off, done in zip(outputs, offs, dones)
         ]
+        if deads is not None and self.admission is not None:
+            # pipelined submissions bypass per-call infer(); score deadlines
+            # post-hoc against the in-order completion times
+            for r, d in zip(results, deads):
+                self.admission.note_completion(
+                    r.arrival_t, r.done_at, r.arrival_t + d
+                )
         # completions are in-order, so the last one closes the window
         wall = max(0.0, results[-1].done_at - base)
         dev1, link1 = pipe.busy_snapshot()

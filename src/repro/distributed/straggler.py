@@ -115,6 +115,7 @@ class HedgedRouter:
             Callable[[ReplicaModel, int], Optional[float]]
         ] = None,
         metrics: Optional[MetricsRegistry] = None,
+        health: Optional[Callable[[int], bool]] = None,
     ):
         if window < 1:
             raise ValueError(f"observation window must be >= 1, got {window}")
@@ -125,12 +126,27 @@ class HedgedRouter:
         self._observed: Deque[float] = deque(maxlen=window)
         self.stats = HedgeStats(registry=metrics)
         self._rr = 0
+        # soft health signal (circuit breakers): an unhealthy replica is
+        # routed *around*, not treated as failed — if every candidate is
+        # unhealthy, a second pass ignores the signal, so transient
+        # saturation never escalates to NoHealthyReplicaError.  None = the
+        # pre-breaker behaviour, bit for bit.
+        self.health = health
 
     @property
     def observed_count(self) -> int:
         """Completions currently inside the deadline-estimation window
         (bounded by ``window`` regardless of request count)."""
         return len(self._observed)
+
+    @property
+    def observed_median(self) -> Optional[float]:
+        """Median completion latency in the observation window (None before
+        any completion) — the fleet's circuit-breaker latency baseline."""
+        if not self._observed:
+            return None
+        xs = sorted(self._observed)
+        return xs[len(xs) // 2]
 
     def _complete(
         self, replica: ReplicaModel, req_idx: int
@@ -148,11 +164,22 @@ class HedgedRouter:
         median = xs[len(xs) // 2]
         return self.hedge_multiplier * median
 
+    def _healthy(self, idx: int) -> bool:
+        return self.health is None or self.health(idx)
+
     def _pick(self, exclude: int) -> int:
-        for _ in range(len(self.replicas)):
-            self._rr = (self._rr + 1) % len(self.replicas)
-            if self._rr != exclude and not self.replicas[self._rr].failed:
-                return self._rr
+        # first pass honors the soft health signal; the fallback pass takes
+        # any non-failed replica (a saturated box beats no box at all)
+        for honor_health in (True, False) if self.health is not None else (True,):
+            rr = self._rr
+            for _ in range(len(self.replicas)):
+                rr = (rr + 1) % len(self.replicas)
+                if rr == exclude or self.replicas[rr].failed:
+                    continue
+                if honor_health and not self._healthy(rr):
+                    continue
+                self._rr = rr
+                return rr
         raise NoHealthyReplicaError("no healthy replica available")
 
     def dispatch(
@@ -212,10 +239,15 @@ class HedgedRouter:
             # too: walk every remaining healthy replica before giving up —
             # a third box can still serve.  This is failure recovery, not
             # speculation, so the success path never runs extra duplicates.
-            remaining = [
-                i for i, r in enumerate(self.replicas)
-                if i not in tried and not r.failed
-            ]
+            # healthy (breaker-closed) candidates first; saturated ones are
+            # still last-resort candidates rather than excluded outright
+            remaining = sorted(
+                (
+                    i for i, r in enumerate(self.replicas)
+                    if i not in tried and not r.failed
+                ),
+                key=lambda i: not self._healthy(i),
+            )
             if not remaining:
                 raise AllReplicasFailedError(
                     f"request {req_idx}: primary {primary_rep.name!r} and "

@@ -53,6 +53,7 @@ class ReplannerStats(RegistryBackedStats):
         ("replans", 0),               # adopted swaps
         ("rejected_by_hysteresis", 0),
         ("outage_replans", 0),        # declared-outage immediate swaps
+        ("overload_degrades", 0),     # admission-driven device-heavy swaps
     )
 
 
@@ -141,6 +142,32 @@ class AdaptiveReplanner:
         ):
             self.current = candidate
             return None
+        self.current = candidate
+        return candidate.plan
+
+    def degrade(self, now: float) -> Optional[SplitPlan]:
+        """The *server* is overloaded: shift work onto the device by planning
+        as if the wire were at the outage floor (every segment the planner
+        can move lands device-side).  Unlike :meth:`declare_outage` the link
+        is healthy, so the EMA is left alone — the next
+        :meth:`observe` sample re-plans back toward offloading from real
+        bandwidth once admission pressure clears.  ``_last_plan_t`` is
+        stamped, so ``min_replan_interval_s`` rate-limits the restore (the
+        natural anti-thrash hysteresis under oscillating load).  Returns the
+        device-heavy plan, or None when the session already runs it."""
+        self._last_plan_t = now
+        candidate = self._plan_at(OUTAGE_FLOOR_BYTES_PER_S, now)
+        if (
+            self.current is not None
+            and candidate.plan.signature() == self.current.plan.signature()
+        ):
+            return None
+        self.stats.overload_degrades += 1
+        if self.tracer is not None:
+            self.tracer.instant(
+                self.trace_track, "overload_degrade", now,
+                adopted=candidate.plan.signature(),
+            )
         self.current = candidate
         return candidate.plan
 

@@ -17,7 +17,21 @@ Public API:
 * :class:`~repro.serving.recovery.SessionCheckpointer` — periodic carried-
   state checkpoints + bounded step replay, the crash-recovery half of the
   fault-tolerance layer.
+* :class:`~repro.serving.admission.AdmissionController` — per-tenant SLO
+  classes, queue-limit + token-bucket admission, and the three-tier
+  graceful-degradation ladder (overload protection).
 """
+from repro.serving.admission import (
+    AdmissionController,
+    AdmissionDecision,
+    AdmissionRejectedError,
+    AdmissionStats,
+    BRONZE,
+    GOLD,
+    SILVER,
+    SLOClass,
+    TokenBucket,
+)
 from repro.serving.engine import (
     GenerationResult,
     LocalServing,
@@ -25,6 +39,7 @@ from repro.serving.engine import (
     RRTOServedLM,
 )
 from repro.serving.fleet import (
+    CircuitBreaker,
     EdgeFleet,
     FleetClient,
     FleetReplica,
@@ -36,9 +51,19 @@ from repro.serving.recovery import CarriedCheckpoint, SessionCheckpointer
 from repro.serving.replay_cache import CacheStats, ReplayCache
 
 __all__ = [
+    "AdmissionController",
+    "AdmissionDecision",
+    "AdmissionRejectedError",
+    "AdmissionStats",
+    "BRONZE",
     "CacheStats",
     "CarriedCheckpoint",
+    "CircuitBreaker",
     "EdgeFleet",
+    "GOLD",
+    "SILVER",
+    "SLOClass",
+    "TokenBucket",
     "FleetClient",
     "FleetReplica",
     "FleetResult",

@@ -96,6 +96,84 @@ class FleetReplica:
         return len(self.edge.sessions)
 
 
+class CircuitBreaker:
+    """Per-replica saturation breaker (closed / open / half-open).
+
+    A replica that keeps failing or completing far beyond the fleet's
+    observed baseline is *saturated*; hedging into it only deepens its queue.
+    The breaker counts consecutive bad outcomes (failure, or latency above
+    ``latency_multiplier`` x the router's observed median); at
+    ``failure_threshold`` it opens for ``cooldown_s`` of simulated time, the
+    router's health hook routes around it, and after the cooldown one probe
+    request (half-open) decides: good closes the breaker, bad re-opens it.
+
+    The breaker is a *soft* signal — the router falls back to open-breaker
+    replicas when nothing else is healthy, so a fleet-wide brownout degrades
+    instead of erroring."""
+
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half_open"
+
+    def __init__(
+        self,
+        *,
+        failure_threshold: int = 3,
+        cooldown_s: float = 0.25,
+        latency_multiplier: float = 4.0,
+    ):
+        if failure_threshold < 1:
+            raise ValueError(
+                f"failure_threshold must be >= 1, got {failure_threshold}"
+            )
+        self.failure_threshold = int(failure_threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.latency_multiplier = float(latency_multiplier)
+        self.state = self.CLOSED
+        self.consecutive_bad = 0
+        self.open_until = 0.0
+        self.opens = 0
+
+    def allow(self, t: float) -> bool:
+        """May this replica take a request at ``t``?  An elapsed cooldown
+        transitions open -> half-open and admits the probe."""
+        if self.state == self.OPEN:
+            if t >= self.open_until:
+                self.state = self.HALF_OPEN
+                return True
+            return False
+        return True
+
+    def record(
+        self,
+        t: float,
+        *,
+        failed: bool,
+        latency_s: Optional[float] = None,
+        baseline_s: Optional[float] = None,
+    ) -> None:
+        """Score one completed (or failed) dispatch on this replica."""
+        bad = failed or (
+            latency_s is not None
+            and baseline_s is not None
+            and baseline_s > 0.0
+            and latency_s > self.latency_multiplier * baseline_s
+        )
+        if bad:
+            self.consecutive_bad += 1
+            if (
+                self.state == self.HALF_OPEN
+                or self.consecutive_bad >= self.failure_threshold
+            ):
+                self.state = self.OPEN
+                self.open_until = t + self.cooldown_s
+                self.opens += 1
+                self.consecutive_bad = 0
+        else:
+            self.consecutive_bad = 0
+            self.state = self.CLOSED
+
+
 class FleetStats(RegistryBackedStats):
     """Fleet-wide counters, registry-backed (see
     :class:`repro.obs.MetricsRegistry`)."""
@@ -164,12 +242,16 @@ class FleetClient:
         """The session on the client's current primary replica."""
         return self.sessions[self.primary]
 
-    def infer(self, *inputs) -> InferenceResult:
+    def infer(
+        self, *inputs, deadline_s: Optional[float] = None
+    ) -> InferenceResult:
         """Hedged inference; returns the winning replica's result."""
-        res, _, _ = self.dispatch(*inputs)
+        res, _, _ = self.dispatch(*inputs, deadline_s=deadline_s)
         return res
 
-    def dispatch(self, *inputs) -> Tuple[InferenceResult, float, str]:
+    def dispatch(
+        self, *inputs, deadline_s: Optional[float] = None
+    ) -> Tuple[InferenceResult, float, str]:
         """One hedged request through the fleet router; returns
         ``(winning result, completion latency, winner replica name)``.
 
@@ -189,8 +271,15 @@ class FleetClient:
 
         def complete(replica: FleetReplica, idx: int) -> Optional[float]:
             t0 = fleet.clock.t
-            res = self._execute_on(replica, inputs)
+            res = self._execute_on(replica, inputs, deadline_s=deadline_s)
+            breaker = (
+                fleet.breakers.get(replica.name)
+                if fleet.breakers is not None
+                else None
+            )
             if res is None:
+                if breaker is not None:
+                    breaker.record(fleet.clock.t, failed=True)
                 if tracer is not None:
                     tracer.instant(
                         f"{replica.name}/hedge", "hedge_failed", t0,
@@ -199,6 +288,13 @@ class FleetClient:
                 return None
             results[replica.name] = res
             lat = res.wall_seconds + max(0.0, replica.slowdown(idx))
+            if breaker is not None:
+                breaker.record(
+                    fleet.clock.t,
+                    failed=False,
+                    latency_s=lat,
+                    baseline_s=fleet.router.observed_median,
+                )
             if tracer is not None:
                 hedge_spans[replica.name] = tracer.span(
                     f"{replica.name}/hedge", "hedge_dispatch", t0, t0 + lat,
@@ -213,9 +309,22 @@ class FleetClient:
 
         # a live stateful session's replay step is non-idempotent (donated
         # carried state advances server-side) — hedge it on failure only
+        primary_idx = fleet.replica_index(self.primary)
+        if (
+            fleet.breakers is not None
+            and not self.stateful
+            and not fleet.breakers[self.primary].allow(fleet.clock.t)
+        ):
+            # the primary's breaker is open: route around the saturated box
+            # *before* dispatching into it (a stateful session stays home —
+            # its carried state is single-homed)
+            try:
+                primary_idx = fleet.router._pick(exclude=primary_idx)
+            except NoHealthyReplicaError:
+                pass  # nothing better: the saturated primary still serves
         latency, winner = fleet.router.dispatch(
             req,
-            primary=fleet.replica_index(self.primary),
+            primary=primary_idx,
             completion=complete,
             speculative=not (self.stateful and self.session.client.stateful_replay),
         )
@@ -236,7 +345,10 @@ class FleetClient:
 
     # ------------------------------------------------------------------
     def _execute_on(
-        self, replica: FleetReplica, inputs: Sequence[Any]
+        self,
+        replica: FleetReplica,
+        inputs: Sequence[Any],
+        deadline_s: Optional[float] = None,
     ) -> Optional[InferenceResult]:
         if replica.failed:
             return None
@@ -256,7 +368,7 @@ class FleetClient:
                 sess = self.sessions[replica.name]
             else:
                 sess = self.fleet._backup_session(self, replica)
-        return sess.infer(*inputs)
+        return sess.infer(*inputs, deadline_s=deadline_s)
 
     def _note_lock(self) -> None:
         """Record fingerprint affinity once this client's IOS locks, so
@@ -298,6 +410,11 @@ class EdgeFleet:
         fault: Optional[FaultInjector] = None,
         checkpoint_dir: Optional[str] = None,
         checkpoint_every: int = 4,
+        circuit_breaker: bool = False,
+        breaker_cooldown_s: float = 0.25,
+        breaker_threshold: int = 3,
+        breaker_latency_multiplier: float = 4.0,
+        admission_factory: Optional[Callable[[str], Any]] = None,
     ):
         if n_replicas < 1:
             raise ValueError(f"need at least one replica, got {n_replicas}")
@@ -327,11 +444,32 @@ class EdgeFleet:
                     tracer=tracer,
                     metrics=self.metrics.scope(f"r{i}"),
                     fault=fault,
+                    # one controller per box (each guards its own queue and
+                    # ingress); None = no admission layer on this fleet
+                    admission=(
+                        admission_factory(f"r{i}")
+                        if admission_factory is not None
+                        else None
+                    ),
                 ),
             )
             for i in range(n_replicas)
         ]
         self.hedging = hedging
+        # per-replica circuit breakers: the router's soft health signal.
+        # None (the default) leaves routing bitwise pre-breaker.
+        self.breakers: Optional[Dict[str, CircuitBreaker]] = (
+            {
+                rep.name: CircuitBreaker(
+                    failure_threshold=breaker_threshold,
+                    cooldown_s=breaker_cooldown_s,
+                    latency_multiplier=breaker_latency_multiplier,
+                )
+                for rep in self.replicas
+            }
+            if circuit_breaker
+            else None
+        )
         self.router = HedgedRouter(
             self.replicas,
             # hedge_multiplier=inf never trips the speculative deadline, so
@@ -339,6 +477,15 @@ class EdgeFleet:
             hedge_multiplier=hedge_multiplier if hedging else float("inf"),
             min_observations=min_observations,
             metrics=self.metrics.scope("hedge"),
+            health=(
+                (
+                    lambda i: self.breakers[
+                        self.replicas[i].name
+                    ].allow(self.clock.t)
+                )
+                if circuit_breaker
+                else None
+            ),
         )
         self.clients: Dict[str, FleetClient] = {}
         self._affinity: Dict[str, str] = {}   # model name / IOS fp -> replica
@@ -784,6 +931,14 @@ class EdgeFleet:
             hedging=self.hedging,
             fleet=self.stats.as_dict(),
             router=self.router.stats.as_dict(),
+            breakers=(
+                {
+                    name: dict(state=b.state, opens=b.opens)
+                    for name, b in self.breakers.items()
+                }
+                if self.breakers is not None
+                else None
+            ),
             backhaul_bytes=self.backhaul.bytes_total,
             events_fired=self.timeline.fired,
             per_replica={

@@ -67,6 +67,7 @@ from repro.core.netsim import FaultInjector, ServerIngress, get_network
 from repro.core.offload import InferenceResult, OffloadableModel, OffloadSession
 from repro.obs import MetricsRegistry, RegistryBackedStats, Tracer
 from repro.partition.segments import PLACE_SERVER
+from repro.serving.admission import AdmissionController, drr_select
 from repro.serving.replay_cache import ReplayCache
 
 
@@ -209,6 +210,20 @@ class ReplayBatcher:
         # base program so size-aware eviction cannot purge it (and its
         # derived executables) while the round is still executing/claiming
         self._round_claims: List[str] = []
+        # overload protection (bound by RRTOEdgeServer when it carries an
+        # AdmissionController): supplies SLO priority/weight for EDF ordering
+        # and DRR slot selection.  None = formation order is submission order,
+        # bitwise the pre-admission behaviour.
+        self.admission: Optional[AdmissionController] = None
+        # max batch slots per round per fingerprint; None = unbounded.  Only
+        # enforced with an admission controller attached (weights come from
+        # its SLO classes); the deficit counters persist across rounds, so a
+        # tenant short-changed one round is made whole in the next.
+        self.round_capacity: Optional[int] = None
+        self._drr_deficits: Dict[str, float] = {}
+        self.depth_gauge = (
+            metrics.gauge("pending_depth") if metrics is not None else None
+        )
         # every legacy counter attribute (``batcher.vmap_batches`` etc.)
         # delegates to this registry-backed object — see the property loop
         # below the class definition
@@ -222,8 +237,20 @@ class ReplayBatcher:
         """Preload one driving round: for each fingerprint, the replay-phase
         clients that will submit this round and their wire inputs; for each
         (fingerprint, server-segment) key, the split-mode clients whose plans
-        execute that segment on the GPU this round."""
-        self._pending = {fp: list(members) for fp, members in entries.items()}
+        execute that segment on the GPU this round.
+
+        With an admission controller attached (or any member carrying a
+        deadline), each fingerprint's members are ordered
+        earliest-deadline-first and — when ``round_capacity`` bounds the
+        round — selected deficit-round-robin across tenants, so one chatty
+        tenant cannot monopolize the batch slots.  Members not selected keep
+        no preload and replay solo.  Without deadlines or a controller the
+        formation order is the submission order, bitwise identical to the
+        pre-admission batcher."""
+        self._pending = {
+            fp: self._order_members(list(members))
+            for fp, members in entries.items()
+        }
         self._groups = {}
         self._seg_pending = (
             {k: list(v) for k, v in seg_entries.items()}
@@ -261,6 +288,70 @@ class ReplayBatcher:
             for key in self._round_claims:
                 cache.release(key)
         self._round_claims = []
+
+    def _order_members(
+        self, members: List[Tuple[RRTOClient, List[np.ndarray]]]
+    ) -> List[Tuple[RRTOClient, List[np.ndarray]]]:
+        """EDF-order one fingerprint's round members (deadline, then SLO
+        priority, then arrival order), then DRR-select down to
+        ``round_capacity`` slots across tenants.  Pure pass-through when no
+        member has a deadline and no controller is attached."""
+        adm = self.admission
+        if adm is None and not any(
+            cl.deadline_t is not None for cl, _ in members
+        ):
+            return members
+        if len(members) > 1:
+            def edf_key(item):
+                idx, (cl, _) = item
+                deadline = (
+                    cl.deadline_t if cl.deadline_t is not None else float("inf")
+                )
+                prio = adm.slo(cl.tenant).priority if adm is not None else 0
+                return (deadline, -prio, idx)
+
+            members = [
+                m for _, m in sorted(enumerate(members), key=edf_key)
+            ]
+        if (
+            adm is not None
+            and self.round_capacity is not None
+            and len(members) > self.round_capacity
+        ):
+            members = drr_select(
+                members,
+                self.round_capacity,
+                lambda m: m[0].tenant,
+                lambda tenant: adm.slo(tenant).weight,
+                self._drr_deficits,
+            )
+        return members
+
+    @property
+    def pending_depth(self) -> int:
+        """Preloaded-but-unclaimed submissions in the current round (whole-
+        program members, split segments, and formed-group slots not yet
+        collected) — the batcher's contribution to the edge backlog."""
+        depth = sum(len(m) for m in self._pending.values())
+        depth += sum(len(m) for m in self._seg_pending.values())
+        depth += sum(len(g.pending) for g in self._groups.values())
+        return depth
+
+    def sample_depth(self, now: Optional[float] = None) -> int:
+        """Sample the pending-round depth onto the obs gauge (and, with an
+        admission controller driving overload runs, the trace counter)."""
+        depth = self.pending_depth
+        if self.depth_gauge is not None:
+            self.depth_gauge.set(depth)
+        if (
+            self.tracer is not None
+            and now is not None
+            and self.admission is not None
+        ):
+            self.tracer.counter(
+                f"{self.track}/batcher", "pending_depth", now, float(depth)
+            )
+        return depth
 
     def _wire_digest(self, client_id: str) -> Optional[Tuple]:
         """The cached wire-input shape/dtype digest of one client's bound
@@ -576,6 +667,7 @@ class RRTOEdgeServer:
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
         fault: Optional["FaultInjector"] = None,
+        admission: Optional[AdmissionController] = None,
     ):
         self.clock = clock or SimClock()
         self.name = name
@@ -603,6 +695,14 @@ class RRTOEdgeServer:
             tracer=tracer, track=name,
             metrics=self.metrics.scope("batcher"),
         )
+        # overload protection: None (the default) leaves every path bitwise
+        # pre-admission, the FaultInjector discipline
+        self.admission = admission
+        if admission is not None:
+            admission.bind(server=self.server, ingress=self.ingress)
+            if admission.tracer is None:
+                admission.tracer = tracer
+            self.batcher.admission = admission
         self.environment = environment
         self.sessions: Dict[str, OffloadSession] = {}
         # fleet bookkeeping: sessions migrated onto / off this box
@@ -617,6 +717,7 @@ class RRTOEdgeServer:
         seed: Optional[int] = None,
         min_repeats: int = 3,
         environment: Optional[str] = None,
+        tenant: str = "default",
         **session_kwargs: Any,
     ) -> OffloadSession:
         """Attach one mobile client running ``model`` to this edge server.
@@ -637,6 +738,9 @@ class RRTOEdgeServer:
         network.ingress = self.ingress
         if self.fault is not None:
             session_kwargs.setdefault("fault", self.fault)
+        if self.admission is not None:
+            session_kwargs.setdefault("admission", self.admission)
+        session_kwargs.setdefault("tenant", tenant)
         sess = OffloadSession(
             model,
             "rrto",
@@ -667,6 +771,13 @@ class RRTOEdgeServer:
         batched call; recording-phase clients run their per-operator RPC
         storms serialized through the shared server and ingress."""
         self.ingress.active_clients = len(inputs_by_client)
+        if self.admission is not None:
+            # stamp each member's absolute deadline at round-formation time
+            # so the batcher's EDF ordering sees it before anyone submits
+            for cid in inputs_by_client:
+                self.sessions[cid].client.deadline_t = (
+                    self.admission.deadline_for(cid, self.clock.t)
+                )
         entries: Dict[str, List[Tuple[RRTOClient, List[np.ndarray]]]] = {}
         seg_entries: Dict[Tuple[str, int, int], List[str]] = {}
         for cid, inputs in inputs_by_client.items():
@@ -690,6 +801,10 @@ class RRTOEdgeServer:
                             (cl.ios_fp, seg.start, seg.end), []
                         ).append(cid)
         self.batcher.begin_round(entries, seg_entries)
+        self.batcher.sample_depth(self.clock.t)
+        if self.admission is not None:
+            # refresh the ingress queue-depth gauge on the sim clock
+            self.admission.queue_depth(self.clock.t)
         try:
             return {
                 cid: self.sessions[cid].infer(*inputs)
@@ -796,4 +911,11 @@ class RRTOEdgeServer:
             ),
             link_bytes=self.ingress.bytes_total,  # both directions
             gpu_busy_seconds=self.server.busy_seconds,
+            queue_depth=self.ingress.queue_depth,
+            pending_depth=self.batcher.pending_depth,
+            admission=(
+                self.admission.stats.as_dict()
+                if self.admission is not None
+                else None
+            ),
         )

@@ -615,3 +615,91 @@ class TestSingleClientEquivalence:
         ing.active_clients = 10
         t10 = net.transfer_time(1e6, 0.0)
         assert t10 > t1 * 5  # fair share: 10 MB/s -> 1 MB/s per client
+
+
+class TestDeviationDuringFormedRound:
+    """A DAM deviation (``_fallback``) firing while the batcher already
+    holds the client's preload in a formed round: the deviating client must
+    exit the round cleanly (revert to recording, produce a correct result)
+    and its co-tenants' batched replays must stay bitwise-identical to an
+    edge that never saw the deviation."""
+
+    CIDS = ("c0", "c1", "c2")
+
+    def _build(self):
+        edge = RRTOEdgeServer(execute=True)
+        model, x = make_mlp()
+        for cid in self.CIDS:
+            edge.connect(model, client_id=cid, min_repeats=2)
+        for _ in range(4):
+            edge.run_round({cid: (x,) for cid in self.CIDS})
+        for cid in self.CIDS:
+            assert edge.sessions[cid].client.mode == "replaying"
+        keys = {edge.sessions[cid].client.replay_key for cid in self.CIDS}
+        assert len(keys) == 1       # one shared batched-replay group
+        return edge, x
+
+    def test_deviant_exits_round_cleanly_cotenants_bitwise(self):
+        from repro.core.flatten import flatten_closed_jaxpr
+
+        edge, x = self._build()
+        control, x_ctl = self._build()
+        want = control.run_round({cid: (x_ctl,) for cid in self.CIDS})
+
+        # form the round exactly as run_round does: all three replaying
+        # clients preloaded under their shared fingerprint
+        entries = {}
+        for cid in self.CIDS:
+            sess = edge.sessions[cid]
+            entries.setdefault(sess.client.replay_key, []).append(
+                (sess.client, sess.replay_wire_inputs((x,)))
+            )
+        edge.batcher.begin_round(entries, {})
+
+        # co-tenants claim their batch lanes first
+        res = {cid: edge.sessions[cid].infer(x) for cid in ("c0", "c1")}
+
+        # ... then c2 — still preloaded in the formed round — runs a
+        # different op stream through its own interceptor: relu where the
+        # locked IOS recorded tanh@w2.  The DAM must fall back mid-round.
+        sess2 = edge.sessions["c2"]
+        rng = np.random.default_rng(0)
+        w1 = rng.normal(0, 0.1, (16, 32)).astype(np.float32)
+        jb = flatten_closed_jaxpr(
+            jax.make_jaxpr(lambda xx: [jax.nn.relu(xx @ w1)])(x)
+        )
+        addrs_b = sess2.interceptor.upload_params(
+            [np.asarray(c) for c in jb.consts]
+        )
+        out2 = sess2.interceptor.run(jb, addrs_b, [x])
+        edge.batcher.end_round()
+
+        deviant = sess2.client
+        assert deviant.fallbacks >= 1
+        assert deviant.mode == "recording"
+        assert np.asarray(out2[0]).shape == (2, 32)    # the relu stream ran
+
+        # co-tenants' batched replays: bitwise-equal to the clean twin
+        for cid in ("c0", "c1"):
+            assert np.array_equal(
+                np.asarray(res[cid].outputs[0]),
+                np.asarray(want[cid].outputs[0]),
+            )
+        # exactly one unclaimed lane remains — the deviant's preloaded
+        # batch slot, abandoned when the DAM fell back; the next round's
+        # formation sweeps it, so the no-show never leaks across rounds
+        assert edge.batcher.pending_depth == 1
+
+        # the edge still serves the deviant: it re-records through normal
+        # rounds and re-locks into batched replay alongside its co-tenants
+        for _ in range(4):
+            edge.run_round({cid: (x,) for cid in self.CIDS})
+        assert edge.batcher.pending_depth == 0
+        assert edge.sessions["c2"].client.mode == "replaying"
+        final = edge.run_round({cid: (x,) for cid in self.CIDS})
+        ctl_final = control.run_round({cid: (x_ctl,) for cid in self.CIDS})
+        for cid in self.CIDS:
+            assert np.array_equal(
+                np.asarray(final[cid].outputs[0]),
+                np.asarray(ctl_final[cid].outputs[0]),
+            )

@@ -365,6 +365,35 @@ class TestPipelinedStreamSession:
         with pytest.raises(ValueError, match="rrto"):
             nn.infer_stream([tuple(model.example_inputs)])
 
+    def test_stream_accepts_generator_arrivals(self):
+        """Open-loop drivers hand ``poisson_arrivals``-style generators
+        straight to ``infer_stream``; validation must materialize any
+        iterable rather than demand a list."""
+        from repro.core.netsim import client_stream_seed, poisson_arrivals
+
+        model = ZOO["sensor_encoder"](**REGISTRY_CASES["sensor_encoder"])
+        sess = OffloadSession(model, "rrto", min_repeats=2, seed=0)
+        sess.load()
+        offsets = poisson_arrivals(
+            100.0, 4, seed=client_stream_seed(3, "c0")
+        )
+        results = sess.infer_stream(
+            [tuple(model.example_inputs)] * 4,
+            arrivals=iter(offsets),                 # a bare iterator
+            deadlines=(0.5 for _ in range(4)),      # a generator
+        )
+        assert len(results) == 4
+        assert sess.client.mode == "replaying"
+
+    def test_stream_errors_name_the_offending_index(self):
+        model = ZOO["sensor_encoder"](**REGISTRY_CASES["sensor_encoder"])
+        sess = OffloadSession(model, "rrto", min_repeats=2)
+        xs = [tuple(model.example_inputs)] * 3
+        with pytest.raises(ValueError, match="index 1"):
+            sess.infer_stream(xs, arrivals=iter([0.0, -0.2, 0.3]))
+        with pytest.raises(ValueError, match="index 2.*precedes.*index 1"):
+            sess.infer_stream(xs, arrivals=(t for t in [0.0, 0.5, 0.3]))
+
 
 class TestThroughputObjective:
     def test_config_accepts_throughput(self):
