@@ -22,7 +22,9 @@ def run(n_infer: int = 8, input_size: int = 640):
 
     by = {(r.system, r.environment): r for r in rows}
     checks = {}
-    for env, lat_target, dev_target in (("indoor", 95.0, 72.0), ("outdoor", 94.0, 69.0)):
+    # (95.0, 72.0) / (94.0, 69.0) are the paper's reduction targets; the
+    # guards report measured reductions, the targets live in trajectory/
+    for env in ("indoor", "outdoor"):
         rr, cr, dv = by[("rrto", env)], by[("cricket", env)], by[("device_only", env)]
         checks[f"{env}_latency_vs_cricket_pct"] = reduction(rr.latency_s, cr.latency_s)
         checks[f"{env}_latency_vs_device_pct"] = reduction(rr.latency_s, dv.latency_s)

@@ -61,6 +61,7 @@ def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
         pipeline_overlap,
         stateful_split,
         tab4_rpc_gpu_util,
+        verifier_overhead,
     )
 
     failures: list = []        # (benchmark, guard, detail)
@@ -200,6 +201,37 @@ def smoke(json_dir: Optional[str] = None, tracer=None) -> None:
     except Exception as e:  # noqa: BLE001
         failures.append(("stateful_split", "crashed", repr(e)))
         _bench_json(json_dir, "stateful_split",
+                    metrics={}, guards={}, error=repr(e))
+
+    print("== verifier_overhead (smoke) ==", file=sys.stderr, flush=True)
+    try:
+        # the soundness guard: every real locked IOS (stateless and
+        # stateful) must verify clean, the static sweep must stay within
+        # its per-kernel budget, and verify=True must not change a single
+        # output bit
+        vo_rows, vo_checks = verifier_overhead.run()
+        record("verifier_overhead", vo_checks)
+        worst = max(vo_rows, key=lambda r: r.us_per_kernel)
+        csv_rows.append((
+            "smoke_verifier_overhead",
+            worst.verify_us,
+            f"model={worst.model};us_per_kernel={worst.us_per_kernel:.1f};"
+            f"diags={worst.n_diags};bitwise={worst.bitwise_identical}",
+        ))
+        _bench_json(
+            json_dir, "verifier_overhead",
+            metrics={
+                "verify_us": worst.verify_us,
+                "us_per_kernel": worst.us_per_kernel,
+                "model": worst.model,
+                "n_kernels": worst.n_kernels,
+                "n_diags": worst.n_diags,
+            },
+            guards=vo_checks,
+        )
+    except Exception as e:  # noqa: BLE001
+        failures.append(("verifier_overhead", "crashed", repr(e)))
+        _bench_json(json_dir, "verifier_overhead",
                     metrics={}, guards={}, error=repr(e))
 
     print("== fleet_scaling (smoke) ==", file=sys.stderr, flush=True)

@@ -1,0 +1,150 @@
+"""Replay-soundness verifier overhead: what fail-fast costs.
+
+The static passes (``repro.analysis``) run inside the lock path when a
+session opts in with ``verify=True``.  This benchmark measures that cost
+against the work it guards: (a) the wall time of one full ``verify_ios``
+sweep over a locked IOS — dataflow lint, donation sanitizer, plan checks
+for the planner's emitted plans — and (b) the end-to-end lock+replay time
+of a verified session vs. the default unverified one, whose outputs must
+stay bitwise identical.
+
+Guards: every pass comes back clean on the real IOS, the sweep stays under
+an (extremely generous) per-kernel budget, and ``verify=True`` changes
+nothing about the results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+MBPS = 1e6 / 8.0
+CASES = {
+    "sensor_encoder": dict(scale=0.25, input_size=32, n_blocks=2),
+    "recurrent_sensor_decoder": dict(
+        scale=0.25, input_size=32, n_blocks=2, d_state=32
+    ),
+}
+STATE_THREADING = {"recurrent_sensor_decoder": (1, 1)}
+# a static pass over a few dozen records has no business costing more than
+# this per kernel — catches accidental quadratic blowups, not noise
+BUDGET_US_PER_KERNEL = 50_000.0
+
+
+@dataclasses.dataclass
+class VerifierRow:
+    model: str
+    n_kernels: int
+    n_diags: int
+    verify_us: float            # one verify_ios sweep (passes only)
+    us_per_kernel: float
+    lock_plain_s: float         # session lock+replay, verify=False
+    lock_verified_s: float      # session lock+replay, verify=True
+    bitwise_identical: bool
+
+
+def _locked_session(name: str, verify: bool):
+    from repro.core.offload import OffloadSession
+    from repro.models.cnn_zoo import ZOO
+
+    model = ZOO[name](**CASES[name])
+    sess = OffloadSession(model, "rrto", min_repeats=2, verify=verify)
+    sess.load()
+    args = list(model.example_inputs)
+    thread = STATE_THREADING.get(name)
+    res = None
+    for _ in range(6):
+        res = sess.infer(*args)
+        if thread is not None:
+            args[thread[1]] = res.outputs[thread[0]]
+    assert res is not None and res.mode == "replaying"
+    return sess, res
+
+
+def run() -> Tuple[List[VerifierRow], Dict[str, bool]]:
+    from repro.analysis.verify import verify_ios
+    from repro.partition.planner import plan_partition
+    from repro.partition.segments import SegmentGraph, SplitPlan
+
+    rows: List[VerifierRow] = []
+    for name in sorted(CASES):
+        t0 = time.perf_counter()
+        plain, res_plain = _locked_session(name, verify=False)
+        lock_plain = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        checked, res_checked = _locked_session(name, verify=True)
+        lock_checked = time.perf_counter() - t0
+
+        calls = checked.client._ios_calls
+        pairs = checked.server.context(
+            checked.client_id
+        ).replay.program.carried_pairs
+        graph = SegmentGraph(calls, carried_pairs=pairs)
+        plans = [SplitPlan.full_server(graph.n_ops)]
+        for mbps in (1, 128):
+            plans.append(
+                plan_partition(
+                    graph, checked.client_device, checked.server_device,
+                    mbps * MBPS,
+                ).plan
+            )
+
+        t0 = time.perf_counter()
+        report = verify_ios(
+            name, calls, pairs, plans=plans, min_repeats=2, census=False
+        )
+        verify_us = (time.perf_counter() - t0) * 1e6
+
+        rows.append(
+            VerifierRow(
+                model=name,
+                n_kernels=graph.n_ops,
+                n_diags=len(report.diagnostics),
+                verify_us=verify_us,
+                us_per_kernel=verify_us / max(graph.n_ops, 1),
+                lock_plain_s=lock_plain,
+                lock_verified_s=lock_checked,
+                bitwise_identical=all(
+                    np.asarray(a).tobytes() == np.asarray(b).tobytes()
+                    for a, b in zip(res_plain.outputs, res_checked.outputs)
+                ),
+            )
+        )
+
+    checks = {
+        "all_ios_verify_clean": all(r.n_diags == 0 for r in rows),
+        "verify_within_budget": all(
+            r.us_per_kernel <= BUDGET_US_PER_KERNEL for r in rows
+        ),
+        "verified_outputs_bitwise_identical": all(
+            r.bitwise_identical for r in rows
+        ),
+    }
+    return rows, checks
+
+
+def main() -> int:
+    rows, checks = run()
+    print(
+        f"{'model':<28} {'kernels':>7} {'verify_us':>10} "
+        f"{'us/kernel':>10} {'lock_plain_s':>12} {'lock_verif_s':>12} "
+        f"{'bitwise':>8}"
+    )
+    for r in rows:
+        print(
+            f"{r.model:<28} {r.n_kernels:>7} {r.verify_us:>10.0f} "
+            f"{r.us_per_kernel:>10.1f} {r.lock_plain_s:>12.2f} "
+            f"{r.lock_verified_s:>12.2f} {str(r.bitwise_identical):>8}"
+        )
+    for guard, ok in checks.items():
+        print(f"guard {guard}: {'ok' if ok else 'FAIL'}")
+    return 0 if all(checks.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

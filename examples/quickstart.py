@@ -58,7 +58,7 @@ def main():
             f"{r.rpcs:6d} {r.mode:>10s}"
         )
     ref = outputs["device_only"]
-    for system, out in outputs.items():
+    for out in outputs.values():
         np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
     print("\nAll systems computed identical outputs;")
     print("RRTO reached replay mode: per-op RPCs were eliminated.")

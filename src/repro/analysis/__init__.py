@@ -1,0 +1,80 @@
+"""Replay soundness verifier: static analysis over recorded IOSes, split
+plans, persisted cache state and the at-most-once step protocol.
+
+Four passes, stable diagnostic codes (see
+:data:`repro.analysis.diagnostics.CODES`):
+
+* :mod:`repro.analysis.dataflow` — IOS dataflow linter (``RRTO1xx``)
+* :mod:`repro.analysis.donation` — donation/aliasing sanitizer (``RRTO2xx``)
+* :mod:`repro.analysis.plancheck` — plan & cache-key verifier (``RRTO3xx``)
+* :mod:`repro.analysis.protocol` — retry/dedup model checker (``RRTO4xx``)
+
+Run the sweep over every registry model with
+``python -m repro.analysis --all-registry``.  Fail-fast hooks live behind
+the off-by-default ``verify=`` knob on
+:class:`~repro.core.engine.ReplayProgram`,
+:class:`~repro.core.engine.SegmentedReplayProgram`,
+:class:`~repro.core.engine.OffloadServer`,
+:class:`~repro.core.engine.RRTOClient` and
+:class:`~repro.core.offload.OffloadSession`.
+"""
+from repro.analysis.census import op_census
+from repro.analysis.dataflow import NONDETERMINISTIC_PRIMS, lint_ios
+from repro.analysis.diagnostics import (
+    CODES,
+    ERROR,
+    INFO,
+    WARNING,
+    AnalysisReport,
+    Diagnostic,
+    ReplaySoundnessError,
+)
+from repro.analysis.donation import sanitize_donation
+from repro.analysis.plancheck import (
+    split_cache_key,
+    verify_cache_key,
+    verify_metadata_against_calls,
+    verify_persisted_entry,
+    verify_plan,
+    verify_plan_for_calls,
+)
+from repro.analysis.protocol import (
+    ProtocolSpec,
+    check_engine_protocol,
+    check_protocol,
+    check_sequencing,
+)
+from repro.analysis.verify import (
+    raise_on_errors,
+    verify_calls,
+    verify_ios,
+    verify_split_calls,
+)
+
+__all__ = [
+    "AnalysisReport",
+    "CODES",
+    "Diagnostic",
+    "ERROR",
+    "INFO",
+    "NONDETERMINISTIC_PRIMS",
+    "ProtocolSpec",
+    "ReplaySoundnessError",
+    "WARNING",
+    "check_engine_protocol",
+    "check_protocol",
+    "check_sequencing",
+    "lint_ios",
+    "op_census",
+    "raise_on_errors",
+    "sanitize_donation",
+    "split_cache_key",
+    "verify_cache_key",
+    "verify_calls",
+    "verify_ios",
+    "verify_metadata_against_calls",
+    "verify_persisted_entry",
+    "verify_plan",
+    "verify_plan_for_calls",
+    "verify_split_calls",
+]

@@ -1,0 +1,76 @@
+"""Per-IOS operator census — the verifier report's quantitative half.
+
+The soundness passes say whether an IOS is safe to replay; the census says
+what replaying it *costs*: a primitive histogram over the kernel stream,
+analytic FLOP/HBM totals from the records' cost model, and wire-transfer
+volumes.  When lowered HLO text is available (the CLI lowers each registry
+model on the fly), the trip-count-weighted analysis from
+``repro.launch.hlo_analysis`` — previously only reachable through the
+launch-planning dry run — is merged in alongside the record-level
+estimates, so one report answers both "is it sound" and "what does it
+weigh".
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Any, Dict, Optional, Sequence
+
+from repro.core.records import (
+    CAT_D2H,
+    CAT_H2D,
+    CAT_KERNEL,
+    OperatorRecord,
+    kernel_primitive,
+)
+
+
+def op_census(
+    records: Sequence[OperatorRecord],
+    *,
+    hlo: Optional[str] = None,
+) -> Dict[str, Any]:
+    """Summarize one recorded IOS window.  Pure function of the records
+    (plus optional lowered-HLO text); JSON-safe output."""
+    prims: Counter = Counter()
+    flops = 0.0
+    mem_bytes = 0.0
+    n_kernels = 0
+    n_h2d = n_d2h = 0
+    h2d_bytes = d2h_bytes = 0.0
+    for rec in records:
+        if rec.category == CAT_KERNEL:
+            n_kernels += 1
+            flops += float(rec.flops)
+            mem_bytes += float(rec.mem_bytes)
+            prim = kernel_primitive(rec.func)
+            prims[prim if prim is not None else rec.func] += 1
+        elif rec.category == CAT_H2D:
+            n_h2d += 1
+            h2d_bytes += float(rec.args_sig[1])
+        elif rec.category == CAT_D2H:
+            n_d2h += 1
+            d2h_bytes += float(rec.args_sig[1])
+    out: Dict[str, Any] = {
+        "n_records": len(records),
+        "n_kernels": n_kernels,
+        "n_h2d": n_h2d,
+        "n_d2h": n_d2h,
+        "h2d_bytes": h2d_bytes,
+        "d2h_bytes": d2h_bytes,
+        "flops": flops,
+        "mem_bytes": mem_bytes,
+        "op_histogram": dict(sorted(
+            prims.items(), key=lambda kv: (-kv[1], kv[0])
+        )),
+    }
+    if hlo is not None:
+        from repro.launch.hlo_analysis import analyze_hlo
+
+        weighted = analyze_hlo(hlo)
+        out["hlo"] = {
+            "flops": weighted["flops"],
+            "dot_flops": weighted["dot_flops"],
+            "hbm_bytes": weighted["hbm_bytes"],
+            "n_computations": weighted["n_computations"],
+        }
+    return out

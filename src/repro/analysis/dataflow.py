@@ -1,0 +1,172 @@
+"""Pass 1 — IOS dataflow linter (``RRTO1xx``).
+
+SSA-style versioned def-use over a recorded :class:`InferenceSequence`
+window.  The replay engine treats any buffer a kernel reads without an
+in-window producer as a *parameter* (resident on both endpoints, bound at
+replay entry — see ``repro.core.engine.replay_address_plan``).  That
+convention is sound only if the window is dependency-closed (observation ③):
+a cyclically-rotated or hand-corrupted window reads an intermediate whose
+producing write sits *later* in the window, and replay would silently bind a
+stale "parameter" where the model expected this round's intermediate.
+
+The linter re-runs the search's closure check
+(:func:`repro.core.opseq.dataflow_violations`) in *replay semantics*
+(``params_resident=True``: a never-written read is a resident parameter, no
+preceding log required) and adds the transfer-liveness, retention-horizon and
+determinism screens the one-bit search check never needed.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Set
+
+from repro.analysis.diagnostics import ERROR, WARNING, Diagnostic
+from repro.core.opseq import dataflow_violations
+from repro.core.records import (
+    CAT_D2H,
+    CAT_H2D,
+    CAT_KERNEL,
+    OperatorRecord,
+    kernel_primitive,
+)
+
+# primitives whose recorded launch does not pin their replayed value: the
+# replay executable re-executes them, so any out-of-band entropy source would
+# diverge from the recorded run.  jax PRNG primitives are deterministic
+# *given their key operand*, but a key minted inside the window from
+# wall-clock/seed state is exactly the pattern this screens for.
+NONDETERMINISTIC_PRIMS = frozenset(
+    {
+        "random_seed",
+        "random_wrap",
+        "random_unwrap",
+        "random_fold_in",
+        "random_bits",
+        "random_gamma",
+        "rng_bit_generator",
+        "threefry2x32",
+    }
+)
+
+
+def lint_ios(
+    records: Sequence[OperatorRecord],
+    *,
+    min_repeats: int = 3,
+) -> List[Diagnostic]:
+    """Lint one IOS window.  ``min_repeats`` sizes the retention-horizon
+    check: loop-carried detection compares payloads across up to
+    ``max_transitions + 1`` recorded rounds, all of which must still hold
+    payloads when the search locks."""
+    diags: List[Diagnostic] = []
+    records = list(records)
+
+    # -- use-before-def (RRTO101) / undefined D2H (RRTO103) -----------------
+    for k, addr in dataflow_violations(
+        records, 0, len(records), params_resident=True
+    ):
+        rec = records[k]
+        if rec.category == CAT_D2H:
+            diags.append(
+                Diagnostic(
+                    "RRTO103",
+                    ERROR,
+                    f"D2H at window index {k} downloads buffer {addr:#x} "
+                    "before its in-window producer runs",
+                    where={"index": k, "buffer": addr},
+                )
+            )
+        else:
+            diags.append(
+                Diagnostic(
+                    "RRTO101",
+                    ERROR,
+                    f"{rec.func} at window index {k} reads buffer "
+                    f"{addr:#x} whose only producer runs later in the "
+                    "window (rotated or corrupted IOS)",
+                    where={"index": k, "buffer": addr},
+                )
+            )
+
+    # -- dead H2D transfers (RRTO102) ---------------------------------------
+    # an upload whose buffer version is overwritten (or the window ends)
+    # before any kernel/D2H reads it moves bytes the replay never uses
+    live_upload: Dict[int, int] = {}       # addr -> index of unread upload
+    read_since: Set[int] = set()
+    for k, rec in enumerate(records):
+        for b in rec.in_buffers:
+            if b in live_upload:
+                del live_upload[b]
+            read_since.add(b)
+        if rec.category == CAT_H2D:
+            addr = rec.out_buffers[0] if rec.out_buffers else None
+            if addr is not None:
+                if addr in live_upload:
+                    diags.append(_dead_h2d(live_upload[addr], addr))
+                live_upload[addr] = k
+        elif rec.category == CAT_KERNEL:
+            for b in rec.out_buffers:
+                if b in live_upload:
+                    diags.append(_dead_h2d(live_upload[b], b))
+                    del live_upload[b]
+    for addr, k in sorted(live_upload.items(), key=lambda kv: kv[1]):
+        diags.append(_dead_h2d(k, addr))
+
+    # -- payload-retention horizon (RRTO104) --------------------------------
+    from repro.core.engine import (
+        PAYLOAD_RETENTION_CALLS,
+        PAYLOAD_RETENTION_TRANSFERS,
+    )
+
+    rounds_needed = min_repeats + 1   # detect_loop_carried's widest window
+    n_transfers = sum(
+        1 for r in records if r.category in (CAT_H2D, CAT_D2H)
+    )
+    if rounds_needed * len(records) > PAYLOAD_RETENTION_CALLS:
+        diags.append(
+            Diagnostic(
+                "RRTO104",
+                WARNING,
+                f"{rounds_needed} rounds of this {len(records)}-record IOS "
+                f"exceed the {PAYLOAD_RETENTION_CALLS}-call payload "
+                "horizon; loop-carried detection may see trimmed payloads",
+                where={"ios_len": len(records), "rounds": rounds_needed},
+            )
+        )
+    elif rounds_needed * n_transfers > PAYLOAD_RETENTION_TRANSFERS:
+        diags.append(
+            Diagnostic(
+                "RRTO104",
+                WARNING,
+                f"{rounds_needed} rounds of {n_transfers} transfers exceed "
+                f"the {PAYLOAD_RETENTION_TRANSFERS}-transfer payload "
+                "horizon; loop-carried detection may see trimmed payloads",
+                where={"n_transfers": n_transfers, "rounds": rounds_needed},
+            )
+        )
+
+    # -- replay-unsafe operators (RRTO105) ----------------------------------
+    for k, rec in enumerate(records):
+        prim = kernel_primitive(rec.func)
+        if prim in NONDETERMINISTIC_PRIMS:
+            diags.append(
+                Diagnostic(
+                    "RRTO105",
+                    WARNING,
+                    f"nondeterministic primitive {prim!r} at window index "
+                    f"{k}: replay re-executes it, entropy minted inside "
+                    "the window diverges from the recording",
+                    where={"index": k, "primitive": prim},
+                )
+            )
+    return diags
+
+
+def _dead_h2d(index: int, addr: int) -> Diagnostic:
+    return Diagnostic(
+        "RRTO102",
+        WARNING,
+        f"H2D at window index {index} uploads buffer {addr:#x} that no "
+        "kernel or download ever reads before it dies — wasted uplink "
+        "bytes every replayed inference",
+        where={"index": index, "buffer": addr},
+    )

@@ -1,0 +1,83 @@
+"""Orchestrator: one entry point per verification subject.
+
+``verify_calls`` / ``verify_split_calls`` are what the engine's fail-fast
+hooks call (``ReplayProgram(..., verify=True)``,
+``SegmentedReplayProgram(..., verify=True)``); ``verify_ios`` builds the
+full :class:`~repro.analysis.diagnostics.AnalysisReport` (soundness passes
++ census) the CLI emits per model.  Keeping the composition here means the
+passes stay independent and zero-dependency — each imports only the IR it
+reads — while every caller gets the same gating order.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.analysis.census import op_census
+from repro.analysis.dataflow import lint_ios
+from repro.analysis.diagnostics import (
+    AnalysisReport,
+    Diagnostic,
+    ReplaySoundnessError,
+)
+from repro.analysis.donation import sanitize_donation
+from repro.analysis.plancheck import verify_plan_for_calls
+
+
+def records_of(calls: Sequence[Any]) -> List[Any]:
+    """Project intercepted calls down to their operator records."""
+    return [c.record for c in calls]
+
+
+def verify_calls(
+    calls: Sequence[Any],
+    carried_pairs: Sequence[Tuple[int, int]] = (),
+    *,
+    min_repeats: int = 3,
+) -> List[Diagnostic]:
+    """Soundness of one whole-program replay build: IOS dataflow +
+    donation contract."""
+    diags = lint_ios(records_of(calls), min_repeats=min_repeats)
+    diags.extend(sanitize_donation(calls, carried_pairs))
+    return diags
+
+
+def verify_split_calls(
+    calls: Sequence[Any],
+    plan: Any,
+    carried_pairs: Sequence[Tuple[int, int]] = (),
+    *,
+    min_repeats: int = 3,
+) -> List[Diagnostic]:
+    """Soundness of one segmented replay build: everything
+    :func:`verify_calls` proves, plus the plan/graph contract."""
+    diags = verify_calls(calls, carried_pairs, min_repeats=min_repeats)
+    diags.extend(verify_plan_for_calls(calls, plan, carried_pairs))
+    return diags
+
+
+def verify_ios(
+    subject: str,
+    calls: Sequence[Any],
+    carried_pairs: Sequence[Tuple[int, int]] = (),
+    *,
+    plans: Sequence[Any] = (),
+    min_repeats: int = 3,
+    census: bool = True,
+    hlo: Optional[str] = None,
+) -> AnalysisReport:
+    """Full report for one recorded IOS: soundness passes, every candidate
+    plan, and (optionally) the op census with HLO-weighted totals."""
+    report = AnalysisReport(subject=subject)
+    report.extend(verify_calls(calls, carried_pairs, min_repeats=min_repeats))
+    for plan in plans:
+        report.extend(verify_plan_for_calls(calls, plan, carried_pairs))
+    if census:
+        report.census = op_census(records_of(calls), hlo=hlo)
+    return report
+
+
+def raise_on_errors(diags: Sequence[Diagnostic]) -> None:
+    """Fail-fast helper for the ``verify=True`` hooks."""
+    errors = [d for d in diags if d.severity == "error"]
+    if errors:
+        raise ReplaySoundnessError(errors)

@@ -212,8 +212,15 @@ class ReplayProgram:
         *,
         execute: bool = True,
         carried_pairs: Tuple[Tuple[int, int], ...] = (),
+        verify: bool = False,
     ):
         t0 = _time.perf_counter()
+        if verify:
+            # fail-fast static analysis before compiling anything: raises
+            # ReplaySoundnessError listing every ERROR diagnostic
+            from repro.analysis.verify import raise_on_errors, verify_calls
+
+            raise_on_errors(verify_calls(calls, carried_pairs))
         plan = replay_address_plan(calls)
         param_addrs = plan["param_addrs"]
         h2d_addrs = plan["h2d_addrs"]
@@ -429,10 +436,18 @@ class SegmentedReplayProgram:
 
     def __init__(self, calls: List[InterceptedCall], plan: "SplitPlan", *,
                  execute: bool = True,
-                 carried_pairs: Tuple[Tuple[int, int], ...] = ()):
+                 carried_pairs: Tuple[Tuple[int, int], ...] = (),
+                 verify: bool = False):
         from repro.partition.segments import SegmentGraph
 
         t0 = _time.perf_counter()
+        if verify:
+            from repro.analysis.verify import (
+                raise_on_errors,
+                verify_split_calls,
+            )
+
+            raise_on_errors(verify_split_calls(calls, plan, carried_pairs))
         self.carried_pairs = tuple((int(i), int(j)) for i, j in carried_pairs)
         graph = SegmentGraph(calls, carried_pairs=self.carried_pairs)
         if plan.n_ops != graph.n_ops:
@@ -906,11 +921,13 @@ class OffloadServer:
         replay_cache: Optional["ReplayCacheLike"] = None,
         name: str = "server",
         tracer: Optional[Tracer] = None,
+        verify: bool = False,
     ):
         self.device = device
         self.name = name
         self.tracer = tracer
         self.execute = execute  # False: account time/bytes only (no compute)
+        self.verify = verify    # static soundness analysis before compiling
         self.contexts: Dict[str, ClientContext] = {}
         self.busy_until = 0.0          # async kernel-queue completion time
         self.busy_seconds = 0.0        # accumulated compute (GPU-util proxy)
@@ -975,6 +992,36 @@ class OffloadServer:
         return ret
 
     # -- replaying phase -----------------------------------------------------
+    def _stale_metadata(
+        self,
+        key: str,
+        meta: Dict[str, Any],
+        calls: List[InterceptedCall],
+    ) -> bool:
+        """Cross-check persisted cache metadata against the calls about to
+        be compiled under it.  A hand-edited or stale cache file used to
+        bind a donated stateful executable to carried-pair ordinals that do
+        not exist in this recording; now the entry is evicted with a
+        warning and the program is rebuilt stateless instead."""
+        import warnings
+
+        from repro.analysis.plancheck import verify_metadata_against_calls
+
+        diags = verify_metadata_against_calls(key, meta, calls)
+        if not diags:
+            return False
+        warnings.warn(
+            f"{self.name}: evicting stale replay-cache metadata for "
+            f"{key!r}: " + "; ".join(
+                f"{d.code}: {d.message}" for d in diags
+            ),
+            stacklevel=3,
+        )
+        forget = getattr(self.replay_cache, "forget_known", None)
+        if callable(forget):
+            forget(key)
+        return True
+
     def prepare_replay(
         self,
         calls: List[InterceptedCall],
@@ -1007,11 +1054,15 @@ class OffloadServer:
             ):
                 meta = self.replay_cache.known_metadata(fingerprint)
                 if meta and meta.get("carried_pairs"):
+                    if self._stale_metadata(fingerprint, meta, calls):
+                        meta = None   # stateless rebuild; entry evicted
+                if meta and meta.get("carried_pairs"):
                     pairs = tuple(
                         (int(i), int(j)) for i, j in meta["carried_pairs"]
                     )
             program = ReplayProgram(
-                calls, execute=self.execute, carried_pairs=pairs
+                calls, execute=self.execute, carried_pairs=pairs,
+                verify=self.verify,
             )
             self.compile_count += 1
             self.compile_seconds = program.compile_seconds
@@ -1063,13 +1114,16 @@ class OffloadServer:
                         continue
                     meta = self.replay_cache.known_metadata(k)
                     if meta and meta.get("carried_pairs"):
+                        if self._stale_metadata(k, meta, calls):
+                            continue
                         pairs = tuple(
                             (int(i), int(j))
                             for i, j in meta["carried_pairs"]
                         )
                         break
             program = SegmentedReplayProgram(
-                calls, plan, execute=self.execute, carried_pairs=pairs
+                calls, plan, execute=self.execute, carried_pairs=pairs,
+                verify=self.verify,
             )
             self.compile_count += 1
             self.compile_seconds = program.compile_seconds
@@ -1358,10 +1412,14 @@ class RRTOClient:
         metrics: Optional[MetricsRegistry] = None,
         fault: Optional[FaultInjector] = None,
         retry_policy: Optional[RetryPolicy] = None,
+        verify: bool = False,
     ):
         if variant not in ("rrto", "semi_rrto", "transparent"):
             raise ValueError(variant)
         self.server = server
+        # static soundness analysis of the locked IOS / each installed plan
+        # before any executable compiles from them (fail-fast, off by default)
+        self.verify = verify
         self.network = network
         self.clock = clock
         self.meter = meter
@@ -1783,6 +1841,12 @@ class RRTOClient:
         for c in self.calls[: max(0, horizon)]:
             c.h2d_value = None
             c.d2h_value = None
+        if self.verify:
+            # fail fast on an unsound recording before the server compiles
+            # (and caches, and possibly shares) an executable from it
+            from repro.analysis.verify import raise_on_errors, verify_calls
+
+            raise_on_errors(verify_calls(self._ios_calls, pairs))
         self.server.prepare_replay(
             self._ios_calls,
             client_id=self.client_id,
@@ -1889,13 +1953,30 @@ class RRTOClient:
             self.pipelined_exec = None
             self._claim_stream_key(None)
             return
+        pairs = self.ios.carried_pairs if self.ios is not None else ()
+        if self.verify:
+            # statically prove the plan against the IOS segment graph (and
+            # its derived cache key) before the server compiles segments
+            from repro.analysis.plancheck import (
+                verify_cache_key,
+                verify_plan_for_calls,
+            )
+            from repro.analysis.verify import raise_on_errors
+
+            diags = verify_plan_for_calls(self._ios_calls, plan, pairs)
+            if self.ios_fp is not None:
+                from repro.partition.segments import SegmentGraph
+
+                diags.extend(verify_cache_key(
+                    f"{self.ios_fp}|{plan.signature()}",
+                    n_ops=SegmentGraph(self._ios_calls).n_ops,
+                ))
+            raise_on_errors(diags)
         self.split_plan = plan
         self.server.prepare_split(
             self._ios_calls, plan, client_id=self.client_id,
             fingerprint=self.ios_fp,
-            carried_pairs=(
-                self.ios.carried_pairs if self.ios is not None else ()
-            ),
+            carried_pairs=pairs,
         )
         if self.partition is not None and self.partition.pipelined:
             self.pipelined_exec = PipelinedSegmentedReplay(

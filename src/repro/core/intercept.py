@@ -191,12 +191,12 @@ class JaxprInterceptor:
     def __init__(
         self,
         sink: CallSink,
-        noise: FrameworkNoiseModel = FrameworkNoiseModel(),
+        noise: Optional[FrameworkNoiseModel] = None,
         arena: Optional[BufferArena] = None,
         input_wire_divisor: float = 1.0,
     ):
         self.sink = sink
-        self.noise = noise
+        self.noise = noise if noise is not None else FrameworkNoiseModel()
         self.arena = arena or BufferArena()
         self.input_wire_divisor = input_wire_divisor
         self._kernel_counter = 0

@@ -137,6 +137,7 @@ class OffloadSession:
         retry_policy: Optional[RetryPolicy] = None,
         admission: Optional[Any] = None,
         tenant: str = "default",
+        verify: bool = False,
     ):
         if system not in SYSTEMS:
             raise ValueError(f"unknown system {system!r}; pick from {SYSTEMS}")
@@ -160,7 +161,9 @@ class OffloadSession:
         self.clock = clock or SimClock()
         self.meter = EnergyMeter(power or PowerModel())
         self.execute = execute
-        self.server = server or OffloadServer(server_device, execute=execute)
+        self.server = server or OffloadServer(
+            server_device, execute=execute, verify=verify
+        )
         self.history: List[InferenceResult] = []
         self._loaded = False
         self._infer_count = 0
@@ -224,6 +227,7 @@ class OffloadSession:
                 metrics=metrics,
                 fault=fault,
                 retry_policy=retry_policy,
+                verify=verify,
             )
             self.interceptor = JaxprInterceptor(
                 self.client,

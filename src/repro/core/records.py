@@ -56,6 +56,16 @@ def category_of(func: str) -> str:
     return _FUNC_TO_CAT.get(func, CAT_MISC)
 
 
+def kernel_primitive(func: str) -> "str | None":
+    """The jax primitive name behind a ``kernel:<primitive>`` func, else
+    None — how the replay soundness verifier screens an IOS for
+    replay-unsafe (nondeterministic) operators without re-parsing the
+    func-name convention at every call site."""
+    if func.startswith("kernel:"):
+        return func[len("kernel:"):]
+    return None
+
+
 @dataclasses.dataclass(frozen=True)
 class OperatorRecord:
     """One intercepted call.

@@ -118,7 +118,7 @@ def _resnet50_apply(params, x, scale, prefix="", return_feats=False):
         h, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
     )
     feats: List[jnp.ndarray] = []
-    for si, (n, cout, cmid) in enumerate(_R50_BLOCKS):
+    for si, (n, _cout, _cmid) in enumerate(_R50_BLOCKS):
         for bi in range(n):
             nm = f"{prefix}s{si}b{bi}"
             stride = 2 if (bi == 0 and si > 0) else 1

@@ -337,6 +337,7 @@ def plan_partition(
     tracer: Optional[Any] = None,
     trace_track: str = "planner",
     now: float = 0.0,
+    verify: bool = False,
 ) -> EvaluatedPlan:
     """Pick the best split of ``graph`` at the given operating point.
 
@@ -346,7 +347,13 @@ def plan_partition(
     graph (loop-carried tensors pinned server-side) only carried-feasible
     cuts are enumerated — device prefix inside the stateless prologue,
     server suffix holding the donated carried buffers — and full-server is
-    the guaranteed fallback (device-only is infeasible by construction)."""
+    the guaranteed fallback (device-only is infeasible by construction).
+
+    ``verify=True`` runs the static plan verifier
+    (:func:`repro.analysis.plancheck.verify_plan`) over the winning plan
+    before returning it and raises ``ReplaySoundnessError`` on any ERROR
+    diagnostic — a planner regression can then never hand the engine an
+    unexecutable cut."""
     config = config or PartitionConfig()
     power = power or PowerModel()
     n = graph.n_ops
@@ -433,4 +440,9 @@ def plan_partition(
         modeled_seconds=best.seconds,
         modeled_joules=best.joules,
     )
+    if verify:
+        from repro.analysis.plancheck import verify_plan
+        from repro.analysis.verify import raise_on_errors
+
+        raise_on_errors(verify_plan(graph, best.plan))
     return best

@@ -165,6 +165,29 @@ class SplitPlan:
         return SplitPlan(segments=(Segment(0, n_ops, PLACE_DEVICE),))
 
     @staticmethod
+    def parse_signature(sig: str) -> "SplitPlan":
+        """Inverse of :meth:`signature`: rebuild a plan from its cache-key
+        form (``"D0:5|S5:20"``).  Raises ``ValueError`` on anything that is
+        not a well-formed signature of a *valid* plan (contiguous segments
+        starting at 0, alternating placements) — which is what lets the
+        replay cache validate persisted ``fp|plan`` keys on load instead of
+        trusting them."""
+        segs: List[Segment] = []
+        for part in sig.split("|"):
+            if len(part) < 4 or part[0] not in "DS" or ":" not in part:
+                raise ValueError(f"malformed plan signature part {part!r}")
+            placement = PLACE_DEVICE if part[0] == "D" else PLACE_SERVER
+            lo, _, hi = part[1:].partition(":")
+            try:
+                start, end = int(lo), int(hi)
+            except ValueError:
+                raise ValueError(
+                    f"malformed plan signature part {part!r}"
+                ) from None
+            segs.append(Segment(start, end, placement))
+        return SplitPlan(segments=tuple(segs))
+
+    @staticmethod
     def from_placements(placements: Sequence[str]) -> "SplitPlan":
         """Collapse a per-op placement list into contiguous segments."""
         if not placements:

@@ -668,11 +668,13 @@ class RRTOEdgeServer:
         metrics: Optional[MetricsRegistry] = None,
         fault: Optional["FaultInjector"] = None,
         admission: Optional[AdmissionController] = None,
+        verify: bool = False,
     ):
         self.clock = clock or SimClock()
         self.name = name
         self.tracer = tracer
         self.fault = fault
+        self.verify = verify
         # the root (or fleet-scoped) registry behind every counter on this
         # box: cache.*, batcher.*, client.<id>.* all land under it
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -682,7 +684,7 @@ class RRTOEdgeServer:
         )
         self.server = OffloadServer(
             server_device, execute=execute, replay_cache=self.cache,
-            name=name, tracer=tracer,
+            name=name, tracer=tracer, verify=verify,
         )
         self.ingress = ingress or ServerIngress()
         if tracer is not None:
@@ -741,6 +743,7 @@ class RRTOEdgeServer:
         if self.admission is not None:
             session_kwargs.setdefault("admission", self.admission)
         session_kwargs.setdefault("tenant", tenant)
+        session_kwargs.setdefault("verify", self.verify)
         sess = OffloadSession(
             model,
             "rrto",

@@ -263,6 +263,12 @@ class ReplayCache:
     def known_metadata(self, fingerprint: str) -> Optional[Dict[str, Any]]:
         return self._known.get(fingerprint)
 
+    def forget_known(self, fingerprint: str) -> None:
+        """Drop a persisted-but-uncompiled fingerprint (stale-metadata
+        eviction: the engine calls this when a loaded entry's metadata
+        contradicts the calls about to be compiled under it)."""
+        self._known.pop(fingerprint, None)
+
     # ------------------------------------------------------------------
     @staticmethod
     def _describe(program: "ReplayProgram") -> Dict[str, Any]:
@@ -314,7 +320,18 @@ class ReplayCache:
         Loaded fingerprints are *validated IOS identities*, not executables:
         membership tests succeed (so clients skip the ``min_repeats``
         re-validation wait) while ``get()`` still misses until the first
-        client's calls rebuild the program."""
+        client's calls rebuild the program.
+
+        Entries are no longer trusted outright: each key and its metadata
+        must pass the static verifier
+        (:func:`repro.analysis.plancheck.verify_persisted_entry`) — a
+        corrupted or hand-edited cache file used to bind a stale stateful
+        executable to the wrong IOS; now the offending entry is evicted
+        with a warning and only the sound ones merge."""
+        import warnings
+
+        from repro.analysis.plancheck import verify_persisted_entry
+
         with open(path) as f:
             payload = json.load(f)
         version = payload.get("version")
@@ -323,5 +340,18 @@ class ReplayCache:
                 f"unsupported replay-cache file version {version!r}"
             )
         fps = payload["fingerprints"]
-        self._known.update(fps)
-        return len(fps)
+        accepted = 0
+        for fp, meta in fps.items():
+            diags = verify_persisted_entry(fp, meta)
+            if diags:
+                warnings.warn(
+                    f"replay cache {path}: evicting persisted entry "
+                    f"{fp!r}: " + "; ".join(
+                        f"{d.code}: {d.message}" for d in diags
+                    ),
+                    stacklevel=2,
+                )
+                continue
+            self._known[fp] = meta
+            accepted += 1
+        return accepted

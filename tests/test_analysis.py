@@ -1,0 +1,634 @@
+"""Replay soundness verifier: the four static passes (dataflow, donation,
+plan/cache-key, protocol), the seeded mutation corpus, the clean-on-real-IOS
+property, the engine/cache fail-fast hooks, and the CLI sweep."""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    CODES,
+    AnalysisReport,
+    Diagnostic,
+    ProtocolSpec,
+    ReplaySoundnessError,
+    check_engine_protocol,
+    check_protocol,
+    check_sequencing,
+    lint_ios,
+    op_census,
+    sanitize_donation,
+    split_cache_key,
+    verify_cache_key,
+    verify_calls,
+    verify_ios,
+    verify_metadata_against_calls,
+    verify_persisted_entry,
+    verify_plan,
+    verify_split_calls,
+)
+from repro.core.costmodel import GTX_2080TI, JETSON_XAVIER_NX
+from repro.core.intercept import InterceptedCall
+from repro.core.offload import OffloadableModel, OffloadSession
+from repro.core.records import FUNC_D2H, FUNC_H2D, OperatorRecord
+from repro.models.cnn_zoo import ZOO
+from repro.partition.planner import PartitionConfig, plan_partition
+from repro.partition.segments import SegmentGraph, SplitPlan
+
+FIXTURE_DIR = os.path.join(
+    os.path.dirname(__file__), "fixtures", "broken_ios"
+)
+MBPS = 1e6 / 8.0
+
+REGISTRY_CASES = {
+    "sensor_encoder": dict(scale=0.25, input_size=32, n_blocks=2),
+    "recurrent_sensor_decoder": dict(
+        scale=0.25, input_size=32, n_blocks=2, d_state=32
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# fixture loader: JSON call specs -> real InterceptedCall/OperatorRecord IR
+# ---------------------------------------------------------------------------
+
+class _Prim:
+    """Stand-in primitive: the verifier only tests ``prim is not None``."""
+
+    def __init__(self, name):
+        self.name = name
+
+    def __repr__(self):
+        return f"_Prim({self.name!r})"
+
+
+def _nbytes(shape, dtype):
+    return int(np.dtype(dtype).itemsize * int(np.prod(shape or (1,))))
+
+
+def build_calls(specs):
+    """Materialize fixture call specs as the same duck-typed IR the engine
+    hands the verifier (real :class:`OperatorRecord` inside each call)."""
+    calls = []
+    for s in specs:
+        shape = tuple(s.get("shape", ()))
+        dtype = s.get("dtype", "float32")
+        nb = _nbytes(shape, dtype)
+        if s["kind"] == "h2d":
+            rec = OperatorRecord(
+                FUNC_H2D, (s["addr"], nb), out_buffers=(s["addr"],)
+            )
+            calls.append(
+                InterceptedCall(
+                    record=rec,
+                    out_addrs=(s["addr"],),
+                    out_avals=((shape, dtype),),
+                    h2d_value=np.zeros(shape, dtype),
+                )
+            )
+        elif s["kind"] == "d2h":
+            rec = OperatorRecord(
+                FUNC_D2H, (s["addr"], nb), in_buffers=(s["addr"],)
+            )
+            calls.append(
+                InterceptedCall(
+                    record=rec,
+                    in_operands=(("a", s["addr"]),),
+                    out_avals=((shape, dtype),),
+                )
+            )
+        elif s["kind"] == "kernel":
+            reads = tuple(s["reads"])
+            writes = tuple(s["writes"])
+            rec = OperatorRecord(
+                f"kernel:{s['prim']}",
+                (s["prim"], reads, writes),
+                in_buffers=reads,
+                out_buffers=writes,
+                flops=1.0,
+                mem_bytes=float(nb),
+            )
+            calls.append(
+                InterceptedCall(
+                    record=rec,
+                    prim=_Prim(s["prim"]),
+                    in_operands=tuple(("a", a) for a in reads),
+                    out_addrs=writes,
+                    out_avals=tuple((shape, dtype) for _ in writes),
+                )
+            )
+        else:  # pragma: no cover - corrupt fixture
+            raise ValueError(f"unknown call kind {s['kind']!r}")
+    return calls
+
+
+def load_fixture(name):
+    with open(os.path.join(FIXTURE_DIR, f"{name}.json")) as f:
+        return json.load(f)
+
+
+def run_fixture(fx):
+    """Run a fixture through the pass its ``check`` field selects; returns
+    the diagnostics."""
+    if fx["check"] == "protocol":
+        spec = ProtocolSpec(
+            steps=fx["protocol"]["steps"],
+            seq_of_step=tuple(fx["protocol"]["seq_of_step"]),
+        )
+        return check_protocol(spec)
+    calls = build_calls(fx["calls"])
+    pairs = tuple(tuple(p) for p in fx.get("carried_pairs", ()))
+    if fx["check"] == "split":
+        plan = SplitPlan.parse_signature(fx["plan"])
+        return verify_split_calls(calls, plan, pairs)
+    return verify_calls(calls, pairs)
+
+
+# ---------------------------------------------------------------------------
+# satellite 3a: every mutation fixture trips exactly its diagnostic code
+# ---------------------------------------------------------------------------
+
+MUTATIONS = [
+    ("shuffled_transfer", "RRTO101"),
+    ("forged_donation_read", "RRTO201"),
+    ("infeasible_cut", "RRTO302"),
+    ("dropped_seqno", "RRTO404"),
+]
+
+
+class TestMutationCorpus:
+    @pytest.mark.parametrize("name,code", MUTATIONS)
+    def test_fixture_trips_exactly_its_code(self, name, code):
+        fx = load_fixture(name)
+        assert fx["expect"] == code  # fixture self-describes its defect
+        diags = run_fixture(fx)
+        errors = {d.code for d in diags if d.severity == "error"}
+        assert errors == {code}, (
+            f"{name}: expected exactly {{{code}}}, got {sorted(errors)}"
+        )
+
+    @pytest.mark.parametrize("name,code", MUTATIONS)
+    def test_fixture_errors_raise(self, name, code):
+        from repro.analysis import raise_on_errors
+
+        with pytest.raises(ReplaySoundnessError) as ei:
+            raise_on_errors(run_fixture(load_fixture(name)))
+        assert any(d.code == code for d in ei.value.diagnostics)
+
+    def test_corpus_is_complete(self):
+        on_disk = {
+            f[:-5] for f in os.listdir(FIXTURE_DIR) if f.endswith(".json")
+        }
+        assert on_disk == {name for name, _ in MUTATIONS}
+
+
+# ---------------------------------------------------------------------------
+# diagnostics plumbing
+# ---------------------------------------------------------------------------
+
+class TestDiagnostics:
+    def test_unknown_code_rejected(self):
+        with pytest.raises(ValueError):
+            Diagnostic("RRTO999", "error", "nope")
+
+    def test_every_code_documented(self):
+        assert all(CODES[c] for c in CODES)
+        assert {c[:5] for c in CODES} == {"RRTO1", "RRTO2", "RRTO3", "RRTO4"}
+
+    def test_report_roundtrip(self):
+        d = Diagnostic("RRTO101", "error", "m", where={"index": 3})
+        r = AnalysisReport("subject", [d])
+        assert not r.ok and r.codes() == ["RRTO101"]
+        blob = json.loads(r.to_json())
+        assert blob["subject"] == "subject"
+        assert blob["diagnostics"][0]["code"] == "RRTO101"
+        with pytest.raises(ReplaySoundnessError):
+            r.raise_if_errors()
+
+
+# ---------------------------------------------------------------------------
+# pass 1: dataflow linter
+# ---------------------------------------------------------------------------
+
+def _chain_calls():
+    """h2d -> k0 -> k1 -> d2h, dependency-closed."""
+    return build_calls(
+        [
+            {"kind": "h2d", "addr": 1, "shape": [4], "dtype": "float32"},
+            {"kind": "kernel", "prim": "add", "reads": [1], "writes": [2],
+             "shape": [4], "dtype": "float32"},
+            {"kind": "kernel", "prim": "mul", "reads": [2], "writes": [3],
+             "shape": [4], "dtype": "float32"},
+            {"kind": "d2h", "addr": 3, "shape": [4], "dtype": "float32"},
+        ]
+    )
+
+
+def _records(calls):
+    return [c.record for c in calls]
+
+
+class TestDataflowLinter:
+    def test_clean_chain(self):
+        assert lint_ios(_records(_chain_calls())) == []
+
+    def test_rotated_window_flags_use_before_def(self):
+        recs = _records(_chain_calls())
+        rotated = recs[1:] + recs[:1]     # h2d now *after* its reader
+        codes = {d.code for d in lint_ios(rotated)}
+        assert "RRTO101" in codes
+
+    def test_premature_download(self):
+        recs = _records(_chain_calls())
+        # download addr 3 before the kernel that writes it
+        recs.insert(1, recs[-1])
+        codes = {d.code for d in lint_ios(recs)}
+        assert "RRTO103" in codes
+
+    def test_dead_upload_is_warning_only(self):
+        recs = _records(_chain_calls())
+        recs.append(
+            OperatorRecord(FUNC_H2D, (9, 16), out_buffers=(9,))
+        )
+        diags = lint_ios(recs)
+        assert {d.code for d in diags} == {"RRTO102"}
+        assert all(d.severity == "warning" for d in diags)
+
+    def test_nondeterministic_primitive_flagged(self):
+        recs = _records(_chain_calls())
+        recs.append(
+            OperatorRecord(
+                "kernel:threefry2x32", ("threefry2x32",),
+                in_buffers=(2,), out_buffers=(7,),
+            )
+        )
+        diags = lint_ios(recs)
+        assert any(
+            d.code == "RRTO105" and d.severity == "warning" for d in diags
+        )
+
+
+# ---------------------------------------------------------------------------
+# pass 2: donation sanitizer
+# ---------------------------------------------------------------------------
+
+def _stateful_calls():
+    """h2d state, h2d input, kernel advances state, d2h new state."""
+    return build_calls(
+        [
+            {"kind": "h2d", "addr": 1, "shape": [4], "dtype": "float32"},
+            {"kind": "h2d", "addr": 2, "shape": [4], "dtype": "float32"},
+            {"kind": "kernel", "prim": "add", "reads": [1, 2], "writes": [3],
+             "shape": [4], "dtype": "float32"},
+            {"kind": "d2h", "addr": 3, "shape": [4], "dtype": "float32"},
+        ]
+    )
+
+
+class TestDonationSanitizer:
+    def test_clean_pair(self):
+        assert sanitize_donation(_stateful_calls(), [(0, 0)]) == []
+
+    def test_empty_pairs_trivially_clean(self):
+        assert sanitize_donation(_stateful_calls(), []) == []
+
+    def test_out_of_range_ordinal(self):
+        diags = sanitize_donation(_stateful_calls(), [(5, 0)])
+        assert {d.code for d in diags} == {"RRTO202"}
+
+    def test_duplicate_ordinal(self):
+        diags = sanitize_donation(_stateful_calls(), [(0, 0), (0, 0)])
+        assert {d.code for d in diags} == {"RRTO202"}
+
+    def test_aval_mismatch(self):
+        calls = _stateful_calls()
+        calls[0].h2d_value = np.zeros((8,), np.float32)   # wrong shape
+        diags = sanitize_donation(calls, [(0, 0)])
+        assert {d.code for d in diags} == {"RRTO203"}
+
+    def test_never_produced_state(self):
+        # pair the carried input with a download of an address no kernel
+        # wrote: the "advanced" state is a resident parameter
+        calls = _stateful_calls()
+        calls.extend(
+            build_calls(
+                [{"kind": "d2h", "addr": 99, "shape": [4],
+                  "dtype": "float32"}]
+            )
+        )
+        diags = sanitize_donation(calls, [(0, 1)])
+        assert {d.code for d in diags} == {"RRTO204"}
+
+
+# ---------------------------------------------------------------------------
+# pass 3: plan & cache-key verifier
+# ---------------------------------------------------------------------------
+
+class TestPlanVerifier:
+    def test_full_server_always_sound(self):
+        graph = SegmentGraph(_chain_calls())
+        assert verify_plan(graph, SplitPlan.full_server(graph.n_ops)) == []
+
+    def test_op_count_mismatch_gates_everything(self):
+        graph = SegmentGraph(_chain_calls())
+        diags = verify_plan(graph, SplitPlan.full_server(graph.n_ops + 3))
+        assert [d.code for d in diags] == ["RRTO301"]
+
+    def test_stateful_trailing_device_infeasible(self):
+        calls = _stateful_calls()
+        graph = SegmentGraph(calls, carried_pairs=((0, 0),))
+        plan = SplitPlan.parse_signature("D0:1")
+        diags = verify_plan(graph, plan)
+        assert {d.code for d in diags} == {"RRTO302"}
+
+    def test_cache_key_accepts_engine_derivations(self):
+        fp = "a" * 64
+        assert verify_cache_key(fp) == []
+        assert verify_cache_key(f"{fp}|S0:3", n_ops=3) == []
+        assert verify_cache_key(f"{fp}#vmap4") == []
+
+    def test_cache_key_rejections(self):
+        fp = "a" * 64
+        for key, n_ops in [
+            ("not hex!", None),               # malformed base
+            (f"{fp}|garbage", None),          # unparseable plan
+            (f"{fp}|S0:3", 7),                # plan op-count mismatch
+            (f"{fp}#vmap1", None),            # width-1 batch
+            (f"{fp}#vmapX", None),            # non-numeric width
+        ]:
+            diags = verify_cache_key(key, n_ops=n_ops)
+            assert {d.code for d in diags} == {"RRTO305"}, key
+
+    def test_split_cache_key(self):
+        assert split_cache_key("fp") == ("fp", None, None)
+        assert split_cache_key("fp|S0:3") == ("fp", "S0:3", None)
+        assert split_cache_key("fp#vmap4") == ("fp", None, "vmap4")
+
+    def test_persisted_entry_relaxed_about_fingerprint_format(self):
+        # restart persistence keys by opaque strings in tests/replicas —
+        # the loader must not impose the engine's hex-fp derivation rules
+        assert verify_persisted_entry("fpA", {"n_kernels": 3}) == []
+        assert verify_persisted_entry("fpA|cut=3", {"plan": "cut=3"}) == []
+
+    def test_persisted_entry_rejections(self):
+        cases = [
+            ("fp#vmap4", {}, "RRTO305"),          # derived, never persisted
+            ("fp", "not-a-dict", "RRTO306"),
+            ("fp|S0:3", {"plan": "S0:9"}, "RRTO306"),   # key/meta conflict
+            ("fp", {"carried_pairs": [[0, 0], [0, 1]]}, "RRTO306"),
+            ("fp", {"carried_pairs": [[-1, 0]]}, "RRTO306"),
+            ("fp", {"carried_pairs": "junk"}, "RRTO306"),
+        ]
+        for key, meta, code in cases:
+            diags = verify_persisted_entry(key, meta)
+            assert code in {d.code for d in diags}, (key, meta)
+
+    def test_metadata_against_calls(self):
+        calls = _stateful_calls()      # 2 uploads, 1 download
+        ok = {"carried_pairs": [[0, 0]]}
+        assert verify_metadata_against_calls("fp", ok, calls) == []
+        stale = {"carried_pairs": [[7, 0]]}
+        diags = verify_metadata_against_calls("fp", stale, calls)
+        assert {d.code for d in diags} == {"RRTO306"}
+
+
+# ---------------------------------------------------------------------------
+# pass 4: protocol model checker
+# ---------------------------------------------------------------------------
+
+class TestProtocolChecker:
+    def test_shipped_engine_config_is_sound(self):
+        assert check_engine_protocol() == []
+
+    def test_zero_width_window_reexecutes(self):
+        diags = check_protocol(ProtocolSpec(steps=2, dedup_window=0))
+        assert "RRTO403" in {d.code for d in diags}
+
+    def test_unsequenced_bypass_reexecutes(self):
+        diags = check_protocol(
+            ProtocolSpec(steps=1, seq_of_step=(None,))
+        )
+        assert {d.code for d in diags} == {"RRTO401"}
+
+    def test_preseeded_junk_reply_detected(self):
+        diags = check_protocol(
+            ProtocolSpec(steps=1, preseed=((0, ("junk", -1)),))
+        )
+        assert "RRTO402" in {d.code for d in diags}
+
+    def test_static_sequencing_screen(self):
+        assert check_sequencing([0, 1, 2]) == []
+        assert {d.code for d in check_sequencing([0, 1, 1])} == {"RRTO404"}
+        assert {d.code for d in check_sequencing([0, None])} == {"RRTO401"}
+        assert {d.code for d in check_sequencing([1, 0])} == {"RRTO403"}
+
+
+# ---------------------------------------------------------------------------
+# property: every real locked IOS + every planner output verifies clean
+# ---------------------------------------------------------------------------
+
+def _lock(model, min_repeats=2, steps=6, thread_state=None, **kw):
+    sess = OffloadSession(model, "rrto", min_repeats=min_repeats, **kw)
+    sess.load()
+    args = list(model.example_inputs)
+    res = None
+    for _ in range(steps):
+        res = sess.infer(*args)
+        if thread_state is not None:
+            out_i, in_i = thread_state
+            args[in_i] = res.outputs[out_i]
+    assert res is not None and res.mode == "replaying"
+    return sess
+
+
+class TestRealModelsVerifyClean:
+    @pytest.mark.parametrize("name", sorted(REGISTRY_CASES))
+    def test_registry_ios_and_plans_clean(self, name):
+        model = ZOO[name](**REGISTRY_CASES[name])
+        thread = (1, 1) if name == "recurrent_sensor_decoder" else None
+        sess = _lock(model, thread_state=thread)
+        calls = sess.client._ios_calls
+        pairs = sess.server.context(sess.client_id).replay.program \
+            .carried_pairs
+        graph = SegmentGraph(calls, carried_pairs=pairs)
+        plans = [SplitPlan.full_server(graph.n_ops)]
+        if not graph.is_stateful:
+            plans.append(SplitPlan.full_device(graph.n_ops))
+        for bw in (1 * MBPS, 128 * MBPS):
+            best = plan_partition(
+                graph, JETSON_XAVIER_NX, GTX_2080TI, bw,
+                config=PartitionConfig(objective="latency"),
+                verify=True,          # planner's own fail-fast hook
+            )
+            plans.append(best.plan)
+        report = verify_ios(name, calls, pairs, plans=plans, min_repeats=2)
+        assert report.errors == [], report.codes()
+        assert report.census["n_kernels"] == graph.n_ops
+
+    def test_census_totals(self):
+        calls = _chain_calls()
+        census = op_census(_records(calls))
+        assert census["n_kernels"] == 2
+        assert census["n_h2d"] == 1 and census["n_d2h"] == 1
+        assert census["h2d_bytes"] == 16 and census["d2h_bytes"] == 16
+        assert dict(census["op_histogram"])["add"] == 1
+
+
+# ---------------------------------------------------------------------------
+# engine hooks: fail-fast when enabled, byte-identical when off (default)
+# ---------------------------------------------------------------------------
+
+def make_mlp(seed=0, d=8):
+    rng = np.random.default_rng(seed)
+    params = {"w": rng.normal(0, 0.1, (d, d)).astype(np.float32)}
+
+    def apply(p, x):
+        return jnp.tanh(x @ p["w"]).sum(axis=1)
+
+    x = rng.normal(0, 1, (2, d)).astype(np.float32)
+    return OffloadableModel(f"mlp{seed}", apply, params, (x,)), x
+
+
+class TestEngineHooks:
+    def test_verified_session_locks_and_replays(self):
+        model, _ = make_mlp()
+        sess = _lock(model, verify=True)
+        assert sess.client.ios is not None
+
+    def test_default_is_unverified_and_byte_identical(self):
+        model, _ = make_mlp(1)
+        plain = _lock(model)
+        assert plain.client.verify is False
+        assert plain.server.verify is False
+        model2, _ = make_mlp(1)
+        checked = _lock(model2, verify=True)
+        a = plain.infer(*model.example_inputs)
+        b = checked.infer(*model2.example_inputs)
+        assert np.asarray(a.outputs[0]).tobytes() == np.asarray(b.outputs[0]).tobytes()
+
+    def test_install_plan_verifies_against_ios(self):
+        model, _ = make_mlp(2)
+        sess = _lock(model, verify=True)
+        graph = SegmentGraph(sess.client._ios_calls)
+        n = graph.n_ops
+        # a sound segmented plan passes the hook and compiles
+        sess.client._install_plan(SplitPlan.parse_signature(f"D0:1|S1:{n}"))
+        # a plan for a different op stream is rejected before compilation
+        # (full-server plans bypass the hook: they revert to classic replay)
+        with pytest.raises(ReplaySoundnessError) as ei:
+            sess.client._install_plan(
+                SplitPlan.parse_signature(f"D0:1|S1:{n + 5}")
+            )
+        assert any(d.code == "RRTO301" for d in ei.value.diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: ReplayCache.load validates persisted entries
+# ---------------------------------------------------------------------------
+
+class TestCacheLoadValidation:
+    def test_load_evicts_unsound_entries(self, tmp_path):
+        from repro.serving.replay_cache import PERSIST_VERSION, ReplayCache
+
+        path = tmp_path / "cache.json"
+        payload = {
+            "version": PERSIST_VERSION,
+            "fingerprints": {
+                "fpA": {"n_kernels": 3},
+                "fpA|S0:3": {"plan": "S0:3"},
+                "fpB#vmap4": {},                       # RRTO305
+                "fpC": "not-a-dict",                   # RRTO306
+                "fpD": {"carried_pairs": [[0, 0], [0, 1]]},  # RRTO306
+            },
+        }
+        path.write_text(json.dumps(payload))
+        cache = ReplayCache()
+        with pytest.warns(UserWarning) as rec:
+            assert cache.load(str(path)) == 2
+        assert len(rec) == 3
+        assert set(cache.persisted_fingerprints) == {"fpA", "fpA|S0:3"}
+
+    def test_clean_roundtrip_warns_nothing(self, tmp_path):
+        from repro.serving.replay_cache import ReplayCache
+
+        src, dst = ReplayCache(), ReplayCache()
+        src._known["fpA"] = {"n_kernels": 3, "carried_pairs": [[0, 0]]}
+        path = tmp_path / "cache.json"
+        src.save(str(path))
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert dst.load(str(path)) == 1
+        assert dst.known_metadata("fpA")["carried_pairs"] == [[0, 0]]
+
+    def test_forget_known(self):
+        from repro.serving.replay_cache import ReplayCache
+
+        cache = ReplayCache()
+        cache._known["fp"] = {}
+        cache.forget_known("fp")
+        assert cache.persisted_fingerprints == []
+        cache.forget_known("absent")    # idempotent
+
+
+class TestStaleMetadataGuard:
+    def test_server_evicts_contradictory_metadata(self):
+        from repro.core.engine import OffloadServer
+        from repro.serving.replay_cache import ReplayCache
+
+        cache = ReplayCache()
+        cache._known["fp"] = {"carried_pairs": [[7, 0]]}
+        server = OffloadServer(GTX_2080TI, replay_cache=cache)
+        calls = _stateful_calls()      # only 2 uploads: pair (7, 0) is stale
+        with pytest.warns(UserWarning, match="stale replay-cache metadata"):
+            assert server._stale_metadata("fp", {"carried_pairs": [[7, 0]]},
+                                          calls)
+        assert cache.persisted_fingerprints == []
+
+    def test_sound_metadata_kept(self):
+        from repro.core.engine import OffloadServer
+        from repro.serving.replay_cache import ReplayCache
+
+        cache = ReplayCache()
+        cache._known["fp"] = {"carried_pairs": [[0, 0]]}
+        server = OffloadServer(GTX_2080TI, replay_cache=cache)
+        assert not server._stale_metadata(
+            "fp", {"carried_pairs": [[0, 0]]}, _stateful_calls()
+        )
+        assert cache.persisted_fingerprints == ["fp"]
+
+
+# ---------------------------------------------------------------------------
+# CLI sweep (in-process)
+# ---------------------------------------------------------------------------
+
+class TestCli:
+    def test_single_model_sweep(self, tmp_path, capsys):
+        from repro.analysis.__main__ import main
+
+        out = tmp_path / "report.json"
+        rc = main(
+            ["--models", "sensor_encoder", "--json", str(out),
+             "--min-repeats", "2", "--no-hlo-census"]
+        )
+        assert rc == 0
+        blob = json.loads(out.read_text())
+        assert blob["ok"] and blob["n_errors"] == 0
+        subjects = {r["subject"] for r in blob["reports"]}
+        assert subjects == {"sensor_encoder", "at-most-once protocol"}
+        sweep = next(
+            r for r in blob["reports"] if r["subject"] == "sensor_encoder"
+        )
+        assert sweep["census"]["n_plans_verified"] >= 2
+        assert sweep["census"]["n_kernels"] > 0
+        capsys.readouterr()     # swallow the human-readable summary
+
+    def test_unknown_model_rejected(self):
+        from repro.analysis.__main__ import main
+
+        with pytest.raises(SystemExit):
+            main(["--models", "no_such_model"])

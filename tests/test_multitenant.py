@@ -124,7 +124,7 @@ class TestCacheAdoption:
         model, x = make_mlp()
         ref = np.asarray(jax.jit(model.apply)(model.params, x)[0])
         edge = RRTOEdgeServer(execute=True)
-        for i in range(3):
+        for _ in range(3):
             edge.connect(model)
         all_ids = list(edge.sessions)
         for _ in range(4):

@@ -61,7 +61,7 @@ def sessions():
 class TestEquivalence:
     def test_outputs_identical_across_systems(self, sessions):
         ref = np.asarray(sessions["device_only"][1][-1].outputs[0])
-        for system, (sess, results) in sessions.items():
+        for system, (_sess, results) in sessions.items():
             np.testing.assert_allclose(
                 np.asarray(results[-1].outputs[0]), ref, rtol=1e-5, atol=1e-5,
                 err_msg=f"{system} diverged",
